@@ -1,0 +1,58 @@
+"""Paper Tab 7: gradient-accumulation ablation (b4a2 / b2a4 / b1a8).
+
+Same total batch (8), different micro-batch splits: final loss / PPL must be
+(numerically) unchanged and gradients must match the full-batch gradient.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro import configs
+from repro.config import TrainConfig
+from repro.core.accumulate import value_and_grad_accumulated
+from repro.data.corpus import synthetic_wikitext
+from repro.data.dataset import LMDataset
+from repro.data.tokenizer import ByteTokenizer
+from repro.launch.train import train_loop
+from repro.models import registry
+from repro.param import init_params
+
+
+def main(fast: bool = False):
+    cfg = configs.get_smoke("gemma3_270m")
+    tok = ByteTokenizer()
+    ds = LMDataset(synthetic_wikitext(400), tok, 64)
+    steps = 6 if fast else 16
+
+    # gradient equivalence vs the full batch
+    params = init_params(jax.random.PRNGKey(0), registry.param_specs(cfg))
+    tc0 = TrainConfig(global_batch=8, seq_len=64, compute_dtype="float32",
+                      attn_chunk=16)
+    batch = {k: jax.numpy.asarray(v) for k, v in ds.example(0).items()}
+    batch = {k: jax.numpy.stack([v] * 8) for k, v in batch.items()}
+    loss_fn = lambda p, b: registry.loss_fn(cfg)(p, b, cfg, tc0)
+    _, _, g_full = value_and_grad_accumulated(loss_fn, params, batch, 1)
+
+    for tag, micro in (("b8a1", 1), ("b4a2", 2), ("b2a4", 4), ("b1a8", 8)):
+        tcfg = TrainConfig(global_batch=8, seq_len=64,
+                           compute_dtype="float32", attn_chunk=16,
+                           microbatches=micro, total_steps=steps,
+                           warmup_steps=1, learning_rate=3e-3)
+        _, _, g = value_and_grad_accumulated(loss_fn, params, batch, micro)
+        gdiff = max(float(jax.numpy.abs(a - b).max()) for a, b in
+                    zip(jax.tree.leaves(g_full), jax.tree.leaves(g)))
+        state, obs = train_loop(cfg, tcfg, out_dir=None, dataset=ds,
+                                print_fn=None)
+        us = sum(r["step_time_s"] for r in obs.rows) / len(obs.rows) * 1e6
+        row(f"tab7_{tag}", us,
+            f"final_loss {obs.rows[-1]['loss']:.4f} "
+            f"ppl {math.exp(obs.rows[-1]['loss']):.2f} "
+            f"max_grad_diff_vs_full {gdiff:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Paper Fig 9 + Tab 4/5: Full-FT and LoRA correctness trajectories.
+
+Fig 9: Full-FT loss/PPL decreasing on the LM task (GPT2-family).
+Tab 4: LoRA vs Full-FT final loss / accuracy / PPL + system metrics
+       (time, energy model, peak RSS) on LM + QA tasks.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from benchmarks.common import row
+from repro import configs
+from repro.config import TrainConfig
+from repro.data.corpus import chqa_pairs, synthetic_wikitext
+from repro.data.dataset import LMDataset, QADataset
+from repro.data.tokenizer import ByteTokenizer
+from repro.launch.train import train_loop
+
+
+def _tcfg(steps, **kw):
+    base = dict(global_batch=8, seq_len=64, compute_dtype="float32",
+                attention_impl="streaming", attn_chunk=32,
+                total_steps=steps, warmup_steps=2, learning_rate=3e-3)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def _dataset(task, tok, seq):
+    if task == "wikitext":
+        return LMDataset(synthetic_wikitext(600), tok, seq)
+    return QADataset(chqa_pairs(0, 128, seed=1), tok, seq)
+
+
+def bench_fullft_fig9(steps: int = 20):
+    """Fig 9 analogue: Full-FT on gpt2-smoke @ LM task."""
+    cfg = configs.get_smoke("gpt2_124m")
+    tok = ByteTokenizer()
+    ds = _dataset("wikitext", tok, 64)
+    tcfg = _tcfg(steps)
+    state, obs = train_loop(cfg, tcfg, out_dir=None, dataset=ds,
+                            print_fn=None)
+    l0, l1 = obs.rows[0]["loss"], obs.rows[-1]["loss"]
+    us = sum(r["step_time_s"] for r in obs.rows) / len(obs.rows) * 1e6
+    row("fig9_fullft_gpt2_lm", us,
+        f"loss {l0:.3f}->{l1:.3f} ppl {math.exp(l0):.1f}->{math.exp(l1):.1f}"
+        f" decreasing={l1 < l0}")
+
+
+def bench_lora_tab4(steps: int = 20):
+    """Tab 4 analogue: LoRA vs Full-FT across models x tasks."""
+    tok = ByteTokenizer()
+    for arch in ("gpt2_124m", "qwen25_05b", "gemma3_270m"):
+        cfg = configs.get_smoke(arch)
+        for task in ("wikitext", "chqa"):
+            ds = _dataset(task, tok, 64)
+            for mode, rank in (("fullft", 0), ("lora", 8)):
+                tcfg = _tcfg(steps, lora_rank=rank,
+                             learning_rate=1e-2 if rank else 3e-3)
+                state, obs = train_loop(cfg, tcfg, out_dir=None, dataset=ds,
+                                        print_fn=None)
+                l0, l1 = obs.rows[0]["loss"], obs.rows[-1]["loss"]
+                acc = obs.rows[-1]["accuracy"]
+                us = sum(r["step_time_s"] for r in obs.rows) / len(obs.rows) * 1e6
+                row(f"tab4_{mode}_{arch}_{task}", us,
+                    f"loss {l0:.3f}->{l1:.3f} acc {acc:.3f} "
+                    f"peakRSS {obs.peak_rss_mb:.0f}MB "
+                    f"energy {obs.energy_kj:.3f}kJ")
+
+
+def main(fast: bool = False):
+    steps = 8 if fast else 20
+    bench_fullft_fig9(steps)
+    bench_lora_tab4(steps)
+
+
+if __name__ == "__main__":
+    main()

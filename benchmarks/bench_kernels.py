@@ -1,0 +1,49 @@
+"""Kernel-level benchmark: flash-attention / SSD Pallas kernels (interpret
+mode on CPU — correctness + op-count shape; wall-clock MFU lives on TPU) vs
+their jnp counterparts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.core.attention import attention
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd.ops import ssd_chunked_pallas
+from repro.kernels.ssd.ref import ssd_ref
+
+
+def main(fast: bool = False):
+    b, s, h, d = 2, 64, 4, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d))
+    out_flash = flash_attention(q, k, v, causal=True, block_q=16, block_k=16,
+                                interpret=True)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=True)
+    err = float(jnp.abs(out_flash.transpose(0, 2, 1, 3) - ref).max())
+    us = time_call(lambda: flash_attention(q, k, v, causal=True, block_q=16,
+                                           block_k=16, interpret=True),
+                   iters=1)
+    row("kernel_flash_fwd_interpret", us, f"max_err_vs_ref {err:.2e}")
+
+    nh, hd, ds, chunk = 4, 16, 32, 16
+    xh = jax.random.normal(jax.random.PRNGKey(0), (b, s, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (b, s, nh)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (nh,)) * 0.5)
+    B_ = jax.random.normal(jax.random.PRNGKey(3), (b, s, ds))
+    C_ = jax.random.normal(jax.random.PRNGKey(4), (b, s, ds))
+    y_pal, _ = ssd_chunked_pallas(xh, dt, A, B_, C_, chunk=chunk,
+                                  interpret=True)
+    y_ref, _ = ssd_ref(xh, dt, A, B_, C_)
+    err = float(jnp.abs(y_pal - y_ref).max())
+    us = time_call(lambda: ssd_chunked_pallas(xh, dt, A, B_, C_, chunk=chunk,
+                                              interpret=True)[0], iters=1)
+    row("kernel_ssd_interpret", us, f"max_err_vs_seq_ref {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

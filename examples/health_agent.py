@@ -1,0 +1,82 @@
+"""Private campus health agent (paper §5 + §8 case study).
+
+End-to-end on-device pipeline:
+  1. per-user wearable statistics stream (synthetic; never leaves this process)
+  2. template-based local QA construction (CHQA, 5 categories)
+  3. LoRA fine-tune of a Qwen2.5-family model on the user's pairs
+  4. before/after evaluation on held-out pairs (answer-token loss/acc as the
+     stand-in for the paper's LLM-judge score)
+  5. adapter export (safetensors) for subsequent agent inference
+
+    PYTHONPATH=src python examples/health_agent.py --users 2 --steps 30
+"""
+import argparse
+import os
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import save_safetensors
+from repro.config import TrainConfig
+from repro.core.step import make_eval_step
+from repro.data.corpus import CHQA_CATEGORIES, chqa_pairs
+from repro.data.dataset import QADataset, packed_batches
+from repro.data.tokenizer import ByteTokenizer
+from repro.launch.train import train_loop
+from repro.param import flatten_names
+
+
+def eval_loss(cfg, tcfg, state, dataset):
+    ev = jax.jit(make_eval_step(cfg, tcfg))
+    losses, accs = [], []
+    for batch in packed_batches(dataset, tcfg.global_batch, epochs=1):
+        batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        m = ev(state, batch)
+        losses.append(float(m["loss"]))
+        accs.append(float(m["accuracy"]))
+    return float(np.mean(losses)), float(np.mean(accs))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--users", type=int, default=2)
+    ap.add_argument("--pairs", type=int, default=96)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--out", default="runs/health_agent")
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke("qwen25_05b")  # paper: Qwen2.5-0.5B base
+    tok = ByteTokenizer()
+    tcfg = TrainConfig(global_batch=8, seq_len=96, lora_rank=8,
+                       lora_alpha=16.0, learning_rate=1e-2,
+                       total_steps=args.steps, warmup_steps=2,
+                       compute_dtype="float32", attention_impl="streaming")
+
+    for user in range(args.users):
+        # local QA construction — raw records stay inside chqa_pairs()
+        pairs = chqa_pairs(user, args.pairs)
+        train_ds = QADataset(pairs[: int(len(pairs) * 0.8)], tok, tcfg.seq_len)
+        test_ds = QADataset(pairs[int(len(pairs) * 0.8):], tok, tcfg.seq_len)
+
+        from repro.core.step import init_state
+        base_state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+        l_before, a_before = eval_loss(cfg, tcfg, base_state, test_ds)
+
+        state, obs = train_loop(cfg, tcfg, out_dir=None, dataset=train_ds,
+                                print_fn=None)
+        l_after, a_after = eval_loss(cfg, tcfg, state, test_ds)
+
+        # export the personalized adapter (stays on the phone)
+        os.makedirs(args.out, exist_ok=True)
+        adapter = {n: np.asarray(v) for n, v in flatten_names(state["lora"])}
+        path = os.path.join(args.out, f"user{user}_adapter.safetensors")
+        save_safetensors(path, adapter, metadata={"user": str(user),
+                                                  "rank": "8"})
+        print(f"user {user}: held-out answer loss {l_before:.3f} -> "
+              f"{l_after:.3f} | acc {a_before:.3f} -> {a_after:.3f} | "
+              f"adapter -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,377 @@
+"""Analytic roofline model: FLOPs / HBM bytes / collective wire bytes.
+
+WHY ANALYTIC: XLA's HLOCostAnalysis counts every ``while`` body ONCE, so any
+program built on ``lax.scan`` (layers, grad-accumulation micro-batches, the
+streaming-attention chunk loop) under-reports FLOPs/bytes by the product of
+trip counts (verified empirically: an 8-step scan reports exactly 1/8 the
+unrolled flops).  The dry-run therefore records BOTH the raw
+``compiled.cost_analysis()`` numbers (as a witness) and this analytic model
+(as the roofline source).  The model is exact for matmul FLOPs (derived from
+the same ParamSpec tree that builds the weights) and a documented
+approximation for HBM/wire traffic; every TrainConfig knob the perf loop
+tunes (microbatches, remat, preset, dtypes, chunk) enters explicitly.
+
+Conventions:
+  - FLOPs are GLOBAL (whole step across all chips).
+  - HBM bytes are PER-DEVICE.
+  - Collective bytes are PER-DEVICE wire traffic (the roofline divides global
+    = per_dev x chips by chips x link_bw, so the chips cancel).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.config import ModelConfig, ShapeSpec, TrainConfig
+from repro.param import is_spec
+import jax
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _dtype_bytes(name: str) -> int:
+    return {"float32": 4, "bfloat16": 2, "float16": 2,
+            "float8_e4m3fn": 1, "int8": 1}[name]
+
+
+def _mesh_sizes(multi_pod: bool) -> Dict[str, int]:
+    return ({"pod": 2, "data": 16, "model": 16} if multi_pod
+            else {"pod": 1, "data": 16, "model": 16})
+
+
+def parallel_sizes(preset: str, multi_pod: bool):
+    """(dp_total, tp, fsdp_shards) for a rule preset on the production mesh.
+
+    fsdp_dp uses the model axis as extra data parallelism: weights shard over
+    ``data`` only, batch over pod x data x model, no tensor parallelism.
+    """
+    m = _mesh_sizes(multi_pod)
+    if preset == "fsdp_dp":
+        return m["pod"] * m["data"] * m["model"], 1, m["data"]
+    if preset == "dp":
+        return m["pod"] * m["data"], 1, 1
+    if preset == "fsdp":
+        return m["pod"] * m["data"], 1, m["data"]
+    if preset == "tp":
+        return m["pod"] * m["data"], m["model"], 1
+    # fsdp_tp / fsdp_tp_long
+    return m["pod"] * m["data"], m["model"], m["data"]
+
+
+def ar_per_layer(cfg: ModelConfig) -> float:
+    """TP all-reduces of the residual activation per layer: one per parallel
+    projection block whose output dim is model-sharded."""
+    return {"dense": 2.0, "vlm": 2.0,
+            "moe": 1.0,      # attn only; the expert path pays a2a instead
+            "ssm": 1.0,      # mamba out-projection
+            "hybrid": 3.0,   # attn + mamba (parallel heads) + mlp
+            "encdec": 3.0,   # decoder: self + cross + mlp (encoder uses 2)
+            }[cfg.family]
+
+
+def _named_specs(cfg: ModelConfig):
+    from repro.models import registry
+    from repro.param import flatten_names
+    return flatten_names(registry.param_specs(cfg), is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# parameter-derived matmul FLOPs per token (forward)
+# ---------------------------------------------------------------------------
+def matmul_flops_per_token(cfg: ModelConfig) -> Dict[str, float]:
+    """2 * prod(weight shape) per token for every >=2-D non-embedding weight.
+    Stacked layer dims multiply in naturally.  MoE expert weights scale by
+    top_k / n_experts (only active experts touch a token).  Whisper encoder
+    weights are tallied separately (different token count)."""
+    out = {"dec": 0.0, "enc": 0.0}
+    for name, s in _named_specs(cfg):
+        if len(s.shape) < 2 or s.init == "embed":
+            continue  # biases/norms/tables
+        f = 2.0 * float(np.prod(s.shape))
+        if "experts" in (s.axes or ()):
+            f *= cfg.top_k / max(cfg.n_experts, 1)
+        bucket = "enc" if name.startswith("enc_blocks") or "wpe_enc" in name \
+            else "dec"
+        out[bucket] += f
+    if cfg.tie_embeddings:
+        out["dec"] += 2.0 * cfg.padded_vocab * cfg.d_model  # tied unembed
+    return out
+
+
+def attention_flops(cfg: ModelConfig, batch: int, sq: int, skv: int,
+                    causal: bool = True) -> float:
+    """scores + PV: 4 * B * H * sq * skv_eff * head_dim, per layer pattern."""
+    if cfg.family == "ssm":
+        return 0.0
+    from repro.models.transformer import layer_windows
+    wins = np.asarray(jax.device_get(layer_windows(cfg)))
+    total = 0.0
+    for w in wins:
+        if causal and sq == skv:
+            eff = (skv + 1) / 2 if w == 0 else min(w, (skv + 1) / 2)
+        else:
+            eff = skv if w == 0 else min(w, skv)
+        total += 4.0 * batch * cfg.n_heads * sq * eff * cfg.head_dim
+    return total
+
+
+def ssd_flops(cfg: ModelConfig, batch: int, s: int) -> float:
+    if cfg.family not in ("ssm", "hybrid"):
+        return 0.0
+    from repro.models.mamba2 import d_inner, n_ssm_heads
+    nh, hd, ds = n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    q = min(cfg.ssm_chunk, s)
+    n = -(-s // q)
+    per_layer = (
+        2.0 * batch * n * q * q * ds        # scores C B^T
+        + 1.0 * batch * n * nh * q * q      # decay mask multiply
+        + 2.0 * batch * n * nh * q * q * hd  # y_intra = M @ x
+        + 2.0 * batch * n * nh * q * hd * ds  # chunk states
+        + 2.0 * batch * n * nh * q * hd * ds  # y_inter
+    )
+    return per_layer * cfg.n_layers
+
+
+def whisper_tokens(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[float, float]:
+    from repro.models.whisper import enc_len
+    return (shape.global_batch * shape.seq_len,
+            shape.global_batch * enc_len(cfg, shape.seq_len))
+
+
+def step_flops(cfg: ModelConfig, tcfg: TrainConfig, shape: ShapeSpec
+               ) -> Dict[str, float]:
+    """Global FLOPs for one step of the cell's kind."""
+    per_tok = matmul_flops_per_token(cfg)
+    if shape.kind == "decode":
+        dec_tokens = shape.global_batch * 1.0
+        enc_tokens = 0.0  # encoder precomputed into the cross cache
+        skv = shape.seq_len
+        attn = attention_flops(cfg, shape.global_batch, 1, skv, causal=True)
+        if cfg.family == "encdec":
+            from repro.models.whisper import enc_len
+            attn += attention_flops(cfg, shape.global_batch, 1,
+                                    enc_len(cfg, shape.seq_len), causal=False)
+        ssd = ssd_flops(cfg, shape.global_batch, 1) if cfg.family in (
+            "ssm", "hybrid") else 0.0
+        fwd = per_tok["dec"] * dec_tokens + attn + ssd
+        return {"fwd": fwd, "total": fwd, "attn": attn + ssd,
+                "matmul": per_tok["dec"] * dec_tokens}
+
+    dec_tokens = shape.global_batch * float(shape.seq_len)
+    enc_tokens = 0.0
+    s_eff = shape.seq_len + cfg.n_meta_tokens
+    attn = attention_flops(cfg, shape.global_batch, s_eff, s_eff, causal=True)
+    if cfg.family == "encdec":
+        dec_tokens, enc_tokens = whisper_tokens(cfg, shape)
+        enc_s = int(enc_tokens // shape.global_batch)
+        # encoder self-attn (bidirectional) + decoder cross-attn
+        attn = attention_flops(cfg, shape.global_batch, shape.seq_len,
+                               shape.seq_len, causal=True)
+        attn += 4.0 * shape.global_batch * cfg.n_heads * enc_s * enc_s * \
+            cfg.head_dim * cfg.n_enc_layers / max(cfg.n_layers, 1) * \
+            max(cfg.n_layers, 1) / max(cfg.n_enc_layers, 1)  # enc self-attn
+        attn += 4.0 * shape.global_batch * cfg.n_heads * shape.seq_len * \
+            enc_s * cfg.head_dim * cfg.n_layers  # cross
+    ssd = ssd_flops(cfg, shape.global_batch, s_eff)
+    fwd = per_tok["dec"] * dec_tokens + per_tok["enc"] * enc_tokens + attn + ssd
+
+    if shape.kind == "prefill":
+        return {"fwd": fwd, "total": fwd, "attn": attn + ssd,
+                "matmul": fwd - attn - ssd}
+    # train: fwd + 2x bwd + remat recompute
+    remat_extra = {"none": 0.0, "dots": 0.5, "full": 1.0,
+                   "offload": 1.0}[tcfg.remat_policy or "none"]
+    total = fwd * (3.0 + remat_extra)
+    return {"fwd": fwd, "total": total, "attn": attn + ssd,
+            "matmul": fwd - attn - ssd,
+            "remat_factor": 3.0 + remat_extra}
+
+
+# ---------------------------------------------------------------------------
+# per-device HBM bytes (approximate, documented terms)
+# ---------------------------------------------------------------------------
+def param_bytes_total(cfg: ModelConfig, dtype_bytes: int) -> float:
+    return sum(float(np.prod(s.shape)) * dtype_bytes
+               for _, s in _named_specs(cfg))
+
+
+def step_hbm_bytes(cfg: ModelConfig, tcfg: TrainConfig, shape: ShapeSpec,
+                   multi_pod: bool) -> Dict[str, float]:
+    m = _mesh_sizes(multi_pod)
+    dp, tp, _ = parallel_sizes(tcfg.shard_preset, multi_pod)
+    n_dev = m["pod"] * m["data"] * m["model"]
+    cd = _dtype_bytes(tcfg.compute_dtype)
+    pd = _dtype_bytes(tcfg.param_dtype)
+
+    w_total = param_bytes_total(cfg, 1.0)          # element count
+    w_tp = w_total / tp                             # per-device after FSDP gather
+    b_local = max(shape.global_batch // dp, 1)
+    s = shape.seq_len
+    d = cfg.d_model
+
+    if shape.kind == "decode":
+        # weights read once (bf16), cache read+write once
+        cache_elems = _cache_elems(cfg, shape)
+        cache_dev = cache_elems / n_dev * 2          # bf16
+        weights = w_tp * pd / (1 if dp == 1 else 1)  # gathered tile read
+        hbm = weights + 2.0 * cache_dev
+        return {"weights": weights, "cache": 2.0 * cache_dev, "acts": 0.0,
+                "opt": 0.0, "total": hbm}
+
+    micro = max(tcfg.microbatches, 1) if shape.kind == "train" else 1
+    b_micro = max(b_local // micro, 1)
+    # weights: read per microbatch, fwd + bwd (re-gathered under remat)
+    passes = 2.0 if shape.kind == "train" else 1.0
+    weights = micro * passes * w_tp * cd
+    # activations: layer checkpoints written+read (remat full saves carry only)
+    n_l = cfg.n_layers + cfg.n_enc_layers
+    act_elem = b_micro * s * d * n_l
+    save_factor = {"none": 6.0, "dots": 3.0, "full": 2.0, "offload": 2.0}[
+        tcfg.remat_policy or "none"]
+    acts = micro * act_elem * cd * save_factor
+    opt = 0.0
+    if shape.kind == "train":
+        w_state_dev = w_total / n_dev
+        # read m, v, master, grads; write m, v, master  (fp32)
+        opt = 7.0 * w_state_dev * 4
+    total = weights + acts + opt
+    return {"weights": weights, "acts": acts, "opt": opt, "cache": 0.0,
+            "total": total}
+
+
+def _cache_elems(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    from repro.launch import dryrun as _d  # cache_len policy lives there
+    max_len = shape.seq_len + 512
+    elems = 0.0
+    if cfg.family != "ssm":
+        elems += 2.0 * cfg.n_layers * shape.global_batch * max_len * \
+            cfg.n_kv_heads * cfg.head_dim
+    if cfg.family in ("ssm", "hybrid"):
+        from repro.models.mamba2 import d_inner, n_ssm_heads
+        elems += cfg.n_layers * shape.global_batch * (
+            n_ssm_heads(cfg) * cfg.ssm_head_dim * cfg.ssm_state * 2  # fp32
+            + (cfg.ssm_conv_width - 1) * (d_inner(cfg) + 2 * cfg.ssm_state))
+    if cfg.family == "encdec":
+        from repro.models.whisper import enc_len
+        elems += 2.0 * cfg.n_layers * shape.global_batch * \
+            enc_len(cfg, shape.seq_len) * cfg.n_kv_heads * cfg.head_dim
+    return elems
+
+
+# ---------------------------------------------------------------------------
+# per-device collective wire bytes
+# ---------------------------------------------------------------------------
+def step_wire_bytes(cfg: ModelConfig, tcfg: TrainConfig, shape: ShapeSpec,
+                    multi_pod: bool) -> Dict[str, float]:
+    """Ring-collective wire model, per device:
+       all-gather of full tensor T over g:   receives T (g-1)/g  ~ T
+       reduce-scatter of T over g:           sends    T (g-1)/g  ~ T
+       all-reduce of T over g:               2 T (g-1)/g         ~ 2 T
+    FSDP(+TP) training traffic:
+       fwd+bwd weight all-gathers over the fsdp axis: micro * 2 * (W/tp)
+       grad reduce-scatter over fsdp:        (W/tp)
+       TP activation all-reduces:            ar_per_layer * tokens_loc * d * 2
+       DP grad all-reduce over axes where weights replicate (pod; model
+       under fsdp_dp):                       2 * W_local
+       MoE all-to-all: dispatch (moe_dispatch_dtype) + combine (compute) of
+       token activations x top_k over the expert (model) axis.
+    """
+    m = _mesh_sizes(multi_pod)
+    data, pod, model = m["data"], m["pod"], m["model"]
+    dp, tp, fsdp_shards = parallel_sizes(tcfg.shard_preset, multi_pod)
+    cd = _dtype_bytes(tcfg.compute_dtype)
+    gd = _dtype_bytes(tcfg.grad_reduce_dtype or tcfg.compute_dtype)
+    dd = _dtype_bytes(tcfg.moe_dispatch_dtype or tcfg.compute_dtype)
+    w_elems = param_bytes_total(cfg, 1.0)
+    w_tp = w_elems / tp
+    s = shape.seq_len + cfg.n_meta_tokens
+    d = cfg.d_model
+    b_local = max(shape.global_batch // dp, 1)
+
+    fsdp_on = fsdp_shards > 1
+    tp_on = tp > 1
+    apl = ar_per_layer(cfg)
+    n_layers_eff = cfg.n_layers + cfg.n_enc_layers * (2.0 / 3.0 if
+                                                      cfg.family == "encdec"
+                                                      else 1.0)
+
+    if shape.kind == "decode":
+        ag = w_tp * _dtype_bytes(tcfg.param_dtype) * (fsdp_shards - 1) / \
+            fsdp_shards if fsdp_on else 0.0
+        ar = 2.0 * apl * n_layers_eff * b_local * 1 * d * cd * (tp - 1) / tp \
+            if tp_on else 0.0
+        total = ag + ar
+        return {"ag_weights": ag, "ar_tp": ar, "rs_grads": 0.0,
+                "ar_pod": 0.0, "a2a_moe": 0.0, "total": total}
+
+    micro = max(tcfg.microbatches, 1) if shape.kind == "train" else 1
+    b_micro = max(b_local // micro, 1)
+    gathers_per_step = (2.0 if shape.kind == "train" else 1.0) * micro
+    ag = gathers_per_step * w_tp * cd * (fsdp_shards - 1) / fsdp_shards \
+        if fsdp_on else 0.0
+    ar = 2.0 * apl * n_layers_eff * micro * b_micro * s * d * cd * \
+        (tp - 1) / tp if tp_on else 0.0
+    rs = w_tp * gd * (fsdp_shards - 1) / fsdp_shards \
+        if (shape.kind == "train" and fsdp_on) else 0.0
+    if shape.kind == "train" and not fsdp_on and dp > 1:
+        rs = 2.0 * w_tp * gd  # pure DP: grad all-reduce instead
+    # grad all-reduce over replicated-weight axes: pod always; model if the
+    # preset turned the model axis into data parallelism
+    repl_ways = pod * (model if tcfg.shard_preset == "fsdp_dp" else 1)
+    ar_pod = 2.0 * (w_elems / (tp * fsdp_shards)) * gd * \
+        (repl_ways - 1) / repl_ways if (shape.kind == "train" and
+                                        repl_ways > 1) else 0.0
+    a2a = 0.0
+    if cfg.n_experts > 0 and tp_on:
+        tokens_local = b_micro * s
+        a2a = micro * cfg.n_layers * tokens_local * d * (dd + cd) * \
+            cfg.top_k * (tp - 1) / tp
+        if shape.kind == "train":
+            a2a *= 2.0  # backward mirrors dispatch/combine
+    total = ag + ar + rs + ar_pod + a2a
+    return {"ag_weights": ag, "ar_tp": ar, "rs_grads": rs, "ar_pod": ar_pod,
+            "a2a_moe": a2a, "total": total}
+
+
+# ---------------------------------------------------------------------------
+# assembled roofline
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def analytic_roofline(cfg: ModelConfig, tcfg: TrainConfig, shape: ShapeSpec,
+                      multi_pod: bool) -> Dict[str, Any]:
+    m = _mesh_sizes(multi_pod)
+    n_dev = m["pod"] * m["data"] * m["model"]
+    fl = step_flops(cfg, tcfg, shape)
+    hbm = step_hbm_bytes(cfg, tcfg, shape, multi_pod)
+    wire = step_wire_bytes(cfg, tcfg, shape, multi_pod)
+
+    t_compute = fl["total"] / n_dev / PEAK_FLOPS
+    t_memory = hbm["total"] / HBM_BW
+    t_coll = wire["total"] / LINK_BW
+    bound = max(t_compute, t_memory, t_coll)
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        mf = 6.0 * n_active * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        mf = 2.0 * n_active * shape.global_batch * shape.seq_len
+    else:
+        mf = 2.0 * n_active * shape.global_batch
+    return {
+        "flops": fl, "hbm_bytes_dev": hbm, "wire_bytes_dev": wire,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": ("compute" if bound == t_compute else
+                     "memory" if bound == t_memory else "collective"),
+        "model_flops": mf,
+        "useful_flops_ratio": mf / fl["total"] if fl["total"] else 0.0,
+        "roofline_fraction": (mf / n_dev / PEAK_FLOPS) / bound if bound else 0.0,
+        "step_time_bound_s": bound,
+    }

@@ -1,0 +1,77 @@
+"""Minimal pure-python safetensors reader/writer (paper C7: model I/O).
+
+Implements the format: 8-byte LE header length, JSON header mapping tensor
+name -> {dtype, shape, data_offsets}, then the raw little-endian buffer.
+Supports F32/F16/BF16/I32/I64 — enough for LLM weights + LoRA adapters and
+round-trips with PyTorch/HF loaders.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict
+
+import numpy as np
+
+_TO_ST = {"float32": "F32", "float16": "F16", "bfloat16": "BF16",
+          "int32": "I32", "int64": "I64", "uint16": "U16", "int8": "I8",
+          "uint8": "U8", "bool": "BOOL"}
+_FROM_ST = {v: k for k, v in _TO_ST.items()}
+
+
+def _np_view(arr: np.ndarray):
+    if arr.dtype.name == "bfloat16":
+        return arr.view(np.uint16), "BF16"
+    return arr, _TO_ST[arr.dtype.name]
+
+
+def save_safetensors(path: str, tensors: Dict[str, np.ndarray],
+                     metadata: Dict[str, str] = None):
+    header = {}
+    offset = 0
+    bufs = []
+    for name, arr in tensors.items():
+        arr = np.asarray(arr)
+        if arr.ndim:  # ascontiguousarray promotes 0-d to 1-d; keep scalars 0-d
+            arr = np.ascontiguousarray(arr)
+        view, st_dtype = _np_view(arr)
+        raw = view.tobytes()
+        header[name] = {"dtype": st_dtype, "shape": list(arr.shape),
+                        "data_offsets": [offset, offset + len(raw)]}
+        bufs.append(raw)
+        offset += len(raw)
+    if metadata:
+        header["__metadata__"] = {str(k): str(v) for k, v in metadata.items()}
+    hj = json.dumps(header).encode("utf-8")
+    pad = (-len(hj)) % 8
+    hj += b" " * pad
+    with open(path, "wb") as f:
+        f.write(struct.pack("<Q", len(hj)))
+        f.write(hj)
+        for raw in bufs:
+            f.write(raw)
+
+
+def load_safetensors(path: str):
+    """Returns (tensors dict, metadata dict).  BF16 loads as uint16 view with
+    a ml_dtypes.bfloat16 reinterpretation when available."""
+    with open(path, "rb") as f:
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen))
+        body = f.read()
+    meta = header.pop("__metadata__", {})
+    out = {}
+    for name, info in header.items():
+        a, b = info["data_offsets"]
+        dtype = _FROM_ST[info["dtype"]]
+        if info["dtype"] == "BF16":
+            try:
+                import ml_dtypes
+                np_dt = np.dtype(ml_dtypes.bfloat16)
+            except ImportError:
+                np_dt = np.uint16
+            arr = np.frombuffer(body[a:b], dtype=np.uint16).view(np_dt)
+        else:
+            arr = np.frombuffer(body[a:b], dtype=np.dtype(dtype))
+        out[name] = arr.reshape(tuple(info["shape"]))
+    return out, meta

@@ -1,0 +1,30 @@
+"""Architecture registry: the 10 harness-assigned archs + the paper's own
+models.  ``get(name)`` -> full ModelConfig; ``get_smoke(name)`` -> reduced
+same-family config for CPU smoke tests."""
+from __future__ import annotations
+
+import importlib
+
+ASSIGNED = (
+    "qwen2_vl_7b", "phi35_moe_42b", "dbrx_132b", "granite_34b",
+    "minitron_8b", "command_r_plus_104b", "qwen15_05b", "mamba2_130m",
+    "whisper_large_v3", "hymba_15b",
+)
+PAPER_MODELS = ("gpt2_124m", "gpt2_355m", "qwen25_05b", "gemma3_270m",
+                "gemma3_1b")
+ALL = ASSIGNED + PAPER_MODELS
+
+_ALIAS = {n.replace("_", "-"): n for n in ALL}
+
+
+def _module(name: str):
+    name = _ALIAS.get(name, name)
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str):
+    return _module(name).SMOKE

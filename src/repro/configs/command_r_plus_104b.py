@@ -1,0 +1,17 @@
+"""Command-R+ 104B [hf:CohereForAI/c4ai-command-r-plus] — GQA kv=8, no-bias,
+256k vocab."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b", family="dense",
+    n_layers=64, d_model=12288, n_heads=96, n_kv_heads=8, d_ff=33792,
+    vocab_size=256000,
+    mlp_variant="swiglu", norm_variant="layernorm", pos_variant="rope",
+    rope_theta=75_000_000.0, max_seq_len=32768,
+)
+
+SMOKE = ModelConfig(
+    name="command-r-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_ff=128,
+    vocab_size=512, norm_variant="layernorm", max_seq_len=128,
+)

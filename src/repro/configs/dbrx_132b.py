@@ -1,0 +1,17 @@
+"""DBRX-132B [hf:databricks/dbrx-base] — 16 experts top-4 fine-grained MoE,
+GQA kv=8."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", family="moe",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=10752,
+    vocab_size=100352, n_experts=16, top_k=4,
+    mlp_variant="swiglu", norm_variant="rmsnorm", pos_variant="rope",
+    rope_theta=500_000.0, max_seq_len=32768,
+)
+
+SMOKE = ModelConfig(
+    name="dbrx-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+    vocab_size=512, n_experts=4, top_k=4, max_seq_len=128,
+)

@@ -1,0 +1,13 @@
+"""Gemma3-1B [Gemma Team 2025] — paper PEFT model."""
+from repro.config import ModelConfig
+from repro.configs.gemma3_270m import SMOKE as _S
+
+CONFIG = ModelConfig(
+    name="gemma3-1b", family="dense",
+    n_layers=26, d_model=1152, n_heads=4, n_kv_heads=1, d_ff=6912,
+    vocab_size=262144, head_dim=256,
+    mlp_variant="geglu", norm_variant="rmsnorm", pos_variant="rope",
+    qk_norm=True, tie_embeddings=True, sliding_window=512,
+    global_layer_every=6, max_seq_len=32768,
+)
+SMOKE = _S

@@ -1,0 +1,20 @@
+"""Gemma3-270M [Gemma Team 2025] — paper PEFT model; qk-norm, geglu,
+interleaved sliding/global attention, huge 262k vocab."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-270m", family="dense",
+    n_layers=18, d_model=640, n_heads=4, n_kv_heads=1, d_ff=2048,
+    vocab_size=262144, head_dim=256,
+    mlp_variant="geglu", norm_variant="rmsnorm", pos_variant="rope",
+    qk_norm=True, tie_embeddings=True, sliding_window=512,
+    global_layer_every=6, max_seq_len=32768,
+)
+
+SMOKE = ModelConfig(
+    name="gemma3-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=2, n_kv_heads=1, d_ff=128,
+    vocab_size=512, head_dim=32, mlp_variant="geglu", qk_norm=True,
+    tie_embeddings=True, sliding_window=16, global_layer_every=2,
+    max_seq_len=128,
+)

@@ -1,0 +1,19 @@
+"""GPT2-small-124M [Radford et al. 2019] — paper correctness model (Fig 9)."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gpt2-124m", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+    vocab_size=50257,
+    mlp_variant="gelu", norm_variant="layernorm", pos_variant="learned",
+    qkv_bias=True, attn_out_bias=True, mlp_bias=True, tie_embeddings=True,
+    max_seq_len=1024,
+)
+
+SMOKE = ModelConfig(
+    name="gpt2-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=512, mlp_variant="gelu", norm_variant="layernorm",
+    pos_variant="learned", qkv_bias=True, attn_out_bias=True, mlp_bias=True,
+    tie_embeddings=True, max_seq_len=128,
+)

@@ -1,0 +1,13 @@
+"""GPT2-medium-355M [Radford et al. 2019] — paper PEFT model."""
+from repro.config import ModelConfig
+from repro.configs.gpt2_124m import SMOKE as _S
+
+CONFIG = ModelConfig(
+    name="gpt2-355m", family="dense",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, d_ff=4096,
+    vocab_size=50257,
+    mlp_variant="gelu", norm_variant="layernorm", pos_variant="learned",
+    qkv_bias=True, attn_out_bias=True, mlp_bias=True, tie_embeddings=True,
+    max_seq_len=1024,
+)
+SMOKE = _S

@@ -1,0 +1,19 @@
+"""Granite-34B-Code [arXiv:2405.04324; hf] — 88 deep layers, MQA (kv=1),
+llama-style attention (rope + rmsnorm, no biases) with the 4x GELU MLP
+that d_ff=24576 implies (2-matrix MLP reproduces the 34B total; a SwiGLU
+reading would give 47B)."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b", family="dense",
+    n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1, d_ff=24576,
+    vocab_size=49152,
+    mlp_variant="gelu", norm_variant="rmsnorm", pos_variant="rope",
+    tie_embeddings=True, rope_theta=10_000_000.0, max_seq_len=32768,
+)
+
+SMOKE = ModelConfig(
+    name="granite-smoke", family="dense",
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=1, d_ff=128,
+    vocab_size=512, tie_embeddings=True, max_seq_len=128,
+)

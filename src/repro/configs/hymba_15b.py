@@ -1,0 +1,22 @@
+"""Hymba-1.5B [arXiv:2411.13676; hf] — parallel attention+mamba heads,
+SWA with 3 global layers (first/middle/last), 128 meta tokens.
+25 attn heads x 64 = 1600; SSM d_inner = 3200 (50 heads x 64), state 16."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, d_ff=5504,
+    vocab_size=32001, head_dim=64,
+    mlp_variant="swiglu", norm_variant="rmsnorm", pos_variant="rope",
+    sliding_window=1024, global_layer_every=16, n_meta_tokens=128,
+    ssm_state=16, ssm_head_dim=64, ssm_expand=2, ssm_conv_width=4,
+    ssm_chunk=256, max_seq_len=1048576,
+)
+
+SMOKE = ModelConfig(
+    name="hymba-smoke", family="hybrid",
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512, head_dim=16, sliding_window=16, global_layer_every=2,
+    n_meta_tokens=4, ssm_state=8, ssm_head_dim=16, ssm_expand=2,
+    ssm_chunk=8, max_seq_len=256,
+)

@@ -1,0 +1,19 @@
+"""Mamba2-130M [arXiv:2405.21060] — SSD (state-space duality), attention-free.
+d_inner = 2*768 = 1536; 24 heads of dim 64; state 128."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m", family="ssm",
+    n_layers=24, d_model=768, n_heads=1, n_kv_heads=1, d_ff=0,
+    vocab_size=50280, head_dim=64,
+    norm_variant="rmsnorm", pos_variant="none", tie_embeddings=True,
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_conv_width=4,
+    ssm_chunk=256, max_seq_len=1048576,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-smoke", family="ssm",
+    n_layers=2, d_model=64, n_heads=1, n_kv_heads=1, d_ff=0,
+    vocab_size=512, head_dim=8, pos_variant="none", tie_embeddings=True,
+    ssm_state=16, ssm_head_dim=8, ssm_expand=2, ssm_chunk=8, max_seq_len=256,
+)

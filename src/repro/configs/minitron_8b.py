@@ -1,0 +1,18 @@
+"""Minitron-8B [arXiv:2407.14679; hf] — width-pruned Nemotron-4;
+squared-ReLU MLP, GQA kv=8, huge 256k vocab."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=16384,
+    vocab_size=256000,
+    mlp_variant="relu2", norm_variant="layernorm", pos_variant="rope",
+    max_seq_len=32768,
+)
+
+SMOKE = ModelConfig(
+    name="minitron-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512, mlp_variant="relu2", norm_variant="layernorm",
+    max_seq_len=128,
+)

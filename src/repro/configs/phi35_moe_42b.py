@@ -1,0 +1,17 @@
+"""Phi-3.5-MoE 42B (6.6B active) [hf:microsoft/Phi-3.5-MoE-instruct] —
+16 experts, top-2 routing, GQA kv=8."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=6400,
+    vocab_size=32064, n_experts=16, top_k=2,
+    mlp_variant="swiglu", norm_variant="rmsnorm", pos_variant="rope",
+    max_seq_len=32768,
+)
+
+SMOKE = ModelConfig(
+    name="phi3.5-moe-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+    vocab_size=512, n_experts=4, top_k=2, max_seq_len=128,
+)

@@ -1,0 +1,16 @@
+"""Qwen1.5-0.5B [hf:Qwen/Qwen1.5-0.5B] — MHA (kv=16), QKV bias, tied."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-0.5b", family="dense",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, d_ff=2816,
+    vocab_size=151936,
+    mlp_variant="swiglu", norm_variant="rmsnorm", pos_variant="rope",
+    qkv_bias=True, tie_embeddings=True, max_seq_len=32768,
+)
+
+SMOKE = ModelConfig(
+    name="qwen1.5-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=512, qkv_bias=True, tie_embeddings=True, max_seq_len=128,
+)

@@ -1,0 +1,17 @@
+"""Qwen2.5-0.5B [Qwen Team 2024] — the paper's case-study base model."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-0.5b", family="dense",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2, d_ff=4864,
+    vocab_size=151936,
+    mlp_variant="swiglu", norm_variant="rmsnorm", pos_variant="rope",
+    qkv_bias=True, tie_embeddings=True, rope_theta=1_000_000.0,
+    max_seq_len=32768,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2.5-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512, qkv_bias=True, tie_embeddings=True, max_seq_len=128,
+)

@@ -1,0 +1,24 @@
+"""Qwen2-VL-7B backbone [arXiv:2409.12191; hf] — M-RoPE, dynamic resolution.
+
+Vision frontend is a STUB (harness rule): input_specs provides patch
+embeddings merged at the sequence front; M-RoPE (t/h/w sections 16/24/24 of
+head_dim/2=64) positions both streams.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, d_ff=18944,
+    vocab_size=152064, head_dim=128,
+    mlp_variant="swiglu", norm_variant="rmsnorm",
+    qkv_bias=True, pos_variant="mrope", mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0, n_vision_tokens=1024, max_seq_len=32768,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-vl-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512, head_dim=16,
+    mlp_variant="swiglu", qkv_bias=True, pos_variant="mrope",
+    mrope_sections=(2, 3, 3), n_vision_tokens=8, max_seq_len=128,
+)

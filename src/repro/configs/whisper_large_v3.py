@@ -1,0 +1,21 @@
+"""Whisper-large-v3 [arXiv:2212.04356] — enc-dec, conv frontend STUB
+(input_specs provides precomputed frame embeddings at seq/4).  Position
+tables extended to the harness shapes (real whisper: 1500 enc / 448 dec)."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3", family="encdec",
+    n_layers=32, n_enc_layers=32, d_model=1280, n_heads=20, n_kv_heads=20,
+    d_ff=5120, vocab_size=51866,
+    mlp_variant="gelu", norm_variant="layernorm", pos_variant="learned",
+    qkv_bias=True, attn_out_bias=True, mlp_bias=True, tie_embeddings=True,
+    enc_seq_ratio=4, max_seq_len=32776,
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke", family="encdec",
+    n_layers=2, n_enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab_size=512, mlp_variant="gelu", norm_variant="layernorm",
+    pos_variant="learned", qkv_bias=True, attn_out_bias=True, mlp_bias=True,
+    tie_embeddings=True, enc_seq_ratio=4, max_seq_len=128,
+)

@@ -1,0 +1,10 @@
+"""The paper's primary contribution: the resource-aware training runtime.
+
+- attention.py   memory-efficient exact attention (C4)
+- accumulate.py  gradient accumulation (C2)
+- remat.py       activation checkpointing (C3)
+- zero.py        ZeRO-inspired parameter sharding (C1)
+- energy.py      energy-aware computation scheduling (C5)
+- lora.py        PEFT / LoRA workflow (C6)
+- step.py        composed train/eval/serve steps (Application layer)
+"""

@@ -1,0 +1,167 @@
+"""Memory-efficient exact attention (paper §4.1.4, C4).
+
+Three interchangeable implementations of *exact* softmax attention:
+
+  naive      materializes the [B, H, Sq, Skv] score matrix — the paper's
+             "unoptimized" baseline (①-off in the optimization-chain study).
+  streaming  chunked online-softmax over KV blocks via ``lax.scan`` — the
+             paper's row-streaming C++ operator re-blocked for vector units.
+             Never materializes more than [B, Sq, H, chunk] scores.  Used for
+             CPU tests and for the AOT dry-run lowering.
+  flash      Pallas TPU kernel (kernels/flash_attention) — the TPU-native
+             adaptation: 128-aligned query-block x key-block tiles staged
+             through VMEM for the MXU, same online-softmax algorithm, and a
+             recompute backward exactly as §4.1.4 prescribes.
+
+All support GQA/MQA (grouped KV heads), causal masking, sliding windows,
+padding masks via position sentinels, and decode (Sq=1 against a long cache).
+
+Shapes: q (B, Sq, H, D); k, v (B, Skv, KVH, D); H % KVH == 0.
+Positions: q_pos (B, Sq) int32 absolute positions; kv_pos (B, Skv).  A kv
+position >= SENTINEL marks padding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+SENTINEL = jnp.iinfo(jnp.int32).max // 2
+NEG_INF = -1e30
+
+
+def default_positions(batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(pos, (batch, seq)).astype(jnp.int32)
+
+
+def _mask(q_pos, kv_pos, causal: bool, window):
+    """(B, Sq, Skv) bool — True = attend.
+
+    ``window`` may be a python int or a traced scalar (hybrid models select
+    full-vs-sliding per scanned layer); window <= 0 means no windowing.
+    """
+    valid = (kv_pos < SENTINEL)[:, None, :]
+    m = valid
+    if causal:
+        m = m & (q_pos[:, :, None] >= kv_pos[:, None, :])
+    if isinstance(window, int):
+        if window > 0:
+            m = m & (q_pos[:, :, None] - kv_pos[:, None, :] < window)
+    else:
+        wm = (q_pos[:, :, None] - kv_pos[:, None, :] < jnp.maximum(window, 1))
+        m = m & (wm | (window <= 0))
+    return m
+
+
+def _group(q, kvh: int):
+    b, sq, h, d = q.shape
+    return q.reshape(b, sq, kvh, h // kvh, d)
+
+
+def attention(q, k, v, *, q_pos=None, kv_pos=None, causal=True, window=0,
+              impl="streaming", chunk=512, interpret=False):
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    if q_pos is None:
+        q_pos = default_positions(b, sq, offset=skv - sq)
+    if kv_pos is None:
+        kv_pos = default_positions(b, skv)
+
+    if impl == "naive":
+        return _naive(q, k, v, q_pos, kv_pos, causal, window)
+    if impl == "streaming":
+        return _streaming(q, k, v, q_pos, kv_pos, causal, window, chunk)
+    if impl == "flash":
+        from repro.kernels.flash_attention import ops as flash_ops
+        return flash_ops.flash_attention(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+            window=window, interpret=interpret)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ----------------------------------------------------------------------------
+# naive — the paper's unoptimized baseline (materializes S x S)
+# ----------------------------------------------------------------------------
+def _naive(q, k, v, q_pos, kv_pos, causal, window):
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    scale = d ** -0.5
+    qg = _group(q, kvh)                                   # (B,Sq,KVH,G,D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale     # (B,KVH,G,Sq,Skv)
+    m = _mask(q_pos, kv_pos, causal, window)              # (B,Sq,Skv)
+    scores = jnp.where(m[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------------
+# streaming — chunked online softmax (paper C4).  Double-blocked: an outer
+# map over query blocks bounds intermediates at O(q_chunk * kv_chunk) scores
+# (the TPU re-blocking of the paper's row-at-a-time streaming).
+# ----------------------------------------------------------------------------
+def _streaming(q, k, v, q_pos, kv_pos, causal, window, chunk):
+    b, sq, h, d = q.shape
+    q_chunk = max(chunk // 2, 1)
+    if sq <= q_chunk:
+        return _streaming_qblock(q, k, v, q_pos, kv_pos, causal, window, chunk)
+    nq = -(-sq // q_chunk)
+    pad = nq * q_chunk - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=0)
+    qs = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    ps = q_pos.reshape(b, nq, q_chunk).transpose(1, 0, 2)
+
+    def one(args):
+        qc, pc = args
+        return _streaming_qblock(qc, k, v, pc, kv_pos, causal, window, chunk)
+
+    out = jax.lax.map(one, (qs, ps))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nq * q_chunk, h, d)
+    return out[:, :sq]
+
+
+def _streaming_qblock(q, k, v, q_pos, kv_pos, causal, window, chunk):
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = d ** -0.5
+    chunk = min(chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=SENTINEL)
+
+    qg = _group(q, kvh).astype(jnp.float32) * scale       # (B,Sq,KVH,G,D)
+    ks = k.reshape(b, n_chunks, chunk, kvh, d).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, n_chunks, chunk, kvh, d).transpose(1, 0, 2, 3, 4)
+    ps = kv_pos.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, inputs):
+        acc, mx, denom = carry
+        kc, vc, pc = inputs                               # (B,C,KVH,D),(B,C)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kc.astype(jnp.float32))
+        m = _mask(q_pos, pc, causal, window)              # (B,Sq,C)
+        s = jnp.where(m[:, :, None, None], s, NEG_INF)
+        new_mx = jnp.maximum(mx, jnp.max(s, axis=-1))
+        corr = jnp.exp(mx - new_mx)
+        p = jnp.exp(s - new_mx[..., None])
+        denom = denom * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, vc.astype(jnp.float32))
+        return (acc, new_mx, denom), None
+
+    acc0 = jnp.zeros((b, sq, kvh, g, d), jnp.float32)
+    mx0 = jnp.full((b, sq, kvh, g), NEG_INF, jnp.float32)
+    dn0 = jnp.zeros((b, sq, kvh, g), jnp.float32)
+    (acc, _, denom), _ = jax.lax.scan(body, (acc0, mx0, dn0), (ks, vs, ps))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    return out.reshape(b, sq, h, d).astype(q.dtype)

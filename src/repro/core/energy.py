@@ -1,0 +1,77 @@
+"""Energy-aware computation scheduling (paper §4.2, C5).
+
+Controller reproduced verbatim: a PowerMonitor checks the energy budget every
+K steps; when the level drops below threshold mu, computation frequency is
+reduced by rho — implemented, exactly as in the paper, by injecting a sleep
+delay so the per-step interval stretches from t to t / (1 - rho).
+
+Hardware adaptation: phones read a battery percentage; a TPU pod host reads a
+power/thermal budget (or a preemption signal on spot reservations).  The
+signal source is pluggable — ``SimulatedBattery`` models the paper's battery
+drain (used by the Fig-11 benchmark); ``HostBudget`` binds to a host metric.
+The governor also doubles as a pacing device for straggler mitigation: a
+host that throttles still advances in lockstep, just at lower frequency.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+
+@dataclass
+class SimulatedBattery:
+    """Battery drains proportionally to energy consumed per step (kJ-ish
+    arbitrary units); mirrors the paper's Huawei Nova 9 Pro trace shape."""
+    capacity: float = 100.0
+    level: float = 100.0
+    drain_per_unit: float = 1.0
+
+    def consume(self, energy_units: float):
+        self.level = max(0.0, self.level - self.drain_per_unit * energy_units)
+
+    def fraction(self) -> float:
+        return self.level / self.capacity
+
+
+@dataclass
+class HostBudget:
+    """Pluggable host power/thermal signal (returns fraction in [0, 1])."""
+    read: Callable[[], float] = lambda: 1.0
+
+    def fraction(self) -> float:
+        return float(self.read())
+
+    def consume(self, energy_units: float):
+        pass
+
+
+@dataclass
+class EnergyGovernor:
+    """The K / mu / rho controller from §4.2."""
+    check_every: int = 1          # K
+    threshold: float = 0.60       # mu
+    reduction: float = 0.50       # rho
+    monitor: object = field(default_factory=SimulatedBattery)
+    sleep_fn: Callable[[float], None] = time.sleep
+    throttled: bool = False
+    history: List[dict] = field(default_factory=list)
+
+    def after_step(self, step: int, step_time_s: float,
+                   step_energy: float = 1.0) -> float:
+        """Call after each optimizer step.  Returns injected delay (s)."""
+        self.monitor.consume(step_energy)
+        delay = 0.0
+        if step % max(self.check_every, 1) == 0:
+            self.throttled = self.monitor.fraction() < self.threshold
+        if self.throttled and self.reduction > 0:
+            # stretch interval t -> t / (1 - rho)
+            delay = step_time_s * self.reduction / (1.0 - self.reduction)
+            if delay > 0:
+                self.sleep_fn(delay)
+        self.history.append({
+            "step": step, "battery": self.monitor.fraction(),
+            "throttled": self.throttled, "step_time": step_time_s,
+            "delay": delay, "interval": step_time_s + delay,
+        })
+        return delay

@@ -1,0 +1,87 @@
+"""LoRA / PEFT workflow (paper §3.2, C6).
+
+The paper's LoRALinear/LoRAAttention stack is realized functionally: a LoRA
+param pytree mirrors the base tree at every targeted 2-D (or stacked 3-D)
+linear; ``merge_lora`` produces effective weights W' = sg(W) + (alpha/r) A@B
+per layer.  Only the LoRA leaves receive gradients; exporting a merged model
+or the bare adapter both fall out of the same tree (checkpoint/safetensors).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.param import ParamSpec, is_spec, spec
+
+
+def _targeted(path_leaf: str, targets: Tuple[str, ...]) -> bool:
+    return path_leaf in targets
+
+
+def lora_specs(base_specs, targets: Tuple[str, ...], rank: int):
+    """Build the adapter spec tree: for each targeted leaf named in
+    ``targets`` with shape (..., in, out), create a/b factors.  Leading
+    (layers,) stacking dims are preserved."""
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if is_spec(v) and _targeted(k, targets) and len(v.shape) >= 2:
+                    lead = v.shape[:-2]
+                    lead_axes = v.axes[:-2]
+                    d_in, d_out = v.shape[-2], v.shape[-1]
+                    out[k] = {
+                        "a": spec(lead + (d_in, rank),
+                                  lead_axes + (v.axes[-2], "lora_rank"),
+                                  init="fanin"),
+                        "b": spec(lead + (rank, d_out),
+                                  lead_axes + ("lora_rank", v.axes[-1]),
+                                  init="zeros"),
+                    }
+                elif isinstance(v, dict):
+                    sub = walk(v)
+                    if sub:
+                        out[k] = sub
+            return out
+        return {}
+    return walk(base_specs)
+
+
+def merge_lora(base_params, lora_params, *, rank: int, alpha: float,
+               train: bool = True):
+    """Effective params: W' = stop_grad(W) + (alpha/rank) * A @ B at every
+    adapted leaf; all other leaves pass through (stop_grad'd when training so
+    gradients flow only into the adapter)."""
+    scaling = alpha / max(rank, 1)
+
+    def walk(base, lora):
+        if isinstance(base, dict):
+            out = {}
+            for k, v in base.items():
+                if isinstance(lora, dict) and k in lora and \
+                        isinstance(lora[k], dict) and "a" in lora[k] and \
+                        not isinstance(v, dict):
+                    w = jax.lax.stop_gradient(v) if train else v
+                    a, b = lora[k]["a"], lora[k]["b"]
+                    delta = jnp.einsum("...ir,...ro->...io",
+                                       a.astype(jnp.float32),
+                                       b.astype(jnp.float32)) * scaling
+                    out[k] = (w.astype(jnp.float32) + delta).astype(v.dtype)
+                elif isinstance(v, dict):
+                    out[k] = walk(v, lora.get(k, {}) if isinstance(lora, dict)
+                                  else {})
+                else:
+                    out[k] = jax.lax.stop_gradient(v) if train else v
+            return out
+        return jax.lax.stop_gradient(base) if train else base
+
+    return walk(base_params, lora_params)
+
+
+def export_merged(base_params, lora_params, *, rank: int, alpha: float):
+    """Merged weights for deployment (no stop_gradient)."""
+    return merge_lora(base_params, lora_params, rank=rank, alpha=alpha,
+                      train=False)

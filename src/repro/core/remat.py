@@ -1,0 +1,32 @@
+"""Activation checkpointing policies (paper §4.1.3, C3).
+
+The paper stores a subset of activations at strategic points and recomputes
+the rest during backprop.  Here the "strategic point" is the scanned layer
+boundary: with policy ``full`` only each layer's input survives the forward
+pass; ``dots`` additionally saves matmul outputs (XLA's dots_saveable) —
+cheaper recompute at higher memory; ``none`` disables checkpointing (the
+paper's ②-off baseline).
+"""
+from __future__ import annotations
+
+import jax
+
+
+POLICIES = ("none", "dots", "full", "offload")
+
+
+def maybe_remat(fn, policy: str):
+    if policy in (None, "", "none"):
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn, prevent_cse=False)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if policy == "offload":
+        # save-nothing + rely on scheduler; placeholder for host-offload tier
+        return jax.checkpoint(
+            fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.nothing_saveable)
+    raise ValueError(f"unknown remat policy {policy!r}")

@@ -1,0 +1,139 @@
+"""Composed train / eval / serve steps (paper Application layer).
+
+``make_train_step`` assembles the full resource-aware runtime:
+  C1 parameter sharding   — in/out shardings from the rule preset
+  C2 grad accumulation    — lax.scan micro-batching (+ optional bf16 grad compression)
+  C3 activation ckpt      — remat policy inside the model scan
+  C4 ME attention         — TrainConfig.attention_impl
+  C6 Full-FT vs LoRA      — lora=True trains only the adapter tree
+
+State pytrees:
+  Full-FT: {"params", "opt", "step"}
+  LoRA:    {"base", "lora", "opt", "step"}   (opt covers only the adapter)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RunConfig, TrainConfig, dtype_of
+from repro.core.accumulate import value_and_grad_accumulated
+from repro.core.lora import lora_specs, merge_lora
+from repro.models import registry
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedule import lr_schedule
+from repro.param import init_params
+
+
+# ----------------------------------------------------------------------------
+# State construction
+# ----------------------------------------------------------------------------
+def init_state(rng, cfg: ModelConfig, tcfg: TrainConfig):
+    specs = registry.param_specs(cfg)
+    pd = dtype_of(tcfg.param_dtype)
+    params = init_params(rng, specs, dtype=pd)
+    if tcfg.lora_rank > 0:
+        lspecs = lora_specs(specs, tcfg.lora_targets, tcfg.lora_rank)
+        lora = init_params(jax.random.fold_in(rng, 1), lspecs,
+                           dtype=jnp.float32)
+        return {"base": params, "lora": lora, "opt": adamw_init(lora),
+                "step": jnp.zeros((), jnp.int32)}
+    return {"params": params, "opt": adamw_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_specs(cfg: ModelConfig, tcfg: TrainConfig):
+    """ParamSpec pytree for the full state (for shardings / abstract AOT)."""
+    from repro.param import ParamSpec, spec, tree_map_specs
+    specs = registry.param_specs(cfg)
+    pd = dtype_of(tcfg.param_dtype)
+    pspecs = tree_map_specs(
+        lambda s: ParamSpec(s.shape, pd, s.axes, s.init, s.scale), specs)
+
+    def f32(s_tree):
+        return tree_map_specs(
+            lambda s: ParamSpec(s.shape, jnp.float32, s.axes, "zeros", 1.0),
+            s_tree)
+
+    scalar = spec((), (), init="zeros", dtype=jnp.int32)
+    if tcfg.lora_rank > 0:
+        lspecs = lora_specs(specs, tcfg.lora_targets, tcfg.lora_rank)
+        lspecs = f32(lspecs)
+        return {"base": pspecs, "lora": lspecs,
+                "opt": {"m": f32(lspecs), "v": f32(lspecs), "count": scalar},
+                "step": scalar}
+    return {"params": pspecs,
+            "opt": {"m": f32(pspecs), "v": f32(pspecs), "count": scalar},
+            "step": scalar}
+
+
+# ----------------------------------------------------------------------------
+# Train step
+# ----------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    model_loss = registry.loss_fn(cfg)
+    reduce_dtype = (dtype_of(tcfg.grad_reduce_dtype)
+                    if tcfg.grad_reduce_dtype else None)
+
+    def train_step(state, batch):
+        lora_mode = "lora" in state
+
+        def loss_of(trainable, mb):
+            if lora_mode:
+                params = merge_lora(state["base"], trainable,
+                                    rank=tcfg.lora_rank, alpha=tcfg.lora_alpha)
+            else:
+                params = trainable
+            return model_loss(params, mb, cfg, tcfg)
+
+        trainable = state["lora"] if lora_mode else state["params"]
+        loss, metrics, grads = value_and_grad_accumulated(
+            loss_of, trainable, batch, tcfg.microbatches, reduce_dtype)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = lr_schedule(state["step"], base_lr=tcfg.learning_rate,
+                         warmup_steps=tcfg.warmup_steps,
+                         total_steps=tcfg.total_steps, kind=tcfg.schedule)
+        new_trainable, new_opt = adamw_update(
+            grads, state["opt"], trainable, lr=lr, beta1=tcfg.beta1,
+            beta2=tcfg.beta2, eps=tcfg.eps, weight_decay=tcfg.weight_decay)
+        new_state = dict(state)
+        if lora_mode:
+            new_state["lora"] = new_trainable
+        else:
+            new_state["params"] = new_trainable
+        new_state["opt"] = new_opt
+        new_state["step"] = state["step"] + 1
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    model_loss = registry.loss_fn(cfg)
+
+    def eval_step(state, batch):
+        if "lora" in state:
+            params = merge_lora(state["base"], state["lora"],
+                                rank=tcfg.lora_rank, alpha=tcfg.lora_alpha,
+                                train=False)
+        else:
+            params = state["params"]
+        loss, metrics = model_loss(params, batch, cfg, tcfg)
+        return metrics
+
+    return eval_step
+
+
+def make_serve_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    decode = registry.decode_fn(cfg)
+
+    def serve_step(params, cache, tokens, index):
+        return decode(params, cache, tokens, index, cfg, tcfg)
+
+    return serve_step

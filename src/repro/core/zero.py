@@ -1,0 +1,61 @@
+"""ZeRO-inspired parameter sharding (paper §4.1.1, C1) — TPU-native.
+
+Phone realization: parameters partitioned into contiguous segments; only the
+active segment is in RAM, the rest offloaded to disk, tracked by a mapping
+table.  TPU realization: GSPMD FSDP — every weight sharded over the ``data``
+mesh axis, all-gathered just-in-time per scanned layer; gradients
+reduce-scatter back into the sharded layout (ZeRO-2); optimizer state and
+fp32 masters shard identically (ZeRO-1).  The "mapping table" is the
+ParamSpec logical-axes + rule preset (repro/sharding.py).
+
+This module provides the placement helpers the training loop uses.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.param import is_spec, tree_map_specs
+from repro.sharding import PRESETS, resolve_spec, shardings_for_specs
+
+
+def param_shardings(specs, mesh: Mesh, preset: str):
+    return shardings_for_specs(specs, mesh, preset)
+
+
+def opt_state_shardings(specs, mesh: Mesh, preset: str):
+    """Adam m/v shard exactly like their parameters (ZeRO-1)."""
+    ps = shardings_for_specs(specs, mesh, preset)
+    return {"m": ps, "v": ps,
+            "count": NamedSharding(mesh, P())}
+
+
+def place_params(params, specs, mesh: Mesh, preset: str):
+    """device_put a real param tree into its sharded layout."""
+    sh = shardings_for_specs(specs, mesh, preset)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), params,
+                        jax.tree.unflatten(jax.tree.structure(params),
+                                           jax.tree.leaves(sh)))
+
+
+def bytes_per_device(specs, mesh: Mesh, preset: str, dtype_bytes: int = 4):
+    """Analytic per-device parameter bytes under a rule preset — the ZeRO
+    'memory liberated' accounting used by the mem-chain benchmark."""
+    rules = PRESETS[preset]
+    mesh_axes = tuple(mesh.axis_names)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 0
+    for s in jax.tree.leaves(specs, is_leaf=is_spec):
+        pspec = resolve_spec(s.axes, rules, mesh_axes)
+        denom = 1
+        for entry in pspec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                denom *= axis_sizes[a]
+        total += int(np.prod(s.shape)) * dtype_bytes / denom
+    return total

@@ -1,0 +1,2 @@
+from repro.data.tokenizer import ByteTokenizer  # noqa: F401
+from repro.data.dataset import LMDataset, QADataset, packed_batches  # noqa: F401

@@ -1,0 +1,80 @@
+"""Datasets + packing dataloader.
+
+LMDataset   — next-token language modeling over a text corpus (WikiText-style
+              task; reports loss/PPL like the paper's text-generation track).
+QADataset   — instruction QA (CHQA / multiple-choice style): loss masked over
+              the prompt, computed on the answer tokens only.
+packed_batches — fixed-shape (batch, seq) batches with shifted labels, -1 at
+              ignored positions, deterministic epoch shuffling.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Sequence
+
+import numpy as np
+
+from repro.data.tokenizer import BOS, EOS, PAD, ByteTokenizer
+
+IGNORE = -1
+
+
+class LMDataset:
+    def __init__(self, text: str, tokenizer: ByteTokenizer, seq_len: int):
+        self.tok = tokenizer
+        ids = tokenizer.encode(text, bos=True, eos=True)
+        n = (len(ids) - 1) // seq_len
+        self.seq_len = seq_len
+        ids = np.asarray(ids[: n * seq_len + 1], np.int32)
+        self.inputs = ids[:-1].reshape(n, seq_len)
+        self.targets = ids[1:].reshape(n, seq_len)
+
+    def __len__(self):
+        return len(self.inputs)
+
+    def example(self, i: int) -> Dict[str, np.ndarray]:
+        return {"tokens": self.inputs[i], "labels": self.targets[i]}
+
+
+class QADataset:
+    """Each item: loss on answer tokens only (prompt labels = IGNORE)."""
+
+    def __init__(self, pairs: Sequence[Dict[str, str]],
+                 tokenizer: ByteTokenizer, seq_len: int):
+        self.tok = tokenizer
+        self.seq_len = seq_len
+        self.items = []
+        for p in pairs:
+            q = tokenizer.encode("Q: " + p["question"] + "\nA: ", bos=True)
+            a = tokenizer.encode(p["answer"], eos=True)
+            ids = (q + a)[:seq_len + 1]
+            toks = np.full(seq_len + 1, PAD, np.int32)
+            toks[: len(ids)] = ids
+            labels = np.full(seq_len, IGNORE, np.int32)
+            # labels are next-token targets; answer region starts at len(q)-1
+            astart = min(len(q) - 1, seq_len)
+            aend = min(len(ids) - 1, seq_len)
+            labels[astart:aend] = toks[astart + 1: aend + 1]
+            self.items.append({"tokens": toks[:seq_len], "labels": labels})
+
+    def __len__(self):
+        return len(self.items)
+
+    def example(self, i: int):
+        return self.items[i]
+
+
+def packed_batches(dataset, batch_size: int, *, seed: int = 0,
+                   epochs: int = 1, drop_last: bool = True
+                   ) -> Iterator[Dict[str, np.ndarray]]:
+    n = len(dataset)
+    for epoch in range(epochs):
+        order = np.random.default_rng(seed + epoch).permutation(n)
+        for i in range(0, n - (batch_size - 1 if drop_last else 0),
+                       batch_size):
+            idx = order[i: i + batch_size]
+            if len(idx) < batch_size:
+                if drop_last:
+                    break
+                idx = np.concatenate([idx, order[: batch_size - len(idx)]])
+            exs = [dataset.example(int(j)) for j in idx]
+            yield {k: np.stack([e[k] for e in exs]) for k in exs[0]}

@@ -1,0 +1,97 @@
+"""Byte-level tokenizer with optional learned merges (BPE-lite).
+
+Matches the paper's tokenizer/model-compatibility goal in spirit: a
+self-contained tokenizer with exact encode/decode round-trip (property
+tested), special tokens, and vocabulary export.
+"""
+from __future__ import annotations
+
+import collections
+import json
+from typing import Dict, Iterable, List, Optional, Tuple
+
+PAD, BOS, EOS = 0, 1, 2
+N_SPECIAL = 3
+
+
+class ByteTokenizer:
+    """ids = [specials] + [bytes 0..255] + [merges...]."""
+
+    def __init__(self, merges: Optional[List[Tuple[int, int]]] = None):
+        self.merges = list(merges or [])
+        self._merge_rank = {tuple(m): i for i, m in enumerate(self.merges)}
+
+    @property
+    def vocab_size(self) -> int:
+        return N_SPECIAL + 256 + len(self.merges)
+
+    # ---- training -----------------------------------------------------
+    @classmethod
+    def train(cls, corpus: Iterable[str], n_merges: int = 0) -> "ByteTokenizer":
+        tok = cls()
+        if n_merges <= 0:
+            return tok
+        seqs = [tok._bytes(s) for s in corpus]
+        merges: List[Tuple[int, int]] = []
+        for _ in range(n_merges):
+            counts = collections.Counter()
+            for seq in seqs:
+                counts.update(zip(seq, seq[1:]))
+            if not counts:
+                break
+            pair, n = counts.most_common(1)[0]
+            if n < 2:
+                break
+            new_id = N_SPECIAL + 256 + len(merges)
+            merges.append(pair)
+            seqs = [cls._apply_merge(seq, pair, new_id) for seq in seqs]
+        return cls(merges)
+
+    @staticmethod
+    def _apply_merge(seq, pair, new_id):
+        out, i = [], 0
+        while i < len(seq):
+            if i + 1 < len(seq) and (seq[i], seq[i + 1]) == pair:
+                out.append(new_id)
+                i += 2
+            else:
+                out.append(seq[i])
+                i += 1
+        return out
+
+    # ---- encode / decode ------------------------------------------------
+    def _bytes(self, text: str) -> List[int]:
+        return [N_SPECIAL + b for b in text.encode("utf-8")]
+
+    def encode(self, text: str, bos: bool = False, eos: bool = False):
+        seq = self._bytes(text)
+        for rank, pair in enumerate(self.merges):
+            seq = self._apply_merge(seq, pair, N_SPECIAL + 256 + rank)
+        if bos:
+            seq = [BOS] + seq
+        if eos:
+            seq = seq + [EOS]
+        return seq
+
+    def _expand(self, tid: int) -> bytes:
+        if tid < N_SPECIAL:
+            return b""
+        if tid < N_SPECIAL + 256:
+            return bytes([tid - N_SPECIAL])
+        a, b = self.merges[tid - N_SPECIAL - 256]
+        return self._expand(a) + self._expand(b)
+
+    def decode(self, ids: Iterable[int]) -> str:
+        return b"".join(self._expand(int(t)) for t in ids).decode(
+            "utf-8", errors="replace")
+
+    # ---- persistence ----------------------------------------------------
+    def save(self, path: str):
+        with open(path, "w") as f:
+            json.dump({"merges": self.merges}, f)
+
+    @classmethod
+    def load(cls, path: str) -> "ByteTokenizer":
+        with open(path) as f:
+            d = json.load(f)
+        return cls([tuple(m) for m in d["merges"]])

@@ -1,0 +1,106 @@
+"""jit'd wrapper for the Pallas flash-attention kernel with custom_vjp.
+
+Public entry: ``flash_attention(q, k, v, ...)`` in the model layout
+(B, S, H, D) — transposes to the kernel layout, pads sequences to block
+multiples, and installs the recompute backward (paper §4.1.4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as K
+
+
+class _Meta(NamedTuple):
+    scale: float
+    causal: bool
+    window: int
+    q_offset: int
+    kv_len: int
+    block_q: int
+    block_k: int
+    interpret: bool
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash(q, k, v, meta: _Meta):
+    o, _ = K.flash_fwd(q, k, v, scale=meta.scale, causal=meta.causal,
+                       window=meta.window, q_offset=meta.q_offset,
+                       kv_len=meta.kv_len, block_q=meta.block_q,
+                       block_k=meta.block_k, interpret=meta.interpret)
+    return o
+
+
+def _flash_fwd_rule(q, k, v, meta: _Meta):
+    o, lse = K.flash_fwd(q, k, v, scale=meta.scale, causal=meta.causal,
+                         window=meta.window, q_offset=meta.q_offset,
+                         kv_len=meta.kv_len, block_q=meta.block_q,
+                         block_k=meta.block_k, interpret=meta.interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd_rule(meta: _Meta, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = K.flash_bwd(q, k, v, o, lse, do, scale=meta.scale,
+                             causal=meta.causal, window=meta.window,
+                             q_offset=meta.q_offset, kv_len=meta.kv_len,
+                             block_q=meta.block_q, block_k=meta.block_k,
+                             interpret=meta.interpret)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret", "q_offset"))
+def flash_attention(q, k, v, *, q_pos=None, kv_pos=None, causal=True,
+                    window=0, q_offset=-1, block_q=128, block_k=128,
+                    interpret=False):
+    """Model-layout entry: q (B, Sq, H, D); k, v (B, Skv, KVH, D).
+
+    Positions are assumed contiguous: q at offset (Skv - Sq) by default
+    (training: 0; decode: cache length), kv at 0..Skv.  ``q_pos``/``kv_pos``
+    are accepted for API parity with core.attention but must follow that
+    contiguous pattern (asserted by the allclose test suite, not at runtime —
+    they may be traced).
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    if q_offset < 0:
+        q_offset = skv - sq
+    scale = d ** -0.5
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bq = min(block_q, max(_next_pow2(sq), 8))
+    bk = min(block_k, max(_next_pow2(skv), 8))
+    qt = _pad_to(qt, 2, bq)
+    kt = _pad_to(kt, 2, bk)
+    vt = _pad_to(vt, 2, bk)
+    meta = _Meta(scale=scale, causal=causal, window=window,
+                 q_offset=q_offset, kv_len=skv, block_q=bq, block_k=bk,
+                 interpret=interpret)
+    o = _flash(qt, kt, vt, meta)
+    return o[:, :, :sq].transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Full-materialization exact attention in fp32 with the same mask semantics
+(causal / sliding window / kv_len padding / GQA / q_offset).  This is the
+ground truth the Pallas kernel is swept against (shapes x dtypes x flags).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, q_offset=0,
+                  kv_len=None):
+    """q: (B, H, Sq, D); k, v: (B, KVH, Skv, D) -> (B, H, Sq, D) fp32."""
+    b, h, sq, d = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    if kv_len is None:
+        kv_len = skv
+    qf = q.astype(jnp.float32).reshape(b, kvh, g, sq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf) * (d ** -0.5)
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    m = (k_pos < kv_len)[None, :]
+    if causal:
+        m = m & (q_pos[:, None] >= k_pos[None, :])
+    if window > 0:
+        m = m & (q_pos[:, None] - k_pos[None, :] < window)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return o.reshape(b, h, sq, d)

@@ -1,0 +1,64 @@
+"""jit'd wrapper: full chunked SSD via the Pallas intra-chunk kernel.
+
+Same contract as models/mamba2.ssd_chunked: the kernel computes the per-chunk
+quadratic part + local chunk states; the (tiny) inter-chunk recurrence and
+cross-chunk output term are composed here in jnp.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ssd import ssd_intra
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_pallas(xh, dt, A, B_, C_, chunk: int, initial_state=None,
+                       interpret: bool = False):
+    """xh: (B, S, NH, HD); dt: (B, S, NH) positive; A: (NH,) negative;
+    B_, C_: (B, S, DS).  Returns (y (B,S,NH,HD) fp32, final (B,NH,HD,DS))."""
+    b, s, nh, hd = xh.shape
+    ds = B_.shape[-1]
+    n = s // chunk
+    assert n * chunk == s, (s, chunk)
+
+    dtf = dt.astype(jnp.float32)
+    dA = dtf * A                                           # (B, S, NH)
+    # kernel layout: (B*NH, n, Q, ...)
+    xk = xh.transpose(0, 2, 1, 3).reshape(b * nh, n, chunk, hd)
+    dtk = dtf.transpose(0, 2, 1).reshape(b * nh, n, chunk)
+    dak = dA.transpose(0, 2, 1).reshape(b * nh, n, chunk)
+    bk = B_.reshape(b, n, chunk, ds)
+    ck = C_.reshape(b, n, chunk, ds)
+
+    y_intra, states, cs = ssd_intra(xk.astype(jnp.float32), dtk, dak,
+                                    bk.astype(jnp.float32),
+                                    ck.astype(jnp.float32),
+                                    chunk=chunk, interpret=interpret)
+
+    # inter-chunk recurrence (sequential over n, tiny state)
+    chunk_decay = jnp.exp(cs[:, :, -1])                    # (BH, n)
+    s0 = (initial_state.astype(jnp.float32).reshape(b * nh, hd, ds)
+          if initial_state is not None
+          else jnp.zeros((b * nh, hd, ds), jnp.float32))
+
+    def body(prev, inp):
+        st, dec = inp
+        return prev * dec[:, None, None] + st, prev
+
+    final, prev_states = jax.lax.scan(
+        body, s0, (states.transpose(1, 0, 2, 3), chunk_decay.T))
+    prev_states = prev_states.transpose(1, 0, 2, 3)        # (BH, n, HD, DS)
+
+    # cross-chunk contribution: y_q += C_q . prev_state * exp(cs_q)
+    decay_from_start = jnp.exp(cs)                         # (BH, n, Q)
+    ck_h = jnp.broadcast_to(
+        ck.astype(jnp.float32)[:, None], (b, nh, n, chunk, ds)
+    ).reshape(b * nh, n, chunk, ds)
+    y_inter = jnp.einsum("gnqs,gnhs,gnq->gnqh", ck_h, prev_states,
+                         decay_from_start)
+
+    y = (y_intra + y_inter).reshape(b, nh, s, hd).transpose(0, 2, 1, 3)
+    return y, final.reshape(b, nh, hd, ds)

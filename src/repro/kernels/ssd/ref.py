@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the SSD kernel: the *definitional* sequential SSM.
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * x_t (x) B_t
+    y_t = C_t . h_t  (+ no D/residual here — that lives in the model layer)
+
+This is the strongest possible reference: both the chunked jnp implementation
+(models/mamba2.ssd_chunked) and the Pallas kernel must match it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xh, dt, A, B_, C_, initial_state=None):
+    """xh: (B, S, NH, HD); dt: (B, S, NH); A: (NH,); B_, C_: (B, S, DS).
+
+    Returns y: (B, S, NH, HD) fp32, final_state: (B, NH, HD, DS) fp32.
+    """
+    b, s, nh, hd = xh.shape
+    ds = B_.shape[-1]
+    xh = xh.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    B_ = B_.astype(jnp.float32)
+    C_ = C_.astype(jnp.float32)
+    h0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, nh, hd, ds), jnp.float32))
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp           # (B,NH,HD), (B,NH), (B,DS), (B,DS)
+        decay = jnp.exp(dt_t * A)           # (B, NH)
+        upd = jnp.einsum("bhp,bh,bs->bhps", x_t, dt_t, b_t)
+        h = h * decay[:, :, None, None] + upd
+        y_t = jnp.einsum("bhps,bs->bhp", h, c_t)
+        return h, y_t
+
+    xs = (xh.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          B_.transpose(1, 0, 2), C_.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3), h

@@ -1,0 +1,143 @@
+"""End-to-end training driver (paper Application layer).
+
+Composes the full resource-aware runtime: data pipeline -> sharded train step
+(C1–C4) -> energy governor (C5) -> metrics observer + visualizer (C7) ->
+fault-tolerant checkpointing.  Runs on 1 CPU device (paper-scale models) or
+any mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gpt2_124m \
+        --steps 200 --batch 8 --seq 128 --lora-rank 8 --out runs/gpt2
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.config import ModelConfig, TrainConfig
+from repro.checkpoint.store import CheckpointStore, latest_step, restore
+from repro.core.energy import EnergyGovernor, SimulatedBattery
+from repro.core.step import init_state, make_eval_step, make_train_step
+from repro.data.corpus import synthetic_wikitext
+from repro.data.dataset import LMDataset, packed_batches
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import registry
+from repro.runtime.metrics import MetricsObserver
+from repro.runtime.visualizer import write_dashboard
+
+
+def build_data(cfg: ModelConfig, tcfg: TrainConfig, n_sentences: int = 4000,
+               seed: int = 0):
+    tok = ByteTokenizer()
+    text = synthetic_wikitext(n_sentences, seed=seed)
+    ds = LMDataset(text, tok, tcfg.seq_len)
+    # token ids must stay inside the model vocab
+    assert tok.vocab_size <= cfg.vocab_size, (tok.vocab_size, cfg.vocab_size)
+    return ds
+
+
+def train_loop(cfg: ModelConfig, tcfg: TrainConfig, *, out_dir: Optional[str],
+               seed: int = 0, resume: bool = True, eval_every: int = 0,
+               governor: Optional[EnergyGovernor] = None,
+               dataset=None, print_fn=print):
+    ds = dataset or build_data(cfg, tcfg, seed=seed)
+    obs = MetricsObserver(out_dir=out_dir, print_fn=print_fn)
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    state = init_state(jax.random.PRNGKey(seed), cfg, tcfg)
+
+    store = None
+    start = 0
+    if tcfg.checkpoint_every > 0 and out_dir:
+        ckdir = os.path.join(out_dir, "ckpt")
+        store = CheckpointStore(ckdir, keep=tcfg.keep_checkpoints)
+        if resume and latest_step(ckdir) is not None:
+            state, start = restore(ckdir, state)
+            start = int(start)
+            if print_fn:
+                print_fn(f"[resume] from step {start}")
+
+        def _flush(signum, frame):  # preemption tolerance
+            store.save_sync(state, int(state["step"]))
+            raise SystemExit(128 + signum)
+        try:
+            signal.signal(signal.SIGTERM, _flush)
+        except ValueError:
+            pass  # not the main thread
+
+    batches = packed_batches(ds, tcfg.global_batch, seed=seed, epochs=10_000)
+    for _ in range(start):
+        next(batches)  # deterministic data order on resume
+
+    tokens_per_step = tcfg.global_batch * tcfg.seq_len
+    for step in range(start, tcfg.total_steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        obs.start_step()
+        state, metrics = step_fn(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        row = obs.end_step(step, metrics, tokens=tokens_per_step,
+                           battery=(governor.monitor.fraction()
+                                    if governor else 1.0))
+        if governor is not None:
+            governor.after_step(step, row["step_time_s"])
+        if store and (step + 1) % tcfg.checkpoint_every == 0:
+            store.save_async(state, step + 1)
+    if store:
+        store.wait()
+        store.save_sync(state, int(state["step"]))
+    obs.flush_csv()
+    if out_dir:
+        write_dashboard(obs.rows, os.path.join(out_dir, "dashboard.html"),
+                        title=f"{cfg.name} | {'LoRA' if tcfg.lora_rank else 'Full-FT'}")
+    return state, obs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2_124m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-5)
+    ap.add_argument("--lora-rank", type=int, default=0)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--attention", default="streaming")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--energy", action="store_true",
+                    help="enable the K/mu/rho governor with a simulated battery")
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    tcfg = TrainConfig(
+        global_batch=args.batch, seq_len=args.seq,
+        microbatches=args.microbatches, learning_rate=args.lr,
+        total_steps=args.steps, warmup_steps=max(args.steps // 20, 1),
+        lora_rank=args.lora_rank,
+        lora_alpha=32.0 if args.lora_rank else 0.0,
+        remat_policy=args.remat, attention_impl=args.attention,
+        compute_dtype="float32", checkpoint_every=args.checkpoint_every,
+        checkpoint_dir=args.out or "")
+    governor = None
+    if args.energy:
+        governor = EnergyGovernor(monitor=SimulatedBattery(
+            level=70.0, drain_per_unit=0.5))
+    t0 = time.time()
+    state, obs = train_loop(cfg, tcfg, out_dir=args.out, seed=args.seed,
+                            governor=governor)
+    print(f"done in {time.time()-t0:.1f}s | final loss "
+          f"{obs.rows[-1]['loss']:.4f} | peak RSS {obs.peak_rss_mb:.0f} MB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: composable JAX definitions for every assigned architecture."""
+from repro.models import registry  # noqa: F401

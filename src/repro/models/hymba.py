@@ -1,0 +1,56 @@
+"""Hymba hybrid-head block [arXiv:2411.13676].
+
+Each layer runs attention heads and Mamba(SSD) heads *in parallel* on the same
+normalized input; their outputs are per-channel RMS-normalized, scaled by
+learnable gates, and averaged, then a shared MLP follows.  Most layers use
+sliding-window attention; first/middle/last are global (see layer_windows).
+Learnable meta tokens are prepended to the sequence.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.models.transformer import apply_attention, attn_specs
+from repro.param import spec
+from repro.sharding import constrain
+
+
+def hymba_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": L.norm_specs(cfg.d_model, cfg.norm_variant),
+        "attn": attn_specs(cfg),
+        "mamba": mamba2.mamba_specs(cfg),
+        "attn_gate": spec((cfg.d_model,), ("norm",), init="ones"),
+        "ssm_gate": spec((cfg.d_model,), ("norm",), init="ones"),
+        "ln2": L.norm_specs(cfg.d_model, cfg.norm_variant),
+        "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp_variant,
+                           cfg.mlp_bias),
+    }
+
+
+def _rms(x):
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)).astype(x.dtype)
+
+
+def apply_hymba_block(p, x, cfg: ModelConfig, tcfg: TrainConfig, *,
+                      positions, window, kv_cache=None, cache_index=None,
+                      ssm_state=None):
+    xn = L.apply_norm(p["ln1"], x, cfg.norm_variant)
+    a, new_kv = apply_attention(p["attn"], xn, cfg, tcfg, positions=positions,
+                                window=window, kv_cache=kv_cache,
+                                cache_index=cache_index)
+    m, new_ssm = mamba2.apply_mamba(p["mamba"], xn, cfg, tcfg, state=ssm_state)
+    fused = 0.5 * (_rms(a) * p["attn_gate"].astype(a.dtype)
+                   + _rms(m) * p["ssm_gate"].astype(a.dtype))
+    x = x + fused
+    x = x + L.apply_mlp(p["mlp"], L.apply_norm(p["ln2"], x, cfg.norm_variant),
+                        cfg.mlp_variant)
+    x = constrain(x, ("batch", "seq", "act_embed"), preset=tcfg.shard_preset)
+    return x, new_kv, new_ssm

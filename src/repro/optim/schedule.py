@@ -1,0 +1,23 @@
+"""Learning-rate schedules (linear warmup + cosine/linear/constant decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lr_schedule(step, *, base_lr: float, warmup_steps: int, total_steps: int,
+                kind: str = "cosine", min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    if kind == "constant":
+        decay = 1.0
+    else:
+        frac = jnp.clip((step - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        if kind == "cosine":
+            decay = min_ratio + (1 - min_ratio) * 0.5 * (1 +
+                                                         jnp.cos(jnp.pi * frac))
+        elif kind == "linear":
+            decay = 1.0 - (1 - min_ratio) * frac
+        else:
+            raise ValueError(kind)
+    return base_lr * warm * decay

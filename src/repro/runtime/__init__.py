@@ -1,0 +1,2 @@
+from repro.runtime.metrics import MetricsObserver, read_rss_mb  # noqa: F401
+from repro.runtime.visualizer import write_dashboard  # noqa: F401

@@ -1,0 +1,69 @@
+"""Training visualizer (paper §6.4, Fig 8): a static HTML dashboard.
+
+Decoupled from the training engine: reads the observer's metrics rows and
+renders loss/PPL/RSS/energy sparkline panels + a live-log table as one
+self-contained HTML file (no JS dependencies), mirroring the paper's
+progress / loss / PPL / peak-RSS / log panels.
+"""
+from __future__ import annotations
+
+import html
+import os
+from typing import Dict, List, Optional
+
+
+def _sparkline(values: List[float], width=560, height=120, label="") -> str:
+    vals = [v for v in values if v == v and v is not None]
+    if not vals:
+        return f"<div>{label}: no data</div>"
+    vmin, vmax = min(vals), max(vals)
+    rng = (vmax - vmin) or 1.0
+    pts = []
+    for i, v in enumerate(values):
+        if v is None or v != v:
+            continue
+        x = 10 + i * (width - 20) / max(len(values) - 1, 1)
+        y = height - 15 - (v - vmin) / rng * (height - 30)
+        pts.append(f"{x:.1f},{y:.1f}")
+    return (
+        f'<div class="panel"><h3>{html.escape(label)}</h3>'
+        f'<svg width="{width}" height="{height}">'
+        f'<polyline fill="none" stroke="#2b6cb0" stroke-width="1.5" '
+        f'points="{" ".join(pts)}"/>'
+        f'<text x="10" y="12" font-size="11">max {vmax:.4g}</text>'
+        f'<text x="10" y="{height-2}" font-size="11">min {vmin:.4g}</text>'
+        f"</svg></div>")
+
+
+def write_dashboard(rows: List[Dict], out_path: str,
+                    title: str = "MobileFineTuner-JAX training") -> str:
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    panels = []
+    for key, label in [("loss", "Training loss"), ("ppl", "Perplexity"),
+                       ("rss_mb", "RSS (MB)"), ("energy_kj", "Energy (kJ)"),
+                       ("step_time_s", "Step time (s)"),
+                       ("battery", "Battery fraction")]:
+        panels.append(_sparkline([r.get(key) for r in rows], label=label))
+    tail = rows[-12:]
+    log_rows = "".join(
+        "<tr>" + "".join(
+            f"<td>{html.escape(f'{r.get(k):.4g}' if isinstance(r.get(k), float) else str(r.get(k)))}</td>"
+            for k in ("step", "loss", "ppl", "step_time_s", "rss_mb"))
+        + "</tr>" for r in tail)
+    doc = f"""<!doctype html><html><head><meta charset="utf-8">
+<title>{html.escape(title)}</title>
+<style>body{{font-family:system-ui;margin:24px;background:#f7fafc}}
+.panel{{display:inline-block;background:#fff;border:1px solid #e2e8f0;
+border-radius:8px;padding:8px;margin:8px}}h3{{margin:2px 0 6px;font-size:13px}}
+table{{border-collapse:collapse;background:#fff}}td,th{{border:1px solid #e2e8f0;
+padding:3px 8px;font-size:12px}}</style></head><body>
+<h1>{html.escape(title)}</h1>
+<p>steps: {len(rows)} | final loss:
+{rows[-1]['loss']:.4f} | peak RSS: {max(r['rss_mb'] for r in rows):.0f} MB</p>
+{''.join(panels)}
+<h3>Live log (last {len(tail)} steps)</h3>
+<table><tr><th>step</th><th>loss</th><th>ppl</th><th>t(s)</th><th>rss</th></tr>
+{log_rows}</table></body></html>"""
+    with open(out_path, "w") as f:
+        f.write(doc)
+    return out_path

@@ -1,0 +1,176 @@
+"""Paper-feature unit/property tests: C2 grad accumulation, C5 energy
+governor, C6 LoRA, optimizer, schedules."""
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.config import TrainConfig
+from repro.core.accumulate import value_and_grad_accumulated
+from repro.core.energy import EnergyGovernor, SimulatedBattery
+from repro.core.lora import export_merged, lora_specs, merge_lora
+from repro.core.step import init_state, make_train_step
+from repro.models import registry
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedule import lr_schedule
+from repro.param import init_params
+
+
+# ---------------------------------------------------------------------------
+# C2: gradient accumulation == full batch (paper Tab 7 invariant)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_micro", [2, 4, 8])
+def test_grad_accum_equals_full_batch(n_micro):
+    cfg = configs.get_smoke("qwen15_05b")
+    tcfg = TrainConfig(global_batch=8, seq_len=8, compute_dtype="float32",
+                       attention_impl="streaming", attn_chunk=4)
+    params = init_params(jax.random.PRNGKey(0), registry.param_specs(cfg))
+    batch = registry.make_batch(jax.random.PRNGKey(1), cfg, 8, 8)
+    loss_fn = lambda p, b: registry.loss_fn(cfg)(p, b, cfg, tcfg)
+
+    l1, _, g1 = value_and_grad_accumulated(loss_fn, params, batch, 1)
+    lk, _, gk = value_and_grad_accumulated(loss_fn, params, batch, n_micro)
+    np.testing.assert_allclose(float(l1), float(lk), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(gk)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_grad_compression_dtype():
+    cfg = configs.get_smoke("qwen15_05b")
+    tcfg = TrainConfig(global_batch=4, seq_len=8, compute_dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), registry.param_specs(cfg))
+    batch = registry.make_batch(jax.random.PRNGKey(1), cfg, 4, 8)
+    loss_fn = lambda p, b: registry.loss_fn(cfg)(p, b, cfg, tcfg)
+    _, _, g = value_and_grad_accumulated(loss_fn, params, batch, 2,
+                                         reduce_dtype=jnp.bfloat16)
+    assert all(x.dtype == jnp.bfloat16 for x in jax.tree.leaves(g))
+
+
+# ---------------------------------------------------------------------------
+# C6: LoRA
+# ---------------------------------------------------------------------------
+def test_lora_zero_init_is_identity():
+    """B=0 at init => merged model == base model."""
+    cfg = configs.get_smoke("qwen25_05b")
+    specs = registry.param_specs(cfg)
+    base = init_params(jax.random.PRNGKey(0), specs)
+    ls = lora_specs(specs, ("wq", "wv"), rank=4)
+    lora = init_params(jax.random.PRNGKey(1), ls)
+    merged = export_merged(base, lora, rank=4, alpha=32.0)
+    for (na, a), (nb, b) in zip(
+            __import__("repro.param", fromlist=["flatten_names"]).flatten_names(base),
+            __import__("repro.param", fromlist=["flatten_names"]).flatten_names(merged)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_lora_merge_math():
+    w = jnp.eye(4)
+    a = jnp.ones((4, 2)) * 0.5
+    b = jnp.ones((2, 4)) * 0.25
+    base = {"wq": w}
+    lora = {"wq": {"a": a, "b": b}}
+    merged = merge_lora(base, lora, rank=2, alpha=4.0, train=False)
+    expect = w + (4.0 / 2) * (a @ b)
+    np.testing.assert_allclose(np.asarray(merged["wq"]), np.asarray(expect),
+                               rtol=1e-6)
+
+
+def test_lora_trains_only_adapter():
+    cfg = configs.get_smoke("qwen25_05b")
+    tcfg = TrainConfig(global_batch=2, seq_len=8, lora_rank=4,
+                       compute_dtype="float32", learning_rate=1e-2,
+                       warmup_steps=0, total_steps=4)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    base_before = jax.tree.map(jnp.copy, state["base"])
+    lora_before = jax.tree.map(jnp.copy, state["lora"])
+    step = jax.jit(make_train_step(cfg, tcfg))
+    batch = registry.make_batch(jax.random.PRNGKey(1), cfg, 2, 8)
+    for _ in range(2):
+        state, m = step(state, batch)
+    for a, b in zip(jax.tree.leaves(base_before),
+                    jax.tree.leaves(state["base"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    moved = any(float(jnp.abs(a - b).max()) > 0 for a, b in
+                zip(jax.tree.leaves(lora_before),
+                    jax.tree.leaves(state["lora"])))
+    assert moved
+
+
+# ---------------------------------------------------------------------------
+# Optimizer + schedule
+# ---------------------------------------------------------------------------
+def test_adamw_against_numpy_reference():
+    rng = np.random.default_rng(0)
+    p0 = rng.normal(size=(5, 3)).astype(np.float32)
+    g = rng.normal(size=(5, 3)).astype(np.float32)
+    params = {"w": jnp.asarray(p0)}
+    opt = adamw_init(params)
+    lr, b1, b2, eps, wd = 1e-2, 0.9, 0.999, 1e-8, 0.01
+    new_p, new_opt = adamw_update({"w": jnp.asarray(g)}, opt, params, lr=lr,
+                                  beta1=b1, beta2=b2, eps=eps,
+                                  weight_decay=wd)
+    m = (1 - b1) * g
+    v = (1 - b2) * g * g
+    mh = m / (1 - b1)
+    vh = v / (1 - b2)
+    ref = p0 - lr * (mh / (np.sqrt(vh) + eps) + wd * p0)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), ref, rtol=1e-5)
+    assert int(new_opt["count"]) == 1
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(norm_cap=st.floats(0.1, 10.0), scale=st.floats(0.01, 100.0))
+def test_clip_by_global_norm(norm_cap, scale):
+    g = {"a": jnp.ones((4,)) * scale, "b": jnp.ones((2, 2)) * scale}
+    clipped, norm = clip_by_global_norm(g, norm_cap)
+    from repro.optim import global_norm
+    assert float(global_norm(clipped)) <= norm_cap * (1 + 1e-4)
+
+
+def test_lr_schedule_shapes():
+    lrs = [float(lr_schedule(s, base_lr=1.0, warmup_steps=10,
+                             total_steps=100, kind="cosine"))
+           for s in range(100)]
+    assert lrs[0] == 0.0
+    assert abs(max(lrs) - 1.0) < 1e-6
+    assert lrs[10] == max(lrs)
+    assert lrs[-1] < 0.2
+
+
+# ---------------------------------------------------------------------------
+# C5: energy governor (paper Fig 11 behavior)
+# ---------------------------------------------------------------------------
+def test_governor_stretches_interval_below_threshold():
+    sleeps = []
+    gov = EnergyGovernor(check_every=1, threshold=0.6, reduction=0.5,
+                         monitor=SimulatedBattery(level=100.0,
+                                                  drain_per_unit=5.0),
+                         sleep_fn=sleeps.append)
+    step_time = 0.08
+    for step in range(20):
+        gov.after_step(step, step_time)
+    # battery crosses 60% at step 8 (100 - 5/step)
+    pre = [h for h in gov.history if not h["throttled"]]
+    post = [h for h in gov.history if h["throttled"]]
+    assert pre and post
+    assert all(h["delay"] == 0 for h in pre)
+    # interval stretches to t/(1-rho) = 2x
+    for h in post:
+        np.testing.assert_allclose(h["interval"], step_time / 0.5, rtol=1e-6)
+
+
+def test_governor_check_every_k():
+    gov = EnergyGovernor(check_every=5, threshold=0.99, reduction=0.5,
+                         monitor=SimulatedBattery(level=100.0,
+                                                  drain_per_unit=50.0),
+                         sleep_fn=lambda s: None)
+    gov.after_step(1, 0.1)  # below threshold but not a check step
+    assert not gov.throttled
+    gov.after_step(5, 0.1)
+    assert gov.throttled

@@ -1,0 +1,98 @@
+"""Extra hypothesis property tests on system invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(s=st.integers(1, 16), d=st.sampled_from([4, 8, 16]),
+                  theta=st.sampled_from([100.0, 10000.0]))
+def test_rope_preserves_norm_and_relative_positions(s, d, theta):
+    """RoPE is a rotation: per-pair norms unchanged; q.k depends only on the
+    positional difference."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, s, 1, d))
+    pos = jnp.arange(s)[None]
+    y = L.apply_rope(x, pos, theta)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # shift invariance of inner products
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, d))
+    for shift in (0, 3):
+        qa = L.apply_rope(q, jnp.array([[5 + shift]]), theta)
+        ka = L.apply_rope(k, jnp.array([[2 + shift]]), theta)
+        if shift == 0:
+            base = float(jnp.sum(qa * ka))
+        else:
+            np.testing.assert_allclose(float(jnp.sum(qa * ka)), base,
+                                       rtol=1e-4, atol=1e-5)
+
+
+def test_mrope_equals_rope_for_text_positions():
+    """When all three m-rope streams share a position (pure text), M-RoPE
+    must reduce to standard RoPE."""
+    d = 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 6, 3, d))
+    pos = jnp.tile(jnp.arange(6)[None], (2, 1))
+    pos3 = jnp.stack([pos, pos, pos], axis=1)
+    a = L.apply_rope(x, pos, 10000.0)
+    b = L.apply_mrope(x, pos3, (3, 3, 2), 10000.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-6)
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(v=st.integers(8, 64), pad=st.integers(0, 32))
+def test_padded_vocab_logits_never_win(v, pad):
+    logits = jax.random.normal(jax.random.PRNGKey(0), (4, v + pad)) * 10
+    p = {"tok": jnp.eye(v + pad, 8)}
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+    out = L.unembed(p, x, tie=True, true_vocab=v)
+    assert int(jnp.argmax(out, -1).max()) < v
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(b=st.integers(1, 3), s=st.integers(2, 12),
+                  d=st.sampled_from([8, 16]))
+def test_norms_finite_and_scale_invariant_rms(b, s, d):
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, s, d)) * 100
+    p = {"scale": jnp.ones((d,))}
+    y1 = L.apply_norm(p, x, "rmsnorm")
+    y2 = L.apply_norm(p, x * 7.0, "rmsnorm")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4,
+                               atol=1e-5)
+    assert bool(jnp.isfinite(y1).all())
+
+
+def test_fp8_param_cast_roundtrip_small_error():
+    """Serving with fp8-stored weights (hc_d1): dequant error bounded."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 64)) * 0.05
+    w8 = w.astype(jnp.float8_e4m3fn).astype(jnp.bfloat16)
+    rel = float(jnp.abs(w8.astype(jnp.float32) - w).max() /
+                jnp.abs(w).max())
+    assert rel < 0.08  # e4m3 relative step
+
+
+def test_moe_seq_chunks_equivalence():
+    """Sequence-chunked MoE ~= unchunked when capacity is not binding."""
+    import dataclasses
+    from repro import configs
+    from repro.config import TrainConfig
+    from repro.models.moe import apply_moe
+    from repro.models import registry
+    from repro.param import init_params
+    cfg = dataclasses.replace(configs.get_smoke("dbrx_132b"),
+                              capacity_factor=4.0)
+    params = init_params(jax.random.PRNGKey(0), registry.param_specs(cfg))
+    p = jax.tree.map(lambda a: a[0], params["blocks"]["moe"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)) * 0.1
+    t1 = TrainConfig(compute_dtype="float32", moe_seq_chunks=1)
+    t4 = TrainConfig(compute_dtype="float32", moe_seq_chunks=4)
+    y1, _ = apply_moe(p, x, cfg, t1)
+    y4, _ = apply_moe(p, x, cfg, t4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4), rtol=2e-4,
+                               atol=2e-5)
