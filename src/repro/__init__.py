@@ -1,0 +1,7 @@
+"""JAX reproduction of MobileFineTuner (fine-tuning LLMs on mobile phones).
+
+Subpackages: models, core (C1-C6 runtime), offload (C1 phone realization),
+checkpoint, data, optim, launch, runtime, kernels, configs.
+"""
+
+__version__ = "0.1.0"

@@ -11,6 +11,9 @@
   payload stores the full logical arrays (single-host container semantics;
   on a real pod each host writes its addressable shards — noted in DESIGN.md)
 - retention: keep the newest ``keep`` checkpoints.
+- offload-aware: under ``--offload-segments`` the state already lives in mmap
+  segment files, so ``save_offload`` just hardlinks them (zero-copy) and
+  ``restore_offload`` hardlinks them back (see repro/offload/).
 """
 from __future__ import annotations
 
@@ -106,6 +109,57 @@ def restore(directory: str, like_state, step: Optional[int] = None,
     return jax.tree.unflatten(treedef, new_leaves), step
 
 
+# ----------------------------------------------------------------------------
+# Segment-offload checkpoints (paper C1 phone realization; repro/offload/)
+# ----------------------------------------------------------------------------
+# The offload engine already keeps the whole state in mmap segment files, so
+# a checkpoint is just a hardlink snapshot of those files (zero-copy: no byte
+# of state is staged through RAM).  The engine flips to copy-on-write, so
+# later training steps never mutate the snapshot's inodes.
+
+def save_offload(ostate, directory: str, step: int, keep: int = 3) -> str:
+    """Snapshot an ``OffloadedTrainState`` into ``<dir>/step_<n>/segments``.
+    Atomic (tmp + rename) and subject to the same retention as ``save``."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f".tmp-{step}")
+    final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    ostate.snapshot(os.path.join(tmp, "segments"))
+    manifest = {"step": step, "time": time.time(), "offload": True,
+                "state_bytes": int(ostate.state_bytes)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+def is_offload_checkpoint(directory: str, step: int) -> bool:
+    return os.path.isdir(os.path.join(directory, f"step_{step:08d}",
+                                      "segments"))
+
+
+def restore_offload(directory: str, work_dir: str, like_params,
+                    step: Optional[int] = None, *, max_resident: int = 2,
+                    prefetch: bool = True):
+    """Reattach to an offload checkpoint by hardlinking its segment files
+    into ``work_dir`` (copy-on-write).  Returns (OffloadedTrainState, step)."""
+    from repro.offload.state import OffloadedTrainState
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    seg_dir = os.path.join(directory, f"step_{step:08d}", "segments")
+    ostate = OffloadedTrainState.from_checkpoint(
+        seg_dir, work_dir, like_params, max_resident=max_resident,
+        prefetch=prefetch)
+    return ostate, step
+
+
 class CheckpointStore:
     """Async wrapper with SIGTERM-safe flush (preemption tolerance)."""
 
@@ -132,3 +186,9 @@ class CheckpointStore:
     def save_sync(self, state, step: int):
         self.wait()
         return save(state, self.directory, step, keep=self.keep)
+
+    def save_offload(self, ostate, step: int):
+        """Zero-copy (hardlink) snapshot of an OffloadedTrainState — cheap
+        enough that no async thread is needed."""
+        self.wait()
+        return save_offload(ostate, self.directory, step, keep=self.keep)

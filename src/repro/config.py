@@ -168,6 +168,12 @@ class TrainConfig:
     scan_layers: bool = True
     attn_chunk: int = 512              # streaming attention KV-chunk
 
+    # --- segment-wise parameter offload (paper C1, phone realization) ---
+    offload_segments: int = 0          # 0 -> in-memory; N -> page (p,m,v) to N segment files
+    offload_dir: str = ""              # "" -> <out_dir>/offload (or runs/offload)
+    offload_resident: int = 2          # LRU window size in segments
+    offload_prefetch: bool = True      # background double-buffered prefetch
+
     # --- LoRA (paper C6) ---
     lora_rank: int = 0                 # 0 -> Full-FT
     lora_alpha: float = 32.0

@@ -114,6 +114,36 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
     return train_step
 
 
+def make_grad_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    """Forward/backward only — for the segment-wise offload path (C1 phone
+    realization), where the optimizer update runs *outside* jit, streaming
+    (p, m, v) segments through an LRU window (see repro/offload/).
+
+    Returns ``grad_step(params, batch) -> (loss, metrics, grads)`` with
+    gradients already clipped (same order as ``make_train_step``).
+    Full-FT only: LoRA state is adapter-sized and never needs offload.
+    """
+    if tcfg.lora_rank > 0:
+        raise ValueError("offload grad step supports Full-FT only "
+                         "(lora_rank must be 0)")
+    model_loss = registry.loss_fn(cfg)
+    reduce_dtype = (dtype_of(tcfg.grad_reduce_dtype)
+                    if tcfg.grad_reduce_dtype else None)
+
+    def grad_step(params, batch):
+        def loss_of(p, mb):
+            return model_loss(p, mb, cfg, tcfg)
+
+        loss, metrics, grads = value_and_grad_accumulated(
+            loss_of, params, batch, tcfg.microbatches, reduce_dtype)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return loss, metrics, grads
+
+    return grad_step
+
+
 def make_eval_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
     model_loss = registry.loss_fn(cfg)
 

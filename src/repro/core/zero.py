@@ -41,6 +41,22 @@ def place_params(params, specs, mesh: Mesh, preset: str):
                                            jax.tree.leaves(sh)))
 
 
+def offload_resident_bytes(specs, num_segments: int, window: int = 2,
+                           param_bytes: int = 4, moment_bytes: int = 8):
+    """Analytic peak resident state bytes of the *phone* realization of C1
+    (segment-wise offload, repro/offload/): full params stay resident for
+    fwd/bwd, but the (p, m, v) optimizer stream only keeps ``window`` of
+    ``num_segments`` segments in RAM.  Returns (full_state, resident) bytes —
+    the pair the mem-chain benchmark reports next to the GSPMD accounting."""
+    n = 0
+    for s in jax.tree.leaves(specs, is_leaf=is_spec):
+        n += int(np.prod(s.shape))
+    full_state = n * (param_bytes + moment_bytes)
+    seg = full_state / max(num_segments, 1)
+    resident = n * param_bytes + min(window, num_segments) * seg
+    return full_state, int(resident)
+
+
 def bytes_per_device(specs, mesh: Mesh, preset: str, dtype_bytes: int = 4):
     """Analytic per-device parameter bytes under a rule preset — the ZeRO
     'memory liberated' accounting used by the mem-chain benchmark."""

@@ -21,14 +21,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.config import ModelConfig, TrainConfig
-from repro.checkpoint.store import CheckpointStore, latest_step, restore
+from repro.config import ModelConfig, TrainConfig, dtype_of
+from repro.checkpoint.store import (CheckpointStore, is_offload_checkpoint,
+                                    latest_step, restore, restore_offload)
 from repro.core.energy import EnergyGovernor, SimulatedBattery
-from repro.core.step import init_state, make_eval_step, make_train_step
+from repro.core.step import (init_state, make_eval_step, make_grad_step,
+                             make_train_step)
 from repro.data.corpus import synthetic_wikitext
 from repro.data.dataset import LMDataset, packed_batches
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import registry
+from repro.offload.state import OffloadedTrainState, offload_dir_for
+from repro.optim.schedule import lr_schedule
+from repro.param import abstract_params
 from repro.runtime.metrics import MetricsObserver
 from repro.runtime.visualizer import write_dashboard
 
@@ -47,6 +52,10 @@ def train_loop(cfg: ModelConfig, tcfg: TrainConfig, *, out_dir: Optional[str],
                seed: int = 0, resume: bool = True, eval_every: int = 0,
                governor: Optional[EnergyGovernor] = None,
                dataset=None, print_fn=print):
+    if tcfg.offload_segments > 0:
+        return offload_train_loop(cfg, tcfg, out_dir=out_dir, seed=seed,
+                                  resume=resume, governor=governor,
+                                  dataset=dataset, print_fn=print_fn)
     ds = dataset or build_data(cfg, tcfg, seed=seed)
     obs = MetricsObserver(out_dir=out_dir, print_fn=print_fn)
     step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
@@ -58,6 +67,10 @@ def train_loop(cfg: ModelConfig, tcfg: TrainConfig, *, out_dir: Optional[str],
         ckdir = os.path.join(out_dir, "ckpt")
         store = CheckpointStore(ckdir, keep=tcfg.keep_checkpoints)
         if resume and latest_step(ckdir) is not None:
+            if is_offload_checkpoint(ckdir, latest_step(ckdir)):
+                raise ValueError(
+                    f"{ckdir} holds segment-offload checkpoints; resume with "
+                    f"--offload-segments N (or point --out elsewhere)")
             state, start = restore(ckdir, state)
             start = int(start)
             if print_fn:
@@ -98,6 +111,108 @@ def train_loop(cfg: ModelConfig, tcfg: TrainConfig, *, out_dir: Optional[str],
     return state, obs
 
 
+def offload_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
+                       out_dir: Optional[str], seed: int = 0,
+                       resume: bool = True,
+                       governor: Optional[EnergyGovernor] = None,
+                       dataset=None, print_fn=print):
+    """Training with segment-wise state offload (paper §4.1.1 C1, phone
+    realization — repro/offload/).
+
+    fwd/bwd runs jitted on the full in-memory params; the AdamW update then
+    streams the (p, m, v) segments through a small LRU window with
+    double-buffered prefetch, so peak resident optimizer state is
+    ``offload_resident / offload_segments`` of the whole — decoupled from
+    model size.  Checkpoints hardlink the segment files (zero-copy)."""
+    ds = dataset or build_data(cfg, tcfg, seed=seed)
+    obs = MetricsObserver(out_dir=out_dir, print_fn=print_fn)
+    grad_fn = jax.jit(make_grad_step(cfg, tcfg))
+    work_dir = offload_dir_for(out_dir, tcfg.offload_dir)
+    like_params = abstract_params(registry.param_specs(cfg),
+                                  dtype=dtype_of(tcfg.param_dtype))
+
+    store = None
+    ckdir = os.path.join(out_dir, "ckpt") if (
+        tcfg.checkpoint_every > 0 and out_dir) else None
+    ostate = None
+    if ckdir:
+        store = CheckpointStore(ckdir, keep=tcfg.keep_checkpoints)
+        last = latest_step(ckdir)
+        if resume and last is not None:
+            if not is_offload_checkpoint(ckdir, last):
+                raise ValueError(
+                    f"{ckdir} holds in-memory checkpoints; resume without "
+                    f"--offload-segments (or point --out elsewhere)")
+            ostate, start = restore_offload(
+                ckdir, work_dir, like_params, last,
+                max_resident=tcfg.offload_resident,
+                prefetch=tcfg.offload_prefetch)
+            if print_fn:
+                print_fn(f"[resume] offload checkpoint step {start}")
+    if ostate is None:
+        state = init_state(jax.random.PRNGKey(seed), cfg, tcfg)
+        ostate = OffloadedTrainState.create(
+            state, work_dir, tcfg.offload_segments,
+            max_resident=tcfg.offload_resident,
+            prefetch=tcfg.offload_prefetch)
+        del state  # from here on the segment files own the optimizer state
+
+    if store is not None:
+        def _flush(signum, frame):  # preemption tolerance
+            store.save_offload(ostate, ostate.step)
+            raise SystemExit(128 + signum)
+        try:
+            signal.signal(signal.SIGTERM, _flush)
+        except ValueError:
+            pass  # not the main thread
+
+    params = ostate.materialize_params()
+    start = ostate.step
+    batches = packed_batches(ds, tcfg.global_batch, seed=seed, epochs=10_000)
+    for _ in range(start):
+        next(batches)  # deterministic data order on resume
+
+    tokens_per_step = tcfg.global_batch * tcfg.seq_len
+    for step in range(start, tcfg.total_steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        obs.start_step()
+        loss, metrics, grads = grad_fn(params, batch)
+        lr = lr_schedule(jnp.asarray(step, jnp.int32),
+                         base_lr=tcfg.learning_rate,
+                         warmup_steps=tcfg.warmup_steps,
+                         total_steps=tcfg.total_steps, kind=tcfg.schedule)
+        params = ostate.apply_update(grads, lr=lr, beta1=tcfg.beta1,
+                                     beta2=tcfg.beta2, eps=tcfg.eps,
+                                     weight_decay=tcfg.weight_decay)
+        del grads
+        jax.block_until_ready(loss)
+        metrics = dict(metrics)
+        metrics["lr"] = lr
+        row = obs.end_step(step, metrics, tokens=tokens_per_step,
+                           battery=(governor.monitor.fraction()
+                                    if governor else 1.0))
+        if governor is not None:
+            governor.after_step(step, row["step_time_s"])
+        if store and (step + 1) % tcfg.checkpoint_every == 0:
+            store.save_offload(ostate, step + 1)
+    if store:
+        store.save_offload(ostate, ostate.step)
+    if print_fn:
+        s = ostate.stats()
+        print_fn(f"[offload] segments {ostate.store.num_segments} | state "
+                 f"{s['store_bytes']/1e6:.1f} MB | peak window "
+                 f"{s['peak_resident_bytes']/1e6:.1f} MB | prefetch hit "
+                 f"{s['prefetch_hits']}/{s['prefetch_hits']+s['sync_loads']}")
+    ostate.close()
+    obs.flush_csv()
+    if out_dir:
+        write_dashboard(obs.rows, os.path.join(out_dir, "dashboard.html"),
+                        title=f"{cfg.name} | offload x{ostate.store.num_segments}")
+    state = {"params": params, "step": jnp.asarray(ostate.step, jnp.int32),
+             "offload": ostate}
+    return state, obs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2_124m")
@@ -111,6 +226,13 @@ def main():
     ap.add_argument("--lora-rank", type=int, default=0)
     ap.add_argument("--remat", default="none")
     ap.add_argument("--attention", default="streaming")
+    ap.add_argument("--offload-segments", type=int, default=0,
+                    help="page (param, m, v) state to N mmap segment files; "
+                         "optimizer updates stream segment-by-segment (C1)")
+    ap.add_argument("--offload-dir", default="",
+                    help="segment-file directory (default <out>/offload)")
+    ap.add_argument("--offload-resident", type=int, default=2,
+                    help="LRU window size in segments")
     ap.add_argument("--out", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
@@ -127,7 +249,10 @@ def main():
         lora_alpha=32.0 if args.lora_rank else 0.0,
         remat_policy=args.remat, attention_impl=args.attention,
         compute_dtype="float32", checkpoint_every=args.checkpoint_every,
-        checkpoint_dir=args.out or "")
+        checkpoint_dir=args.out or "",
+        offload_segments=args.offload_segments,
+        offload_dir=args.offload_dir,
+        offload_resident=args.offload_resident)
     governor = None
     if args.energy:
         governor = EnergyGovernor(monitor=SimulatedBattery(

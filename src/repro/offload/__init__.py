@@ -1,0 +1,17 @@
+"""Segment-wise parameter offload (paper §4.1.1, C1 — phone realization).
+
+The TPU realization of C1 lives in ``repro/core/zero.py`` (GSPMD FSDP).
+This package is the *single-host* realization the paper actually ships on
+phones: the flattened param/optimizer pytree is partitioned into contiguous
+segments backed by memory-mapped files; only a small LRU window of segments
+is resident, a background double-buffered prefetcher loads segment ``i+1``
+while segment ``i`` computes, and dirty (updated) segments are written back.
+
+- segments.py  SegmentStore: mapping table + mmap segment files + COW snapshot
+- engine.py    OffloadEngine: LRU residency window + prefetch + write-back
+- state.py     OffloadedTrainState: segment-by-segment AdamW update
+"""
+from repro.offload.segments import (LeafRecord, SegmentStore,  # noqa: F401
+                                    plan_segments)
+from repro.offload.engine import OffloadEngine, Prefetcher  # noqa: F401
+from repro.offload.state import OffloadedTrainState  # noqa: F401

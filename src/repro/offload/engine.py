@@ -1,0 +1,209 @@
+"""Residency engine over a SegmentStore (paper §4.1.1).
+
+``OffloadEngine`` keeps at most ``max_resident`` segments in RAM in an LRU
+window.  A background ``Prefetcher`` thread double-buffers reads: while
+segment ``i`` is being consumed by the optimizer, segment ``i+1`` streams in
+from its mmap file, hiding the page-in latency behind compute.  Evicted
+segments that were marked dirty are written back to their segment files
+before leaving the window.
+
+The engine tracks the statistics the mem-chain benchmark reports:
+window hits/misses, prefetch hit rate, bytes read/written, and the peak
+resident segment bytes (the number the paper's C1 drives down).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.offload.segments import SegmentStore
+
+
+class Prefetcher:
+    """Background double-buffered segment loader.
+
+    ``schedule(i)`` queues segment ``i``; a daemon thread loads it into a
+    bounded buffer (``depth`` slots — 2 = classic double buffering).
+    ``take(i)`` hands the buffered copy over (or loads synchronously on a
+    miss).  The buffer is consume-once: ownership moves to the caller.
+    """
+
+    def __init__(self, store: SegmentStore, depth: int = 2):
+        self._store = store
+        self._depth = max(1, depth)
+        self._lock = threading.Condition()
+        self._queue: list = []
+        self._buffers: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()
+        self._inflight: set = set()
+        self._closed = False
+        self.prefetch_hits = 0
+        self.sync_loads = 0
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            with self._lock:
+                while not self._queue and not self._closed:
+                    self._lock.wait()
+                if self._closed:
+                    return
+                seg = self._queue.pop(0)
+                if seg in self._buffers or seg in self._inflight:
+                    continue
+                self._inflight.add(seg)
+            try:
+                data = self._store.read_segment(seg, copy=True)
+            except Exception:
+                # never strand the id in _inflight (take() would block
+                # forever); the consumer's sync fallback re-raises the
+                # real I/O error on the main thread
+                with self._lock:
+                    self._inflight.discard(seg)
+                    self._lock.notify_all()
+                continue
+            with self._lock:
+                self._inflight.discard(seg)
+                self._buffers[seg] = data
+                while len(self._buffers) > self._depth:
+                    self._buffers.popitem(last=False)  # drop oldest
+                self._lock.notify_all()
+
+    def schedule(self, seg: int):
+        if seg < 0 or seg >= self._store.num_segments:
+            return
+        with self._lock:
+            if (seg not in self._buffers and seg not in self._inflight
+                    and seg not in self._queue):
+                self._queue.append(seg)
+                self._lock.notify_all()
+
+    def take(self, seg: int) -> Dict[str, np.ndarray]:
+        with self._lock:
+            while seg in self._inflight or seg in self._queue:
+                self._lock.wait()
+            if seg in self._buffers:
+                self.prefetch_hits += 1
+                return self._buffers.pop(seg)
+        self.sync_loads += 1
+        return self._store.read_segment(seg, copy=True)
+
+    def invalidate(self, seg: int):
+        """Drop any buffered copy (stale after a write-back)."""
+        with self._lock:
+            self._buffers.pop(seg, None)
+            if seg in self._queue:
+                self._queue.remove(seg)
+
+    def close(self):
+        with self._lock:
+            self._closed = True
+            self._lock.notify_all()
+        self._thread.join(timeout=5.0)
+
+
+class OffloadEngine:
+    """LRU-resident window + prefetch + dirty write-back over segments."""
+
+    def __init__(self, store: SegmentStore, max_resident: int = 2,
+                 prefetch: bool = True):
+        assert max_resident >= 1
+        self.store = store
+        self.max_resident = max_resident
+        self._resident: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()
+        self._dirty: set = set()
+        self._prefetcher: Optional[Prefetcher] = (
+            Prefetcher(store, depth=max(1, max_resident - 1))
+            if prefetch else None)
+        # --- statistics ---
+        self.hits = 0
+        self.misses = 0
+        self.bytes_read = 0
+        self.bytes_written = 0
+        self.peak_resident_bytes = 0
+
+    # ------------------------------------------------------------------
+    def _resident_bytes(self) -> int:
+        return int(sum(self.store.seg_nbytes[s] for s in self._resident))
+
+    def prefetch(self, seg: int):
+        if self._prefetcher is not None and seg not in self._resident:
+            self._prefetcher.schedule(seg)
+
+    def acquire(self, seg: int) -> Dict[str, np.ndarray]:
+        """Make segment ``seg`` resident (evicting + writing back LRU
+        segments as needed) and return its leaf dict.  The dict is owned by
+        the window: mutate in place and ``mark_dirty`` to persist."""
+        if seg in self._resident:
+            self.hits += 1
+            self._resident.move_to_end(seg)
+            return self._resident[seg]
+        self.misses += 1
+        if self._prefetcher is not None:
+            data = self._prefetcher.take(seg)
+        else:
+            data = self.store.read_segment(seg, copy=True)
+        self.bytes_read += self.store.seg_nbytes[seg]
+        self._resident[seg] = data
+        self._resident.move_to_end(seg)
+        while len(self._resident) > self.max_resident:
+            old, old_data = self._resident.popitem(last=False)
+            self._writeback(old, old_data)
+        self.peak_resident_bytes = max(self.peak_resident_bytes,
+                                       self._resident_bytes()
+                                       + self._prefetch_buffer_bytes())
+        return data
+
+    def _prefetch_buffer_bytes(self) -> int:
+        if self._prefetcher is None:
+            return 0
+        with self._prefetcher._lock:
+            segs = list(self._prefetcher._buffers)
+        return int(sum(self.store.seg_nbytes[s] for s in segs))
+
+    def mark_dirty(self, seg: int):
+        assert seg in self._resident, seg
+        self._dirty.add(seg)
+
+    def _writeback(self, seg: int, data: Dict[str, np.ndarray]):
+        if seg in self._dirty:
+            self.store.write_segment(seg, data)
+            self.bytes_written += self.store.seg_nbytes[seg]
+            self._dirty.discard(seg)
+            if self._prefetcher is not None:
+                self._prefetcher.invalidate(seg)
+
+    def release(self, seg: int):
+        """Drop a segment from the window (writing back if dirty)."""
+        data = self._resident.pop(seg, None)
+        if data is not None:
+            self._writeback(seg, data)
+
+    def flush(self):
+        """Write back every dirty resident segment (window stays resident)."""
+        for seg in list(self._resident):
+            self._writeback(seg, self._resident[seg])
+
+    def drop_all(self):
+        for seg in list(self._resident):
+            self.release(seg)
+
+    def close(self):
+        self.flush()
+        if self._prefetcher is not None:
+            self._prefetcher.close()
+
+    def stats(self) -> Dict[str, float]:
+        pf = self._prefetcher
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "prefetch_hits": pf.prefetch_hits if pf else 0,
+            "sync_loads": pf.sync_loads if pf else self.misses,
+            "bytes_read": self.bytes_read,
+            "bytes_written": self.bytes_written,
+            "peak_resident_bytes": self.peak_resident_bytes,
+            "store_bytes": self.store.total_bytes,
+        }

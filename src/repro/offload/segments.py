@@ -1,0 +1,262 @@
+"""Segment files + mapping table (paper §4.1.1).
+
+The paper partitions the parameter space into contiguous segments, keeps the
+active segment in RAM and pages the rest to flash, tracked by a mapping
+table.  Here a ``SegmentStore`` owns a directory of raw segment files
+(``seg_00000.bin`` ...) plus ``table.json`` — the mapping table recording,
+for every pytree leaf, which segment holds it and at which byte offset.
+
+Leaves are grouped (a group is never split across segments — e.g. the
+(param, m, v) triple of one tensor) and groups are packed contiguously into
+``num_segments`` byte-balanced segments.
+
+I/O is memory-mapped: reads slice an ``np.memmap`` (page-cache backed, no
+user-space staging), writes go through an ``r+`` map and are flushed before
+the map is dropped.  ``snapshot``/``link_clone`` hardlink the segment files
+(zero-copy checkpointing) and flip the store into copy-on-write mode so the
+snapshot inode is never mutated: the first later write to a segment rewrites
+it under a fresh inode via copy + atomic replace.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class LeafRecord(NamedTuple):
+    name: str
+    segment: int
+    offset: int      # byte offset inside the segment file
+    nbytes: int
+    shape: Tuple[int, ...]
+    dtype: str       # numpy dtype name ("float32", "bfloat16", ...)
+
+
+def _np_dtype(name: str) -> np.dtype:
+    if name == "bfloat16":
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(name)
+
+
+def _as_bytes(arr: np.ndarray) -> np.ndarray:
+    """Contiguous uint8 view of an array's buffer."""
+    arr = np.ascontiguousarray(arr)
+    return arr.reshape(-1).view(np.uint8) if arr.ndim else arr.view(np.uint8)
+
+
+def plan_segments(group_nbytes: Sequence[int], num_segments: int
+                  ) -> List[Tuple[int, int]]:
+    """Partition groups (in order) into ``num_segments`` contiguous,
+    byte-balanced spans.  Returns [start, end) group-index bounds; never
+    splits a group; never emits an empty segment (fewer segments than
+    requested when there are fewer groups)."""
+    n_groups = len(group_nbytes)
+    if n_groups == 0:
+        return []
+    n = max(1, min(int(num_segments), n_groups))
+    bounds: List[Tuple[int, int]] = []
+    start = 0
+    bytes_left = float(sum(group_nbytes))
+    for seg in range(n):
+        segs_left = n - seg
+        take_max = (n_groups - start) - (segs_left - 1)
+        target = bytes_left / segs_left
+        acc = 0.0
+        end = start
+        while end < start + take_max:
+            acc += group_nbytes[end]
+            end += 1
+            if segs_left > 1 and acc >= target:
+                break
+        bounds.append((start, end))
+        bytes_left -= acc
+        start = end
+    return bounds
+
+
+class SegmentStore:
+    """Mapping table + mmap-backed segment files for a flat named leaf set."""
+
+    TABLE = "table.json"
+
+    def __init__(self, directory: str, records: List[LeafRecord],
+                 seg_nbytes: List[int], meta: Optional[Dict] = None):
+        self.directory = directory
+        self.records = records
+        self.seg_nbytes = seg_nbytes
+        self.meta = dict(meta or {})
+        self._by_name = {r.name: r for r in records}
+        self._seg_leaves: List[List[LeafRecord]] = [
+            [] for _ in range(len(seg_nbytes))]
+        for r in records:
+            self._seg_leaves[r.segment].append(r)
+        self._cow = [False] * len(seg_nbytes)
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def create(cls, directory: str,
+               groups: Sequence[Sequence[Tuple[str, np.ndarray]]],
+               num_segments: int, meta: Optional[Dict] = None
+               ) -> "SegmentStore":
+        """Write ``groups`` (ordered lists of (name, array); a group is kept
+        within one segment) into ``num_segments`` segment files."""
+        os.makedirs(directory, exist_ok=True)
+        arrs = [[(n, np.asarray(a)) for n, a in g] for g in groups]
+        sizes = [sum(a.nbytes for _, a in g) for g in arrs]
+        bounds = plan_segments(sizes, num_segments)
+        records: List[LeafRecord] = []
+        seg_nbytes: List[int] = []
+        for seg, (g0, g1) in enumerate(bounds):
+            offset = 0
+            for name, a in (pair for g in arrs[g0:g1] for pair in g):
+                records.append(LeafRecord(name, seg, offset, a.nbytes,
+                                          tuple(a.shape), a.dtype.name))
+                offset += a.nbytes
+            seg_nbytes.append(offset)
+        store = cls(directory, records, seg_nbytes, meta)
+        flat = {n: a for g in arrs for n, a in g}
+        for seg in range(len(seg_nbytes)):
+            with open(store.segment_path(seg), "wb") as f:
+                f.truncate(seg_nbytes[seg])
+            store.write_segment(
+                seg, {r.name: flat[r.name] for r in store._seg_leaves[seg]})
+        store._write_table()
+        return store
+
+    @classmethod
+    def open(cls, directory: str) -> "SegmentStore":
+        with open(os.path.join(directory, cls.TABLE)) as f:
+            table = json.load(f)
+        records = [LeafRecord(r["name"], r["segment"], r["offset"],
+                              r["nbytes"], tuple(r["shape"]), r["dtype"])
+                   for r in table["leaves"]]
+        return cls(directory, records, table["seg_nbytes"],
+                   table.get("meta", {}))
+
+    @classmethod
+    def link_clone(cls, src_dir: str, dest_dir: str) -> "SegmentStore":
+        """Open a zero-copy working clone of ``src_dir`` at ``dest_dir``:
+        segment files are hardlinked (copied if the filesystem refuses) and
+        every segment starts in copy-on-write mode, so writes through the
+        clone never touch ``src_dir``."""
+        src = cls.open(src_dir)
+        os.makedirs(dest_dir, exist_ok=True)
+        for seg in range(src.num_segments):
+            _link_or_copy(src.segment_path(seg),
+                          os.path.join(dest_dir, cls._seg_name(seg)))
+        shutil.copyfile(os.path.join(src_dir, cls.TABLE),
+                        os.path.join(dest_dir, cls.TABLE))
+        store = cls(dest_dir, src.records, src.seg_nbytes, src.meta)
+        store._cow = [True] * store.num_segments
+        return store
+
+    def _write_table(self):
+        table = {"version": 1, "seg_nbytes": self.seg_nbytes,
+                 "meta": self.meta,
+                 "leaves": [r._asdict() for r in self.records]}
+        tmp = os.path.join(self.directory, self.TABLE + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(table, f)
+        os.replace(tmp, os.path.join(self.directory, self.TABLE))
+
+    def write_meta(self, **kw):
+        """Update mapping-table metadata (step counters etc.) atomically."""
+        self.meta.update(kw)
+        self._write_table()
+
+    # ------------------------------------------------------------------
+    # geometry
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _seg_name(seg: int) -> str:
+        return f"seg_{seg:05d}.bin"
+
+    def segment_path(self, seg: int) -> str:
+        return os.path.join(self.directory, self._seg_name(seg))
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.seg_nbytes)
+
+    @property
+    def total_bytes(self) -> int:
+        return int(sum(self.seg_nbytes))
+
+    def names(self) -> List[str]:
+        return [r.name for r in self.records]
+
+    def record(self, name: str) -> LeafRecord:
+        return self._by_name[name]
+
+    def segment_names(self, seg: int) -> List[str]:
+        return [r.name for r in self._seg_leaves[seg]]
+
+    # ------------------------------------------------------------------
+    # I/O
+    # ------------------------------------------------------------------
+    def read_segment(self, seg: int, copy: bool = True
+                     ) -> Dict[str, np.ndarray]:
+        """All leaves of one segment.  ``copy=False`` returns read-only
+        views into the page-cache mmap (zero-copy restore path); ``copy=True``
+        returns private arrays safe to mutate."""
+        mm = np.memmap(self.segment_path(seg), dtype=np.uint8, mode="r")
+        out = {}
+        for r in self._seg_leaves[seg]:
+            flat = mm[r.offset:r.offset + r.nbytes].view(_np_dtype(r.dtype))
+            arr = flat.reshape(r.shape)
+            out[r.name] = np.array(arr) if copy else arr
+        if copy:
+            del mm
+        return out
+
+    def write_segment(self, seg: int, named: Dict[str, np.ndarray]):
+        """Write (a subset of) one segment's leaves back and flush.  Breaks
+        any snapshot hardlink first (copy-on-write)."""
+        self._break_cow(seg)
+        mm = np.memmap(self.segment_path(seg), dtype=np.uint8, mode="r+")
+        for name, value in named.items():
+            r = self._by_name[name]
+            assert r.segment == seg, (name, r.segment, seg)
+            a = np.ascontiguousarray(np.asarray(value), _np_dtype(r.dtype))
+            assert a.nbytes == r.nbytes, (name, a.nbytes, r.nbytes)
+            mm[r.offset:r.offset + r.nbytes] = _as_bytes(a)
+        mm.flush()
+        del mm
+
+    def _break_cow(self, seg: int):
+        if not self._cow[seg]:
+            return
+        path = self.segment_path(seg)
+        tmp = path + ".cow"
+        shutil.copyfile(path, tmp)   # fresh inode; snapshot keeps the old one
+        os.replace(tmp, path)
+        self._cow[seg] = False
+
+    def snapshot(self, dest_dir: str):
+        """Zero-copy snapshot: hardlink every segment file + mapping table
+        into ``dest_dir`` and flip this store to copy-on-write so later
+        updates never mutate the snapshot."""
+        os.makedirs(dest_dir, exist_ok=True)
+        for seg in range(self.num_segments):
+            _link_or_copy(self.segment_path(seg),
+                          os.path.join(dest_dir, self._seg_name(seg)))
+        shutil.copyfile(os.path.join(self.directory, self.TABLE),
+                        os.path.join(dest_dir, self.TABLE))
+        self._cow = [True] * self.num_segments
+        return dest_dir
+
+
+def _link_or_copy(src: str, dest: str):
+    if os.path.exists(dest):
+        os.remove(dest)
+    try:
+        os.link(src, dest)
+    except OSError:           # cross-device or FS without hardlinks
+        shutil.copyfile(src, dest)

@@ -16,11 +16,21 @@ its logical axes + the active sharding rules.
 from __future__ import annotations
 
 import math
+import zlib
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def _flatten_with_path(tree, is_leaf=None):
+    # jax.tree.flatten_with_path only exists on newer jax; fall back to
+    # jax.tree_util on the pinned 0.4.x
+    fn = getattr(jax.tree, "flatten_with_path", None)
+    if fn is None:
+        fn = jax.tree_util.tree_flatten_with_path
+    return fn(tree, is_leaf=is_leaf)
 
 
 class ParamSpec(NamedTuple):
@@ -68,11 +78,13 @@ def _init_leaf(key, s: ParamSpec):
 
 def init_params(rng, specs, dtype=None):
     """Materialize parameters.  Deterministic per-leaf fold of the path hash."""
-    leaves, treedef = jax.tree.flatten_with_path(specs, is_leaf=is_spec)
+    leaves, treedef = _flatten_with_path(specs, is_leaf=is_spec)
     out = []
     for path, s in leaves:
         path_str = "/".join(str(p) for p in path)
-        key = jax.random.fold_in(rng, hash(path_str) % (2 ** 31))
+        # crc32, not hash(): str hash is randomized per process, which would
+        # make "same seed" give different params across runs
+        key = jax.random.fold_in(rng, zlib.crc32(path_str.encode()) % (2 ** 31))
         x = _init_leaf(key, s)
         if dtype is not None:
             x = x.astype(dtype)
@@ -101,7 +113,7 @@ def cast_tree(tree, dtype):
 
 def flatten_names(tree, is_leaf=None):
     """[(dotted.name, leaf)] — used for checkpoint manifests and LoRA targeting."""
-    leaves, _ = jax.tree.flatten_with_path(tree, is_leaf=is_leaf)
+    leaves, _ = _flatten_with_path(tree, is_leaf=is_leaf)
     out = []
     for path, leaf in leaves:
         parts = []

@@ -10,3 +10,31 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 
 jax.config.update("jax_default_matmul_precision", "highest")
+
+
+def hypothesis_or_stub():
+    """Import hypothesis, or return (stub, stub) whose ``@given`` marks the
+    decorated test skipped — mixed test modules keep their plain tests
+    runnable without the optional dep."""
+    try:
+        import hypothesis
+        import hypothesis.strategies as st
+        return hypothesis, st
+    except ImportError:
+        import pytest
+
+        class _St:
+            def __getattr__(self, name):
+                return lambda *a, **kw: None
+
+        class _Hyp:
+            @staticmethod
+            def settings(**kw):
+                return lambda f: f
+
+            @staticmethod
+            def given(*a, **kw):
+                return lambda f: pytest.mark.skip(
+                    "hypothesis not installed")(f)
+
+        return _Hyp(), _St()

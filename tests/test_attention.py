@@ -1,10 +1,10 @@
 """Memory-efficient attention (paper C4): streaming == naive exact softmax."""
-import hypothesis
-import hypothesis.strategies as st
+from conftest import hypothesis_or_stub
+
+hypothesis, st = hypothesis_or_stub()
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.attention import SENTINEL, attention, default_positions
 

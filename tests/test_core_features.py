@@ -2,8 +2,9 @@
 governor, C6 LoRA, optimizer, schedules."""
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
+from conftest import hypothesis_or_stub
+
+hypothesis, st = hypothesis_or_stub()
 import jax
 import jax.numpy as jnp
 import numpy as np

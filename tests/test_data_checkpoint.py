@@ -1,8 +1,9 @@
 """Data pipeline + checkpoint/fault-tolerance tests."""
 import os
 
-import hypothesis
-import hypothesis.strategies as st
+from conftest import hypothesis_or_stub
+
+hypothesis, st = hypothesis_or_stub()
 import jax
 import jax.numpy as jnp
 import numpy as np

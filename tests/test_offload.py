@@ -1,0 +1,255 @@
+"""Segment-wise parameter offload (paper §4.1.1 C1, phone realization).
+
+Covers: mapping-table planning, segment round-trip integrity, LRU dirty
+write-back, double-buffered prefetch, copy-on-write snapshots (zero-copy
+checkpointing), segment-wise AdamW equivalence, and the smoke-train
+equivalence of `--offload-segments` against the in-memory baseline.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint.store import (is_offload_checkpoint, latest_step,
+                                    restore_offload, save_offload)
+from repro.config import TrainConfig
+from repro.core.step import init_state
+from repro.core.zero import offload_resident_bytes
+from repro.models import registry
+from repro.offload import (OffloadEngine, OffloadedTrainState, SegmentStore,
+                           plan_segments)
+from repro.optim.adamw import adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# planning
+# ---------------------------------------------------------------------------
+def test_plan_segments_contiguous_and_complete():
+    sizes = [10, 200, 30, 40, 5, 100, 7, 60]
+    bounds = plan_segments(sizes, 4)
+    assert len(bounds) == 4
+    assert bounds[0][0] == 0 and bounds[-1][1] == len(sizes)
+    for (a0, a1), (b0, b1) in zip(bounds, bounds[1:]):
+        assert a1 == b0           # contiguous
+        assert a1 > a0            # non-empty
+
+
+def test_plan_segments_never_exceeds_group_count():
+    assert plan_segments([100], 8) == [(0, 1)]
+    assert plan_segments([1, 2], 8) == [(0, 1), (1, 2)]
+    assert plan_segments([], 4) == []
+
+
+def test_plan_segments_balances_bytes():
+    sizes = [64] * 32
+    bounds = plan_segments(sizes, 4)
+    per_seg = [sum(sizes[a:b]) for a, b in bounds]
+    assert max(per_seg) == min(per_seg) == sum(sizes) // 4
+
+
+# ---------------------------------------------------------------------------
+# segment store round trip
+# ---------------------------------------------------------------------------
+def _groups(seed=0, n=5, shape=(7, 3)):
+    rng = np.random.RandomState(seed)
+    return [[(f"p.l{i}", rng.randn(*shape).astype(np.float32)),
+             (f"m.l{i}", rng.randn(*shape).astype(np.float32)),
+             (f"v.l{i}", np.abs(rng.randn(*shape)).astype(np.float32))]
+            for i in range(n)]
+
+
+def test_segment_roundtrip_integrity(tmp_path):
+    groups = _groups()
+    store = SegmentStore.create(str(tmp_path / "s"), groups, 3)
+    flat = {n: a for g in groups for n, a in g}
+    seen = set()
+    for seg in range(store.num_segments):
+        for name, arr in store.read_segment(seg).items():
+            np.testing.assert_array_equal(arr, flat[name])
+            seen.add(name)
+    assert seen == set(flat)
+    # groups are never split across segments
+    for g in groups:
+        segs = {store.record(n).segment for n, _ in g}
+        assert len(segs) == 1
+    # reopen from the mapping table alone
+    re = SegmentStore.open(store.directory)
+    assert re.seg_nbytes == store.seg_nbytes
+    for seg in range(re.num_segments):
+        for name, arr in re.read_segment(seg).items():
+            np.testing.assert_array_equal(arr, flat[name])
+
+
+def test_read_segment_zero_copy_views(tmp_path):
+    store = SegmentStore.create(str(tmp_path / "s"), _groups(n=2), 1)
+    views = store.read_segment(0, copy=False)
+    for arr in views.values():
+        assert isinstance(arr, np.memmap) or arr.base is not None
+
+
+# ---------------------------------------------------------------------------
+# engine: LRU window, dirty write-back, prefetch
+# ---------------------------------------------------------------------------
+def test_lru_eviction_writes_back_dirty(tmp_path):
+    store = SegmentStore.create(str(tmp_path / "s"), _groups(), 3)
+    eng = OffloadEngine(store, max_resident=1, prefetch=False)
+    d0 = eng.acquire(0)
+    name = next(iter(d0))
+    d0[name][...] = 7.5
+    eng.mark_dirty(0)
+    eng.acquire(1)                     # evicts 0 -> write-back
+    fresh = SegmentStore.open(store.directory).read_segment(0)
+    np.testing.assert_array_equal(fresh[name],
+                                  np.full(fresh[name].shape, 7.5, np.float32))
+    eng.close()
+    assert eng.stats()["bytes_written"] == store.seg_nbytes[0]
+
+
+def test_flush_writes_resident_dirty_segments(tmp_path):
+    store = SegmentStore.create(str(tmp_path / "s"), _groups(), 2)
+    eng = OffloadEngine(store, max_resident=2, prefetch=False)
+    d1 = eng.acquire(1)
+    name = next(iter(d1))
+    d1[name][...] = -3.0
+    eng.mark_dirty(1)
+    eng.flush()
+    fresh = SegmentStore.open(store.directory).read_segment(1)
+    np.testing.assert_array_equal(fresh[name],
+                                  np.full(fresh[name].shape, -3.0, np.float32))
+    eng.close()
+
+
+def test_prefetch_hits_and_window_cap(tmp_path):
+    store = SegmentStore.create(str(tmp_path / "s"), _groups(n=8), 8)
+    eng = OffloadEngine(store, max_resident=2, prefetch=True)
+    eng.prefetch(0)
+    for seg in range(8):
+        eng.prefetch(seg + 1)
+        eng.acquire(seg)
+    s = eng.stats()
+    eng.close()
+    assert s["prefetch_hits"] > 0
+    assert s["peak_resident_bytes"] < store.total_bytes
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write snapshot (zero-copy checkpointing)
+# ---------------------------------------------------------------------------
+def test_snapshot_is_isolated_from_later_writes(tmp_path):
+    store = SegmentStore.create(str(tmp_path / "s"), _groups(), 2)
+    before = {n: a.copy() for s in range(2)
+              for n, a in store.read_segment(s).items()}
+    snap = store.snapshot(str(tmp_path / "snap"))
+    name = store.segment_names(0)[0]
+    store.write_segment(0, {name: np.zeros(store.record(name).shape,
+                                           np.float32)})
+    snap_store = SegmentStore.open(snap)
+    for seg in range(2):
+        for n, arr in snap_store.read_segment(seg).items():
+            np.testing.assert_array_equal(arr, before[n])
+    # ... while the live store sees the write
+    np.testing.assert_array_equal(store.read_segment(0)[name], 0.0)
+
+
+def test_link_clone_cow_isolates_source(tmp_path):
+    store = SegmentStore.create(str(tmp_path / "s"), _groups(), 2)
+    clone = SegmentStore.link_clone(store.directory, str(tmp_path / "c"))
+    name = clone.segment_names(0)[0]
+    orig = store.read_segment(0)[name].copy()
+    clone.write_segment(0, {name: orig + 1.0})
+    np.testing.assert_array_equal(store.read_segment(0)[name], orig)
+    np.testing.assert_array_equal(clone.read_segment(0)[name], orig + 1.0)
+
+
+# ---------------------------------------------------------------------------
+# segment-wise AdamW
+# ---------------------------------------------------------------------------
+def _toy_params():
+    k = jax.random.PRNGKey(0)
+    return {"w1": jax.random.normal(k, (16, 8)),
+            "b": jnp.zeros((8,)),
+            "nest": {"w2": jax.random.normal(jax.random.fold_in(k, 1),
+                                             (8, 4))}}
+
+
+def test_offloaded_update_matches_adamw(tmp_path):
+    params = _toy_params()
+    state = {"params": params, "opt": adamw_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    ost = OffloadedTrainState.create(state, str(tmp_path / "o"), 3)
+    p_mem, opt_mem = params, adamw_init(params)
+    for step in range(3):           # multi-step: count / bias correction
+        grads = jax.tree.map(lambda p: jnp.ones_like(p) * 0.1 * (step + 1),
+                             params)
+        p_mem, opt_mem = adamw_update(grads, opt_mem, p_mem, lr=1e-2)
+        p_off = ost.apply_update(grads, lr=1e-2)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            a, b, rtol=1e-4, atol=1e-5), p_mem, p_off)
+    ost.flush()
+    assert ost.count == 3
+    # moments round-trip through the segment files
+    ost2 = OffloadedTrainState.open(ost.store.directory, params)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        a, b, rtol=1e-4, atol=1e-5), p_mem, ost2.materialize_params())
+    assert ost2.count == 3
+    ost.close()
+    ost2.close()
+
+
+def test_offload_checkpoint_save_restore(tmp_path):
+    params = _toy_params()
+    state = {"params": params, "opt": adamw_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    ost = OffloadedTrainState.create(state, str(tmp_path / "work"), 2)
+    grads = jax.tree.map(jnp.ones_like, params)
+    p1 = ost.apply_update(grads, lr=1e-2)
+    ckdir = str(tmp_path / "ckpt")
+    save_offload(ost, ckdir, ost.step, keep=2)
+    assert latest_step(ckdir) == 1
+    assert is_offload_checkpoint(ckdir, 1)
+    # keep training past the snapshot — checkpoint must not move
+    ost.apply_update(grads, lr=1e-2)
+    ost.flush()
+    re, step = restore_offload(ckdir, str(tmp_path / "work2"), params)
+    assert step == 1 and re.count == 1
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5),
+                 p1, re.materialize_params())
+    ost.close()
+    re.close()
+
+
+def test_offload_resident_bytes_analytic():
+    specs = registry.param_specs(configs.get_smoke("gpt2_124m"))
+    full, res = offload_resident_bytes(specs, num_segments=8, window=2)
+    assert res < full
+    _, res_more_segs = offload_resident_bytes(specs, num_segments=32,
+                                              window=2)
+    assert res_more_segs < res      # more segments -> smaller window share
+
+
+# ---------------------------------------------------------------------------
+# smoke-train equivalence (acceptance criterion)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("steps", [4])
+def test_smoke_train_offload_matches_in_memory(tmp_path, steps):
+    from repro.launch.train import train_loop
+    cfg = configs.get_smoke("gpt2_124m")
+    base = dict(global_batch=4, seq_len=32, microbatches=1,
+                learning_rate=1e-4, total_steps=steps, warmup_steps=1,
+                compute_dtype="float32")
+    t_mem = TrainConfig(**base)
+    t_off = TrainConfig(**base, offload_segments=4,
+                        offload_dir=str(tmp_path / "segs"))
+    _, obs_mem = train_loop(cfg, t_mem, out_dir=None, print_fn=None)
+    _, obs_off = train_loop(cfg, t_off, out_dir=None, print_fn=None)
+    losses_mem = [r["loss"] for r in obs_mem.rows]
+    losses_off = [r["loss"] for r in obs_off.rows]
+    np.testing.assert_allclose(losses_mem, losses_off, atol=1e-3)
+    # offloaded state on disk equals full (p, m, v) footprint
+    st = SegmentStore.open(str(tmp_path / "segs"))
+    n_params = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(
+        registry.param_specs(cfg), is_leaf=lambda x: hasattr(x, "axes")))
+    assert st.total_bytes == n_params * 12   # fp32 p + m + v

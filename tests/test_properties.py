@@ -1,6 +1,7 @@
 """Extra hypothesis property tests on system invariants."""
-import hypothesis
-import hypothesis.strategies as st
+from conftest import hypothesis_or_stub
+
+hypothesis, st = hypothesis_or_stub()
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -46,7 +46,7 @@ def test_all_params_divisible_on_production_mesh(arch):
     sizes = {"data": 16, "model": 16, "pod": 2}
     rules = PRESETS["fsdp_tp"]
     import jax
-    for path, s in jax.tree.flatten_with_path(
+    for path, s in jax.tree_util.tree_flatten_with_path(
             registry.param_specs(cfg), is_leaf=is_spec)[0]:
         pspec = resolve_spec(s.axes, rules, ("pod",) + MESH_AXES)
         for dim, entry in zip(s.shape, tuple(pspec) + (None,) * 8):
