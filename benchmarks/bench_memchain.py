@@ -9,6 +9,10 @@ Chains (cumulative, as in the paper):
   offload   C1 *phone* realization: segment-wise state offload — measured
             peak resident (p, m, v) bytes + segment-stream throughput vs the
             everything-resident baseline (repro/offload/)
+  stream    C1 full depth: layer-streamed fwd/bwd — measured peak resident
+            param bytes while *computing* (block segments paged through the
+            window) + the analytic depth-independent bound
+            (repro/core/stream.py)
 
 Measured on the REAL gpt2-124m config (paper's model) by compiling the
 train step on CPU and reading memory_analysis().temp bytes — compile-only,
@@ -31,10 +35,12 @@ import numpy as np
 from benchmarks.common import row
 from repro import configs
 from repro.config import TrainConfig
-from repro.core.step import init_state, make_train_step, state_specs
-from repro.core.zero import bytes_per_device, offload_resident_bytes
+from repro.core.step import (init_state, make_stream_step, make_train_step,
+                             state_specs)
+from repro.core.zero import (bytes_per_device, offload_resident_bytes,
+                             stream_resident_bytes)
 from repro.models import registry
-from repro.offload import OffloadedTrainState
+from repro.offload import LayerStreamedState, OffloadedTrainState
 from repro.param import abstract_params, tree_bytes, tree_map_specs
 
 
@@ -95,6 +101,7 @@ def main(fast: bool = False):
     row("fig10_summary", 0.0,
         f"activation temp saved by chain123: {saved:.0f}%")
     offload_rows(fast)
+    stream_rows(fast)
 
 
 def offload_rows(fast: bool = False, num_segments: int = 8, window: int = 2):
@@ -142,6 +149,50 @@ def offload_rows(fast: bool = False, num_segments: int = 8, window: int = 2):
     row("offload_resident_analytic_124m", 0.0,
         f"state {full/1e6:.0f}MB -> resident {res/1e6:.0f}MB "
         f"(segs {num_segments} window {window})")
+
+
+def stream_rows(fast: bool = False, window: int = 2):
+    """C1 full depth: layer-streamed fwd/bwd — measured peak resident param
+    bytes while computing (head segment + a window of block segments) vs
+    everything-resident, plus the analytic depth-independent bound."""
+    arch = "gpt2_124m"
+    steps = 2 if fast else 4
+    cfg = configs.get_smoke(arch)
+    tcfg = TrainConfig(global_batch=4, seq_len=64, compute_dtype="float32",
+                       total_steps=steps, warmup_steps=1,
+                       offload_resident=window)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    batch = registry.make_batch(jax.random.PRNGKey(1), cfg,
+                                tcfg.global_batch, tcfg.seq_len)
+    batch["labels"] = batch["tokens"]
+    with tempfile.TemporaryDirectory() as d:
+        lst = LayerStreamedState.create(state, d + "/segs",
+                                        max_resident=window)
+        step = make_stream_step(cfg, tcfg, lst, d + "/grads")
+        step(batch, 0)                  # warm the per-stage jit caches
+        t0 = time.perf_counter()
+        for i in range(steps):
+            step(batch, i + 1)
+        dt = time.perf_counter() - t0
+        s = step.stats()
+        full = lst.store.total_bytes
+        row("stream_resident_measured", dt / steps * 1e6,
+            f"state resident {full/1e6:.2f}MB -> "
+            f"{s['param_peak_resident_bytes']/1e6:.2f}MB "
+            f"(x{full/max(s['param_peak_resident_bytes'],1):.1f}) "
+            f"segs {lst.n_layers}+head window {window} prefetch_hit "
+            f"{s['param_prefetch_hits']}"
+            f"/{s['param_prefetch_hits'] + s['param_sync_loads']}")
+        step.close()
+        lst.close()
+    # analytic, on the paper-scale model (no allocation): bound is
+    # head + (window + 1) layer segments, independent of n_layers
+    specs = registry.param_specs(configs.get(arch))
+    full, res = stream_resident_bytes(specs, window)
+    _, res_b16 = stream_resident_bytes(specs, window, moment_bytes=4)
+    row("stream_resident_analytic_124m", 0.0,
+        f"state {full/1e6:.0f}MB -> resident {res/1e6:.0f}MB "
+        f"(window {window}; {res_b16/1e6:.0f}MB with bf16 moments)")
 
 
 def main_cli():

@@ -43,6 +43,20 @@ def main():
           f"prefetch hit rate "
           f"{s['prefetch_hits']}/{s['prefetch_hits'] + s['sync_loads']}")
 
+    # full-depth variant: layer-streamed fwd/bwd — params page through the
+    # window during compute too (segments become layer-aligned), and bf16
+    # moments halve the m/v bytes.  Same loop API, one flag.
+    import dataclasses
+    scfg = dataclasses.replace(tcfg, offload_stream_params=True,
+                               offload_moment_dtype="bfloat16",
+                               remat_policy="none")
+    state, obs = train_loop(cfg, scfg, out_dir="runs/offload_example_stream",
+                            dataset=dataset)
+    s = state["offload"].stats()
+    print(f"\n[layer-streamed] final loss {obs.rows[-1]['loss']:.4f} | "
+          f"state on disk {s['store_bytes']/1e6:.2f} MB | peak resident "
+          f"param window {s['peak_resident_bytes']/1e6:.2f} MB")
+
 
 if __name__ == "__main__":
     main()

@@ -143,18 +143,33 @@ def is_offload_checkpoint(directory: str, step: int) -> bool:
                                       "segments"))
 
 
+def offload_checkpoint_layout(directory: str, step: int) -> str:
+    """Segment layout of an offload checkpoint: "layer_v1" (layer-aligned,
+    param-streaming) or "" (byte-balanced optimizer offload)."""
+    table = os.path.join(directory, f"step_{step:08d}", "segments",
+                         "table.json")
+    with open(table) as f:
+        return json.load(f).get("meta", {}).get("layout", "")
+
+
 def restore_offload(directory: str, work_dir: str, like_params,
                     step: Optional[int] = None, *, max_resident: int = 2,
                     prefetch: bool = True):
     """Reattach to an offload checkpoint by hardlinking its segment files
-    into ``work_dir`` (copy-on-write).  Returns (OffloadedTrainState, step)."""
-    from repro.offload.state import OffloadedTrainState
+    into ``work_dir`` (copy-on-write).  Dispatches on the stored segment
+    layout: layer-aligned checkpoints come back as ``LayerStreamedState``,
+    byte-balanced ones as ``OffloadedTrainState``.  Returns (state, step)."""
+    from repro.offload.state import (LAYER_LAYOUT, LayerStreamedState,
+                                     OffloadedTrainState)
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
     seg_dir = os.path.join(directory, f"step_{step:08d}", "segments")
-    ostate = OffloadedTrainState.from_checkpoint(
+    cls = (LayerStreamedState
+           if offload_checkpoint_layout(directory, step) == LAYER_LAYOUT
+           else OffloadedTrainState)
+    ostate = cls.from_checkpoint(
         seg_dir, work_dir, like_params, max_resident=max_resident,
         prefetch=prefetch)
     return ostate, step

@@ -173,6 +173,12 @@ class TrainConfig:
     offload_dir: str = ""              # "" -> <out_dir>/offload (or runs/offload)
     offload_resident: int = 2          # LRU window size in segments
     offload_prefetch: bool = True      # background double-buffered prefetch
+    offload_stream_params: bool = False  # layer-streamed fwd/bwd: segments are
+                                       # layer-aligned (one per block + head) and
+                                       # params page through the window during
+                                       # compute, not just the optimizer update
+    offload_moment_dtype: str = "float32"  # float32 | bfloat16 (halves m/v segment
+                                       # bytes; round-trip cast in the update)
 
     # --- LoRA (paper C6) ---
     lora_rank: int = 0                 # 0 -> Full-FT

@@ -144,6 +144,20 @@ def make_grad_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
     return grad_step
 
 
+def make_stream_step(cfg: ModelConfig, tcfg: TrainConfig, lstate,
+                     grad_dir: str) -> Callable:
+    """Layer-streamed train step (C1 phone realization, full depth): fwd/bwd
+    pages block params through the offload window (repro/core/stream.py)
+    instead of materializing the whole tree, then streams the AdamW update.
+
+    ``lstate`` is a ``LayerStreamedState``; ``grad_dir`` holds the gradient
+    scratch segments.  Returns ``step_fn(batch, step) -> (loss, metrics)``.
+    Full-FT only, like ``make_grad_step``.
+    """
+    from repro.core.stream import StreamedTrainStep
+    return StreamedTrainStep(cfg, tcfg, lstate, grad_dir)
+
+
 def make_eval_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
     model_loss = registry.loss_fn(cfg)
 

@@ -1,0 +1,240 @@
+"""Layer-streamed forward/backward over the offload engine (paper §4.1.1).
+
+PR 1 realized C1's segment-wise offload for the *optimizer* stream only —
+fwd/bwd still materialized the full parameter tree, so peak RSS during
+compute scaled with model size.  This module closes that gap: model
+execution is an explicit two-sweep program over layer-aligned segments
+(``LayerStreamedState``: one segment per block + one head segment), driven
+by the per-stage jitted entry points of ``repro.models.lm.make_layer_program``.
+
+Forward sweep   pull block ``i``'s params through the LRU window (prefetching
+                ``i+1`` while ``i`` computes), save only the layer-boundary
+                activation, carry the MoE aux sum.
+Backward sweep  walk blocks in reverse, re-pull each block's segment, replay
+                its forward inside ``jax.vjp`` (layer-granular recompute) and
+                sink the resulting per-block gradient into a layer-aligned
+                *gradient scratch store* — gradients never form a full tree
+                in RAM either.  A running sum of squares yields the global
+                grad norm for clipping without a second pass.
+Update sweep    stream (p, m, v) + grad segments jointly through their
+                windows and apply the very same ``adamw_update`` per segment
+                (shared count, clip scale folded into the gradients), so the
+                math matches the in-memory jit path to fp re-association
+                noise (equivalence-tested at 1e-5).
+
+Peak resident params during compute: the head segment plus about
+``offload_resident + 1`` layer segments — independent of ``n_layers``
+(``repro.core.zero.stream_resident_bytes`` gives the analytic bound; the
+mem-chain benchmark reports the measured one).
+
+Gradient accumulation (C2) composes: each micro-batch runs its own two
+sweeps and accumulates into the gradient scratch segments; the update sweep
+then applies the averaged, clipped gradient once.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, TrainConfig
+from repro.core.accumulate import split_batch
+from repro.models import transformer as T
+from repro.models.lm import make_layer_program
+from repro.offload.engine import OffloadEngine
+from repro.offload.segments import SegmentStore
+from repro.offload.state import LayerStreamedState, P
+from repro.optim.schedule import lr_schedule
+
+
+def make_grad_store(lstate: LayerStreamedState, directory: str
+                    ) -> SegmentStore:
+    """Gradient scratch segments mirroring the param store's layer-aligned
+    geometry (same segment <-> block mapping, fp32, params only — no
+    moments).  Rewritten every step, and the first micro-batch overwrites
+    every leaf, so the files are laid out sparse (``write=False``): no
+    parameter-sized burst of zero writes at startup — this path targets
+    flash-wear-sensitive devices."""
+    groups, labels = [], []
+    for seg in range(lstate.store.num_segments):
+        groups.append([
+            (n, np.zeros(lstate.store.record(P + n).shape, np.float32))
+            for n in lstate.seg_param_names(seg)])
+        labels.append(lstate.store.labels[seg])
+    return SegmentStore.create(directory, groups, len(groups),
+                               meta={"kind": "grad_scratch_v1"},
+                               group_labels=labels, write=False)
+
+
+class StreamedTrainStep:
+    """One optimizer step = forward sweep + backward sweep (grads into the
+    scratch store) per micro-batch, then one streamed AdamW update sweep.
+
+    ``step_fn(batch, step) -> (loss, metrics)`` — the streamed counterpart
+    of ``make_train_step``'s jitted body, matching its schedule, clipping
+    and AdamW semantics.
+    """
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 lstate: LayerStreamedState, grad_dir: str):
+        if tcfg.lora_rank > 0:
+            raise ValueError("layer streaming supports Full-FT only "
+                             "(lora_rank must be 0)")
+        self.cfg, self.tcfg = cfg, tcfg
+        self.lstate = lstate
+        self.program = make_layer_program(cfg, tcfg)
+        self.windows = np.asarray(T.layer_windows(cfg))
+        os.makedirs(grad_dir, exist_ok=True)
+        self.grad_engine = OffloadEngine(
+            make_grad_store(lstate, grad_dir),
+            max_resident=max(1, tcfg.offload_resident),
+            prefetch=tcfg.offload_prefetch)
+
+    # ------------------------------------------------------------------
+    def _sink(self, seg: int, names: List[str], grads: List[Any],
+              first: bool, last: bool, n_micro: int) -> float:
+        """Accumulate one segment's gradient leaves into the scratch store;
+        on the last micro-batch return this segment's contribution to
+        ||g/n||^2 (the averaged-gradient global norm)."""
+        gdata = self.grad_engine.acquire(seg)
+        sq = 0.0
+        for n, g in zip(names, grads):
+            g = np.asarray(g, np.float32)
+            if first:
+                gdata[n][...] = g
+            else:
+                gdata[n] += g
+            if last:
+                avg = gdata[n] / n_micro if n_micro > 1 else gdata[n]
+                sq += float(np.sum(np.square(avg, dtype=np.float32),
+                                   dtype=np.float32))
+        self.grad_engine.mark_dirty(seg)
+        return sq
+
+    def _forward_sweep(self, mb, keep_acts: bool):
+        """Stream the blocks forward, prefetching ``i+1`` while ``i``
+        computes.  Returns (head, acts, aux_sum, positions); ``acts`` holds
+        the L+1 layer-boundary activations when ``keep_acts`` (for the
+        backward sweep), else just the final one."""
+        prog, lstate = self.program, self.lstate
+        head = lstate.head_params()
+        x = prog.embed(head, mb)
+        positions = prog.positions(x.shape[0], x.shape[1])
+        acts = [x]
+        aux_sum = jnp.zeros((), jnp.float32)
+        lstate.prefetch_layer(0)
+        for i in range(lstate.n_layers):
+            lstate.prefetch_layer(i + 1)   # i+1 pages in while i computes
+            bp = lstate.layer_params(i)
+            x, aux = prog.block(bp, x, jnp.asarray(self.windows[i]),
+                                positions)
+            if keep_acts:
+                acts.append(x)
+            else:
+                acts[0] = x
+            aux_sum = aux_sum + aux
+        return head, acts, aux_sum, positions
+
+    def _two_sweeps(self, mb, first: bool, last: bool, n_micro: int):
+        """Forward + backward over one micro-batch.  Returns
+        (loss, metrics, sq_norm_contribution)."""
+        prog, lstate = self.program, self.lstate
+        L = lstate.n_layers
+        head, acts, aux_sum, positions = self._forward_sweep(
+            mb, keep_acts=True)
+
+        # ---- head loss + its VJP ----------------------------------------
+        loss, metrics, dhead, dx, daux = prog.head_vjp(head, acts[L], mb,
+                                                       aux_sum)
+
+        # ---- backward sweep: re-pull each block, VJP, sink grads --------
+        sq = 0.0
+        lstate.prefetch_layer(L - 1)
+        self.grad_engine.prefetch(L - 1)
+        for i in reversed(range(L)):
+            lstate.prefetch_layer(i - 1)
+            self.grad_engine.prefetch(
+                i - 1 if i > 0 else lstate.head_segment)
+            bp = lstate.layer_params(i)
+            dp, dx = prog.block_vjp(bp, acts[i],
+                                    jnp.asarray(self.windows[i]), positions,
+                                    dx, daux)
+            acts[i + 1] = None             # free the boundary activation
+            names = [f"blocks.{i}.{n}" for n in lstate.block_names]
+            sq += self._sink(i, names, jax.tree.leaves(dp), first, last,
+                             n_micro)
+
+        # embed's contribution lands on the same head tree as the unembed's
+        dhead_e = prog.embed_vjp(head, mb, dx)
+        dhead = jax.tree.map(jnp.add, dhead, dhead_e)
+        sq += self._sink(lstate.head_segment, lstate.head_names,
+                         jax.tree.leaves(dhead), first, last, n_micro)
+        return loss, metrics, sq
+
+    def _update_sweep(self, lr, clip_scale: float, n_micro: int):
+        """Stream (p, m, v) + grad segments and AdamW each in place."""
+        lstate, tcfg = self.lstate, self.tcfg
+        count = jnp.asarray(lstate.count, jnp.int32)
+        lstate.engine.prefetch(0)
+        self.grad_engine.prefetch(0)
+        for seg in range(lstate.store.num_segments):
+            lstate.engine.prefetch(seg + 1)
+            self.grad_engine.prefetch(seg + 1)
+            gdata = self.grad_engine.acquire(seg)
+            gnamed = {}
+            for n in lstate.seg_param_names(seg):
+                g = jnp.asarray(gdata[n], jnp.float32)
+                if n_micro > 1:
+                    g = g / n_micro
+                gnamed[n] = g * clip_scale
+            lstate._update_segment(seg, gnamed, count, lr=lr,
+                                   beta1=tcfg.beta1, beta2=tcfg.beta2,
+                                   eps=tcfg.eps,
+                                   weight_decay=tcfg.weight_decay)
+        lstate.finish_step()
+
+    # ------------------------------------------------------------------
+    def __call__(self, batch, step: int):
+        tcfg = self.tcfg
+        n = max(1, tcfg.microbatches)
+        micros = split_batch(batch, n) if n > 1 else None
+        loss_sum, metrics, sq = 0.0, None, 0.0
+        for j in range(n):
+            mb = (jax.tree.map(lambda a: a[j], micros) if n > 1 else batch)
+            loss, metrics, s = self._two_sweeps(mb, j == 0, j == n - 1, n)
+            loss_sum += float(loss)
+            sq += s
+        gnorm = math.sqrt(sq)
+        if tcfg.grad_clip > 0:
+            clip_scale = min(1.0, tcfg.grad_clip / max(gnorm, 1e-9))
+        else:
+            clip_scale = 1.0
+        lr = lr_schedule(jnp.asarray(step, jnp.int32),
+                         base_lr=tcfg.learning_rate,
+                         warmup_steps=tcfg.warmup_steps,
+                         total_steps=tcfg.total_steps, kind=tcfg.schedule)
+        self._update_sweep(lr, clip_scale, n)
+        metrics = dict(metrics)
+        metrics["loss"] = loss_sum / n
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return metrics["loss"], metrics
+
+    # ------------------------------------------------------------------
+    def loss_only(self, batch):
+        """Streamed forward pass (no grads, no update) — eval.  Returns
+        (loss, metrics)."""
+        head, acts, aux_sum, _ = self._forward_sweep(batch, keep_acts=False)
+        return self.program.head_loss(head, acts[0], batch, aux_sum)
+
+    def stats(self) -> Dict[str, Any]:
+        s = {"param_" + k: v for k, v in self.lstate.stats().items()}
+        s.update({"grad_" + k: v for k, v in self.grad_engine.stats().items()})
+        return s
+
+    def close(self):
+        self.grad_engine.close()

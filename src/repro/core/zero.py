@@ -57,6 +57,29 @@ def offload_resident_bytes(specs, num_segments: int, window: int = 2,
     return full_state, int(resident)
 
 
+def stream_resident_bytes(specs, window: int = 2, param_bytes: int = 4,
+                          moment_bytes: int = 8):
+    """Analytic peak resident state bytes of the *layer-streamed* path
+    (repro/core/stream.py): fwd/bwd pulls layer-aligned (p, m, v) segments
+    through the offload window, so compute holds the head segment (embed /
+    ln_f / wpe / meta) plus at most ``window + 1`` block segments (the LRU
+    window and the jnp working copy / prefetch slot) — independent of
+    ``n_layers``.  Returns (full_state, resident) bytes like
+    ``offload_resident_bytes``; ``moment_bytes=4`` models bf16 moments."""
+    per_leaf = param_bytes + moment_bytes
+    block_n = sum(int(np.prod(s.shape))
+                  for s in jax.tree.leaves(specs["blocks"], is_leaf=is_spec))
+    head_n = sum(int(np.prod(s.shape))
+                 for k, sub in specs.items() if k != "blocks"
+                 for s in jax.tree.leaves(sub, is_leaf=is_spec))
+    n_layers = next(int(s.shape[0]) for s in
+                    jax.tree.leaves(specs["blocks"], is_leaf=is_spec))
+    layer_seg = block_n // max(n_layers, 1) * per_leaf
+    full_state = (block_n + head_n) * per_leaf
+    resident = head_n * per_leaf + (window + 1) * layer_seg
+    return full_state, int(resident)
+
+
 def bytes_per_device(specs, mesh: Mesh, preset: str, dtype_bytes: int = 4):
     """Analytic per-device parameter bytes under a rule preset — the ZeRO
     'memory liberated' accounting used by the mem-chain benchmark."""

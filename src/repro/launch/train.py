@@ -5,6 +5,14 @@ Composes the full resource-aware runtime: data pipeline -> sharded train step
 fault-tolerant checkpointing.  Runs on 1 CPU device (paper-scale models) or
 any mesh.
 
+Three loop variants compose the shared ``TrainerRuntime`` scaffold
+(repro/runtime/trainer.py):
+
+  train_loop           fully in-memory jitted step
+  offload_train_loop   in-memory fwd/bwd, segment-streamed optimizer (C1)
+  stream_train_loop    layer-streamed fwd/bwd AND optimizer (C1, full depth):
+                       peak resident params bounded by a few layer segments
+
     PYTHONPATH=src python -m repro.launch.train --arch gpt2_124m \
         --steps 200 --batch 8 --seq 128 --lora-rank 8 --out runs/gpt2
 """
@@ -12,102 +20,97 @@ from __future__ import annotations
 
 import argparse
 import os
-import signal
 import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.config import ModelConfig, TrainConfig, dtype_of
-from repro.checkpoint.store import (CheckpointStore, is_offload_checkpoint,
-                                    latest_step, restore, restore_offload)
+from repro.checkpoint.store import (is_offload_checkpoint,
+                                    offload_checkpoint_layout, restore,
+                                    restore_offload)
 from repro.core.energy import EnergyGovernor, SimulatedBattery
-from repro.core.step import (init_state, make_eval_step, make_grad_step,
+from repro.core.step import (init_state, make_grad_step, make_stream_step,
                              make_train_step)
-from repro.data.corpus import synthetic_wikitext
-from repro.data.dataset import LMDataset, packed_batches
-from repro.data.tokenizer import ByteTokenizer
 from repro.models import registry
-from repro.offload.state import OffloadedTrainState, offload_dir_for
+from repro.offload.state import (LAYER_LAYOUT, LayerStreamedState,
+                                 OffloadedTrainState, offload_dir_for)
 from repro.optim.schedule import lr_schedule
 from repro.param import abstract_params
-from repro.runtime.metrics import MetricsObserver
-from repro.runtime.visualizer import write_dashboard
+from repro.runtime.trainer import TrainerRuntime, build_data  # noqa: F401
 
 
-def build_data(cfg: ModelConfig, tcfg: TrainConfig, n_sentences: int = 4000,
-               seed: int = 0):
-    tok = ByteTokenizer()
-    text = synthetic_wikitext(n_sentences, seed=seed)
-    ds = LMDataset(text, tok, tcfg.seq_len)
-    # token ids must stay inside the model vocab
-    assert tok.vocab_size <= cfg.vocab_size, (tok.vocab_size, cfg.vocab_size)
-    return ds
+def _resume_layout_guard(rt: TrainerRuntime, last: int, expected: str):
+    """Refuse to resume a checkpoint written by a different loop variant.
+
+    ``expected`` is the layout this loop can consume: "memory" (in-memory
+    jit), "byte" (byte-balanced optimizer offload) or "layer" (layer-aligned
+    param streaming).  The error names the flag that matches the checkpoint.
+    """
+    actual = "memory"
+    if is_offload_checkpoint(rt.ckdir, last):
+        actual = ("layer" if offload_checkpoint_layout(rt.ckdir, last) ==
+                  LAYER_LAYOUT else "byte")
+    if actual == expected:
+        return
+    kind = {"memory": "in-memory",
+            "byte": "byte-balanced segment-offload",
+            "layer": "layer-aligned (param-streaming) segment-offload"}
+    flag = {"memory": "without offload flags",
+            "byte": "with --offload-segments N",
+            "layer": "with --offload-stream-params"}
+    raise ValueError(
+        f"{rt.ckdir} holds {kind[actual]} checkpoints; resume {flag[actual]} "
+        f"(or point --out elsewhere)")
+
+
+def _warn_moment_dtype(rt: TrainerRuntime, ostate, tcfg: TrainConfig):
+    if ostate.moment_dtype != tcfg.offload_moment_dtype:
+        rt.log(f"[warn] --offload-moment-dtype {tcfg.offload_moment_dtype} "
+               f"ignored: the resumed segment files store "
+               f"{ostate.moment_dtype} moments (fixed at create time)")
 
 
 def train_loop(cfg: ModelConfig, tcfg: TrainConfig, *, out_dir: Optional[str],
-               seed: int = 0, resume: bool = True, eval_every: int = 0,
+               seed: int = 0, resume: bool = True,
                governor: Optional[EnergyGovernor] = None,
                dataset=None, print_fn=print):
+    if tcfg.offload_stream_params:
+        return stream_train_loop(cfg, tcfg, out_dir=out_dir, seed=seed,
+                                 resume=resume, governor=governor,
+                                 dataset=dataset, print_fn=print_fn)
     if tcfg.offload_segments > 0:
         return offload_train_loop(cfg, tcfg, out_dir=out_dir, seed=seed,
                                   resume=resume, governor=governor,
                                   dataset=dataset, print_fn=print_fn)
-    ds = dataset or build_data(cfg, tcfg, seed=seed)
-    obs = MetricsObserver(out_dir=out_dir, print_fn=print_fn)
+    rt = TrainerRuntime(cfg, tcfg, out_dir=out_dir, seed=seed,
+                        governor=governor, dataset=dataset, print_fn=print_fn)
     step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
     state = init_state(jax.random.PRNGKey(seed), cfg, tcfg)
 
-    store = None
     start = 0
-    if tcfg.checkpoint_every > 0 and out_dir:
-        ckdir = os.path.join(out_dir, "ckpt")
-        store = CheckpointStore(ckdir, keep=tcfg.keep_checkpoints)
-        if resume and latest_step(ckdir) is not None:
-            if is_offload_checkpoint(ckdir, latest_step(ckdir)):
-                raise ValueError(
-                    f"{ckdir} holds segment-offload checkpoints; resume with "
-                    f"--offload-segments N (or point --out elsewhere)")
-            state, start = restore(ckdir, state)
-            start = int(start)
-            if print_fn:
-                print_fn(f"[resume] from step {start}")
+    last = rt.latest_checkpoint()
+    if resume and last is not None:
+        _resume_layout_guard(rt, last, "memory")
+        state, start = restore(rt.ckdir, state)
+        start = int(start)
+        rt.log(f"[resume] from step {start}")
+    # defer: mid-step the donated `state` buffers belong to the jit call
+    rt.install_sigterm(lambda: rt.store.save_sync(state, int(state["step"])),
+                       defer=True)
 
-        def _flush(signum, frame):  # preemption tolerance
-            store.save_sync(state, int(state["step"]))
-            raise SystemExit(128 + signum)
-        try:
-            signal.signal(signal.SIGTERM, _flush)
-        except ValueError:
-            pass  # not the main thread
-
-    batches = packed_batches(ds, tcfg.global_batch, seed=seed, epochs=10_000)
-    for _ in range(start):
-        next(batches)  # deterministic data order on resume
-
-    tokens_per_step = tcfg.global_batch * tcfg.seq_len
-    for step in range(start, tcfg.total_steps):
-        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
-        obs.start_step()
+    for step, batch in rt.steps(start):
         state, metrics = step_fn(state, batch)
         jax.block_until_ready(metrics["loss"])
-        row = obs.end_step(step, metrics, tokens=tokens_per_step,
-                           battery=(governor.monitor.fraction()
-                                    if governor else 1.0))
-        if governor is not None:
-            governor.after_step(step, row["step_time_s"])
-        if store and (step + 1) % tcfg.checkpoint_every == 0:
-            store.save_async(state, step + 1)
-    if store:
-        store.wait()
-        store.save_sync(state, int(state["step"]))
-    obs.flush_csv()
-    if out_dir:
-        write_dashboard(obs.rows, os.path.join(out_dir, "dashboard.html"),
-                        title=f"{cfg.name} | {'LoRA' if tcfg.lora_rank else 'Full-FT'}")
+        rt.end_step(step, metrics)
+        if rt.checkpoint_due(step):
+            rt.store.save_async(state, step + 1)
+    if rt.store:
+        rt.store.wait()
+        rt.store.save_sync(state, int(state["step"]))
+    obs = rt.finish(f"{cfg.name} | {'LoRA' if tcfg.lora_rank else 'Full-FT'}")
     return state, obs
 
 
@@ -116,66 +119,44 @@ def offload_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
                        resume: bool = True,
                        governor: Optional[EnergyGovernor] = None,
                        dataset=None, print_fn=print):
-    """Training with segment-wise state offload (paper §4.1.1 C1, phone
-    realization — repro/offload/).
+    """Training with segment-wise *optimizer-state* offload (paper §4.1.1
+    C1, phone realization — repro/offload/).
 
     fwd/bwd runs jitted on the full in-memory params; the AdamW update then
     streams the (p, m, v) segments through a small LRU window with
     double-buffered prefetch, so peak resident optimizer state is
     ``offload_resident / offload_segments`` of the whole — decoupled from
     model size.  Checkpoints hardlink the segment files (zero-copy)."""
-    ds = dataset or build_data(cfg, tcfg, seed=seed)
-    obs = MetricsObserver(out_dir=out_dir, print_fn=print_fn)
+    rt = TrainerRuntime(cfg, tcfg, out_dir=out_dir, seed=seed,
+                        governor=governor, dataset=dataset, print_fn=print_fn)
     grad_fn = jax.jit(make_grad_step(cfg, tcfg))
     work_dir = offload_dir_for(out_dir, tcfg.offload_dir)
     like_params = abstract_params(registry.param_specs(cfg),
                                   dtype=dtype_of(tcfg.param_dtype))
 
-    store = None
-    ckdir = os.path.join(out_dir, "ckpt") if (
-        tcfg.checkpoint_every > 0 and out_dir) else None
     ostate = None
-    if ckdir:
-        store = CheckpointStore(ckdir, keep=tcfg.keep_checkpoints)
-        last = latest_step(ckdir)
-        if resume and last is not None:
-            if not is_offload_checkpoint(ckdir, last):
-                raise ValueError(
-                    f"{ckdir} holds in-memory checkpoints; resume without "
-                    f"--offload-segments (or point --out elsewhere)")
-            ostate, start = restore_offload(
-                ckdir, work_dir, like_params, last,
-                max_resident=tcfg.offload_resident,
-                prefetch=tcfg.offload_prefetch)
-            if print_fn:
-                print_fn(f"[resume] offload checkpoint step {start}")
+    last = rt.latest_checkpoint()
+    if resume and last is not None:
+        _resume_layout_guard(rt, last, "byte")
+        ostate, start = restore_offload(
+            rt.ckdir, work_dir, like_params, last,
+            max_resident=tcfg.offload_resident,
+            prefetch=tcfg.offload_prefetch)
+        _warn_moment_dtype(rt, ostate, tcfg)
+        rt.log(f"[resume] offload checkpoint step {start}")
     if ostate is None:
         state = init_state(jax.random.PRNGKey(seed), cfg, tcfg)
         ostate = OffloadedTrainState.create(
             state, work_dir, tcfg.offload_segments,
             max_resident=tcfg.offload_resident,
-            prefetch=tcfg.offload_prefetch)
+            prefetch=tcfg.offload_prefetch,
+            moment_dtype=tcfg.offload_moment_dtype)
         del state  # from here on the segment files own the optimizer state
 
-    if store is not None:
-        def _flush(signum, frame):  # preemption tolerance
-            store.save_offload(ostate, ostate.step)
-            raise SystemExit(128 + signum)
-        try:
-            signal.signal(signal.SIGTERM, _flush)
-        except ValueError:
-            pass  # not the main thread
-
+    rt.install_sigterm(lambda: rt.store.save_offload(ostate, ostate.step),
+                       defer=True)  # segments mutate in place mid-step
     params = ostate.materialize_params()
-    start = ostate.step
-    batches = packed_batches(ds, tcfg.global_batch, seed=seed, epochs=10_000)
-    for _ in range(start):
-        next(batches)  # deterministic data order on resume
-
-    tokens_per_step = tcfg.global_batch * tcfg.seq_len
-    for step in range(start, tcfg.total_steps):
-        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
-        obs.start_step()
+    for step, batch in rt.steps(ostate.step):
         loss, metrics, grads = grad_fn(params, batch)
         lr = lr_schedule(jnp.asarray(step, jnp.int32),
                          base_lr=tcfg.learning_rate,
@@ -188,28 +169,82 @@ def offload_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
         jax.block_until_ready(loss)
         metrics = dict(metrics)
         metrics["lr"] = lr
-        row = obs.end_step(step, metrics, tokens=tokens_per_step,
-                           battery=(governor.monitor.fraction()
-                                    if governor else 1.0))
-        if governor is not None:
-            governor.after_step(step, row["step_time_s"])
-        if store and (step + 1) % tcfg.checkpoint_every == 0:
-            store.save_offload(ostate, step + 1)
-    if store:
-        store.save_offload(ostate, ostate.step)
-    if print_fn:
-        s = ostate.stats()
-        print_fn(f"[offload] segments {ostate.store.num_segments} | state "
-                 f"{s['store_bytes']/1e6:.1f} MB | peak window "
-                 f"{s['peak_resident_bytes']/1e6:.1f} MB | prefetch hit "
-                 f"{s['prefetch_hits']}/{s['prefetch_hits']+s['sync_loads']}")
+        rt.end_step(step, metrics)
+        if rt.checkpoint_due(step):
+            rt.store.save_offload(ostate, step + 1)
+    if rt.store:
+        rt.store.save_offload(ostate, ostate.step)
+    s = ostate.stats()
+    rt.log(f"[offload] segments {ostate.store.num_segments} | state "
+           f"{s['store_bytes']/1e6:.1f} MB | peak window "
+           f"{s['peak_resident_bytes']/1e6:.1f} MB | prefetch hit "
+           f"{s['prefetch_hits']}/{s['prefetch_hits']+s['sync_loads']}")
     ostate.close()
-    obs.flush_csv()
-    if out_dir:
-        write_dashboard(obs.rows, os.path.join(out_dir, "dashboard.html"),
-                        title=f"{cfg.name} | offload x{ostate.store.num_segments}")
+    obs = rt.finish(f"{cfg.name} | offload x{ostate.store.num_segments}")
     state = {"params": params, "step": jnp.asarray(ostate.step, jnp.int32),
              "offload": ostate}
+    return state, obs
+
+
+def stream_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
+                      out_dir: Optional[str], seed: int = 0,
+                      resume: bool = True,
+                      governor: Optional[EnergyGovernor] = None,
+                      dataset=None, print_fn=print):
+    """Layer-streamed training (paper §4.1.1 C1, full depth): fwd/bwd pulls
+    each block's layer-aligned (p, m, v) segment through the offload window
+    (prefetching block i+1 while block i computes), saves only the
+    layer-boundary activations, back-propagates block-by-block into a
+    gradient scratch store, and streams the AdamW update segment-wise.  Peak
+    resident params during compute stay bounded by a few layer segments +
+    the head segment — independent of model depth."""
+    rt = TrainerRuntime(cfg, tcfg, out_dir=out_dir, seed=seed,
+                        governor=governor, dataset=dataset, print_fn=print_fn)
+    work_dir = offload_dir_for(out_dir, tcfg.offload_dir)
+    like_params = abstract_params(registry.param_specs(cfg),
+                                  dtype=dtype_of(tcfg.param_dtype))
+
+    lstate = None
+    last = rt.latest_checkpoint()
+    if resume and last is not None:
+        _resume_layout_guard(rt, last, "layer")
+        lstate, start = restore_offload(
+            rt.ckdir, work_dir, like_params, last,
+            max_resident=tcfg.offload_resident,
+            prefetch=tcfg.offload_prefetch)
+        _warn_moment_dtype(rt, lstate, tcfg)
+        rt.log(f"[resume] layer-streamed checkpoint step {start}")
+    if lstate is None:
+        state = init_state(jax.random.PRNGKey(seed), cfg, tcfg)
+        lstate = LayerStreamedState.create(
+            state, work_dir, max_resident=tcfg.offload_resident,
+            prefetch=tcfg.offload_prefetch,
+            moment_dtype=tcfg.offload_moment_dtype)
+        del state  # the segment files own params AND optimizer state now
+
+    rt.install_sigterm(lambda: rt.store.save_offload(lstate, lstate.step),
+                       defer=True)  # segments mutate in place mid-step
+    step_fn = make_stream_step(cfg, tcfg, lstate,
+                               grad_dir=os.path.join(work_dir, "grads"))
+    for step, batch in rt.steps(lstate.step):
+        loss, metrics = step_fn(batch, step)
+        rt.end_step(step, metrics)
+        if rt.checkpoint_due(step):
+            rt.store.save_offload(lstate, step + 1)
+    if rt.store:
+        rt.store.save_offload(lstate, lstate.step)
+    s = step_fn.stats()
+    rt.log(f"[stream] {lstate.n_layers} layer segments + head | state "
+           f"{s['param_store_bytes']/1e6:.1f} MB | peak param window "
+           f"{s['param_peak_resident_bytes']/1e6:.1f} MB | prefetch hit "
+           f"{s['param_prefetch_hits']}"
+           f"/{s['param_prefetch_hits']+s['param_sync_loads']}")
+    params = lstate.materialize_params()
+    step_fn.close()
+    lstate.close()
+    obs = rt.finish(f"{cfg.name} | layer-streamed x{lstate.n_layers}")
+    state = {"params": params, "step": jnp.asarray(lstate.step, jnp.int32),
+             "offload": lstate}
     return state, obs
 
 
@@ -226,13 +261,29 @@ def main():
     ap.add_argument("--lora-rank", type=int, default=0)
     ap.add_argument("--remat", default="none")
     ap.add_argument("--attention", default="streaming")
+    ap.add_argument("--scan-layers", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="lax.scan over the stacked layers (in-memory path); "
+                         "--no-scan-layers unrolls them")
     ap.add_argument("--offload-segments", type=int, default=0,
                     help="page (param, m, v) state to N mmap segment files; "
                          "optimizer updates stream segment-by-segment (C1)")
+    ap.add_argument("--offload-stream-params", action="store_true",
+                    help="layer-streamed fwd/bwd: segments become "
+                         "layer-aligned (one per block + head) and params "
+                         "page through the window during compute too")
     ap.add_argument("--offload-dir", default="",
                     help="segment-file directory (default <out>/offload)")
     ap.add_argument("--offload-resident", type=int, default=2,
                     help="LRU window size in segments")
+    ap.add_argument("--offload-prefetch",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="background double-buffered segment prefetch")
+    ap.add_argument("--offload-moment-dtype", default="float32",
+                    choices=("float32", "bfloat16"),
+                    help="storage dtype of the AdamW m/v segments "
+                         "(bfloat16 halves their bytes; update math stays "
+                         "fp32 via round-trip cast)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
@@ -248,11 +299,15 @@ def main():
         lora_rank=args.lora_rank,
         lora_alpha=32.0 if args.lora_rank else 0.0,
         remat_policy=args.remat, attention_impl=args.attention,
+        scan_layers=args.scan_layers,
         compute_dtype="float32", checkpoint_every=args.checkpoint_every,
         checkpoint_dir=args.out or "",
         offload_segments=args.offload_segments,
+        offload_stream_params=args.offload_stream_params,
         offload_dir=args.offload_dir,
-        offload_resident=args.offload_resident)
+        offload_resident=args.offload_resident,
+        offload_prefetch=args.offload_prefetch,
+        offload_moment_dtype=args.offload_moment_dtype)
     governor = None
     if args.energy:
         governor = EnergyGovernor(monitor=SimulatedBattery(

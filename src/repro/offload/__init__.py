@@ -9,9 +9,12 @@ while segment ``i`` computes, and dirty (updated) segments are written back.
 
 - segments.py  SegmentStore: mapping table + mmap segment files + COW snapshot
 - engine.py    OffloadEngine: LRU residency window + prefetch + write-back
-- state.py     OffloadedTrainState: segment-by-segment AdamW update
+- state.py     OffloadedTrainState: segment-by-segment AdamW update;
+               LayerStreamedState: layer-aligned segments (one per block +
+               head) for the streamed fwd/bwd driver (repro/core/stream.py)
 """
 from repro.offload.segments import (LeafRecord, SegmentStore,  # noqa: F401
                                     plan_segments)
 from repro.offload.engine import OffloadEngine, Prefetcher  # noqa: F401
-from repro.offload.state import OffloadedTrainState  # noqa: F401
+from repro.offload.state import (LayerStreamedState,  # noqa: F401
+                                 OffloadedTrainState)

@@ -103,13 +103,31 @@ class SegmentStore:
     @classmethod
     def create(cls, directory: str,
                groups: Sequence[Sequence[Tuple[str, np.ndarray]]],
-               num_segments: int, meta: Optional[Dict] = None
-               ) -> "SegmentStore":
+               num_segments: int, meta: Optional[Dict] = None,
+               group_labels: Optional[Sequence[str]] = None,
+               write: bool = True) -> "SegmentStore":
         """Write ``groups`` (ordered lists of (name, array); a group is kept
-        within one segment) into ``num_segments`` segment files."""
+        within one segment) into ``num_segments`` segment files.
+
+        ``group_labels`` (one per *group*) turns on aligned mode: each group
+        gets its own segment (``num_segments`` must equal the group count) and
+        ``meta["labels"]`` records the label of every segment — the
+        layer-streamed path uses this to map block index -> segment without
+        consulting leaf names.
+
+        ``write=False`` lays out the geometry only: segment files are
+        truncated to size (sparse, read back as zeros) and the array
+        *contents* are never written — for scratch stores whose first use
+        overwrites everything (e.g. the gradient sink).
+        """
         os.makedirs(directory, exist_ok=True)
         arrs = [[(n, np.asarray(a)) for n, a in g] for g in groups]
         sizes = [sum(a.nbytes for _, a in g) for g in arrs]
+        if group_labels is not None:
+            assert len(group_labels) == len(groups) == num_segments, (
+                len(group_labels), len(groups), num_segments)
+            meta = dict(meta or {})
+            meta["labels"] = list(group_labels)
         bounds = plan_segments(sizes, num_segments)
         records: List[LeafRecord] = []
         seg_nbytes: List[int] = []
@@ -125,8 +143,10 @@ class SegmentStore:
         for seg in range(len(seg_nbytes)):
             with open(store.segment_path(seg), "wb") as f:
                 f.truncate(seg_nbytes[seg])
-            store.write_segment(
-                seg, {r.name: flat[r.name] for r in store._seg_leaves[seg]})
+            if write:
+                store.write_segment(
+                    seg,
+                    {r.name: flat[r.name] for r in store._seg_leaves[seg]})
         store._write_table()
         return store
 
@@ -191,6 +211,11 @@ class SegmentStore:
 
     def names(self) -> List[str]:
         return [r.name for r in self.records]
+
+    @property
+    def labels(self) -> List[str]:
+        """Per-segment labels (aligned mode only; [] otherwise)."""
+        return list(self.meta.get("labels", []))
 
     def record(self, name: str) -> LeafRecord:
         return self._by_name[name]

@@ -11,6 +11,20 @@ Each segment's sub-pytree goes through the very same ``adamw_update`` with
 the shared step count, so bias correction and weight decay match the
 monolithic update; residual differences vs the fully-jitted in-memory step
 are XLA fusion noise (~1e-7), well inside the smoke-equivalence tolerance.
+
+Two layouts share the machinery:
+
+- ``OffloadedTrainState``  byte-balanced segments; fwd/bwd still runs on the
+  full in-memory param tree, only the optimizer stream is windowed.
+- ``LayerStreamedState``   layer-aligned segments (one per transformer block
+  plus one head segment holding embed/ln_f/wpe/meta), so the layer-streamed
+  fwd/bwd driver (repro/core/stream.py) can pull exactly one block's params
+  through the window while computing — peak resident params no longer scale
+  with model size.
+
+Moments can be stored in bfloat16 (``moment_dtype="bfloat16"``): m/v segment
+bytes halve; the update round-trips them through float32 (cast on load,
+cast back on store) so AdamW math stays fp32.
 """
 from __future__ import annotations
 
@@ -22,11 +36,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.offload.engine import OffloadEngine
-from repro.offload.segments import SegmentStore
+from repro.offload.segments import SegmentStore, _np_dtype
 from repro.optim.adamw import adamw_update
 from repro.param import flatten_names
 
 P, M, V = "p.", "m.", "v."
+
+LAYER_LAYOUT = "layer_v1"
+
+
+def _cast_moment(arr: np.ndarray, moment_dtype: str) -> np.ndarray:
+    if moment_dtype in ("", "float32"):
+        return arr
+    return np.asarray(arr).astype(_np_dtype(moment_dtype))
 
 
 class OffloadedTrainState:
@@ -35,7 +57,9 @@ class OffloadedTrainState:
     def __init__(self, store: SegmentStore, *, treedef, names: List[str],
                  max_resident: int = 2, prefetch: bool = True):
         self.store = store
-        self.engine = OffloadEngine(store, max_resident=max_resident,
+        # a window below 1 cannot hold the segment being computed on; clamp
+        # like the grad engine does (repro/core/stream.py)
+        self.engine = OffloadEngine(store, max_resident=max(1, max_resident),
                                     prefetch=prefetch)
         self.treedef = treedef
         self.names = names
@@ -52,8 +76,8 @@ class OffloadedTrainState:
     # ------------------------------------------------------------------
     @classmethod
     def create(cls, state: Dict[str, Any], directory: str, num_segments: int,
-               *, max_resident: int = 2, prefetch: bool = True
-               ) -> "OffloadedTrainState":
+               *, max_resident: int = 2, prefetch: bool = True,
+               moment_dtype: str = "float32") -> "OffloadedTrainState":
         """Page an in-memory ``init_state`` tree {params, opt, step} out to
         ``directory``.  Each group is one tensor's (p, m, v) triple so the
         planner never splits a triple across segments."""
@@ -62,10 +86,13 @@ class OffloadedTrainState:
         named_m = dict(flatten_names(state["opt"]["m"]))
         named_v = dict(flatten_names(state["opt"]["v"]))
         host = jax.device_get
-        groups = [[(P + n, host(leaf)), (M + n, host(named_m[n])),
-                   (V + n, host(named_v[n]))] for n, leaf in named_p]
+        groups = [[(P + n, host(leaf)),
+                   (M + n, _cast_moment(host(named_m[n]), moment_dtype)),
+                   (V + n, _cast_moment(host(named_v[n]), moment_dtype))]
+                  for n, leaf in named_p]
         meta = {"count": int(state["opt"]["count"]),
-                "step": int(state["step"]), "kind": "offload_state_v1"}
+                "step": int(state["step"]), "kind": "offload_state_v1",
+                "moment_dtype": moment_dtype}
         store = SegmentStore.create(directory, groups, num_segments,
                                     meta=meta)
         return cls(store, treedef=jax.tree.structure(params),
@@ -96,6 +123,10 @@ class OffloadedTrainState:
     # ------------------------------------------------------------------
     # use
     # ------------------------------------------------------------------
+    def seg_param_names(self, seg: int) -> List[str]:
+        """Plain (un-prefixed) param leaf names held by one segment."""
+        return list(self._seg_pnames[seg])
+
     def materialize_params(self):
         """Assemble the full in-memory param tree (needed by fwd/bwd; the
         optimizer state stays offloaded)."""
@@ -109,6 +140,33 @@ class OffloadedTrainState:
         return jax.tree.unflatten(self.treedef,
                                   [named[n] for n in self.names])
 
+    def _update_segment(self, seg: int, gnamed: Dict[str, Any], count,
+                        *, lr, beta1, beta2, eps, weight_decay):
+        """AdamW one segment in place (window owns the arrays; marked dirty).
+        ``gnamed`` maps this segment's plain param names to gradients.
+        Moments stored in a reduced dtype round-trip through float32.
+        Returns the new param arrays (name -> jnp)."""
+        data = self.engine.acquire(seg)
+        pnames = self._seg_pnames[seg]
+        sub_p = {n: data[P + n] for n in pnames}
+        sub_g = {n: gnamed[n] for n in pnames}
+        opt = {"m": {n: np.asarray(data[M + n], np.float32) for n in pnames},
+               "v": {n: np.asarray(data[V + n], np.float32) for n in pnames},
+               "count": count}
+        new_p, new_opt = self._upd(sub_g, opt, sub_p, lr=lr, beta1=beta1,
+                                   beta2=beta2, eps=eps,
+                                   weight_decay=weight_decay)
+        out = {}
+        for n in pnames:               # in-place: window owns the arrays
+            data[P + n][...] = np.asarray(new_p[n])
+            data[M + n][...] = np.asarray(new_opt["m"][n]).astype(
+                data[M + n].dtype, copy=False)
+            data[V + n][...] = np.asarray(new_opt["v"][n]).astype(
+                data[V + n].dtype, copy=False)
+            out[n] = new_p[n]
+        self.engine.mark_dirty(seg)
+        return out
+
     def apply_update(self, grads, *, lr, beta1=0.9, beta2=0.999, eps=1e-8,
                      weight_decay=0.01):
         """Segment-wise AdamW: stream (p, m, v) through the LRU window,
@@ -121,21 +179,9 @@ class OffloadedTrainState:
         eng.prefetch(0)
         for seg in range(self.store.num_segments):
             eng.prefetch(seg + 1)          # double-buffered: i+1 loads now
-            data = eng.acquire(seg)
-            pnames = self._seg_pnames[seg]
-            sub_p = {n: data[P + n] for n in pnames}
-            sub_g = {n: gnamed[n] for n in pnames}
-            opt = {"m": {n: data[M + n] for n in pnames},
-                   "v": {n: data[V + n] for n in pnames}, "count": count}
-            new_p, new_opt = self._upd(sub_g, opt, sub_p, lr=lr, beta1=beta1,
-                                       beta2=beta2, eps=eps,
-                                       weight_decay=weight_decay)
-            for n in pnames:               # in-place: window owns the arrays
-                data[P + n][...] = np.asarray(new_p[n])
-                data[M + n][...] = np.asarray(new_opt["m"][n])
-                data[V + n][...] = np.asarray(new_opt["v"][n])
-                new_named[n] = new_p[n]
-            eng.mark_dirty(seg)
+            new_named.update(self._update_segment(
+                seg, gnamed, count, lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+                weight_decay=weight_decay))
         self.count += 1
         self.step += 1
         return jax.tree.unflatten(self.treedef,
@@ -158,11 +204,165 @@ class OffloadedTrainState:
         self.engine.close()
 
     @property
+    def moment_dtype(self) -> str:
+        """Storage dtype of the m/v segments (fixed at create time; a
+        reattach keeps whatever the mapping table records)."""
+        return self.store.meta.get("moment_dtype", "float32")
+
+    @property
     def state_bytes(self) -> int:
         return self.store.total_bytes
 
     def stats(self):
         return self.engine.stats()
+
+
+class LayerStreamedState(OffloadedTrainState):
+    """Layer-aligned offloaded state for the streamed fwd/bwd driver.
+
+    Segment ``i`` (0..L-1) holds block ``i``'s full (p, m, v) triple under
+    per-layer leaf names ``blocks.<i>.<leaf>``; segment ``L`` ("head") holds
+    everything outside the block stack (embed, ln_f, wpe, meta, ...).  The
+    streamed driver pulls one block segment through the LRU window per layer
+    of compute and never materializes the stacked tree.
+    """
+
+    def __init__(self, store: SegmentStore, *, like_params,
+                 max_resident: int = 2, prefetch: bool = True):
+        super().__init__(
+            store, treedef=jax.tree.structure(like_params),
+            names=[n for n, _ in flatten_names(like_params)],
+            max_resident=max_resident, prefetch=prefetch)
+        assert store.meta.get("layout") == LAYER_LAYOUT, store.meta
+        self.n_layers = int(store.meta["n_layers"])
+        blocks = like_params["blocks"]
+        head = {k: v for k, v in like_params.items() if k != "blocks"}
+        self.block_treedef = jax.tree.structure(blocks)
+        self.block_names = [n for n, _ in flatten_names(blocks)]
+        self.head_treedef = jax.tree.structure(head)
+        self.head_names = [n for n, _ in flatten_names(head)]
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def create(cls, state: Dict[str, Any], directory: str, *,
+               max_resident: int = 2, prefetch: bool = True,
+               moment_dtype: str = "float32") -> "LayerStreamedState":
+        """Page a stacked ``init_state`` tree out layer-aligned: the stacked
+        block leaves are split on their leading ``layers`` dim into one group
+        per block, plus a trailing head group."""
+        params = state["params"]
+        named_p = flatten_names(params)
+        named_m = dict(flatten_names(state["opt"]["m"]))
+        named_v = dict(flatten_names(state["opt"]["v"]))
+        host = jax.device_get
+        block_items = [(n, host(leaf)) for n, leaf in named_p
+                       if n.startswith("blocks.")]
+        head_items = [(n, host(leaf)) for n, leaf in named_p
+                      if not n.startswith("blocks.")]
+        n_layers = int(block_items[0][1].shape[0]) if block_items else 0
+
+        def triple(full_name, p_arr, idx=None):
+            m = host(named_m[full_name])
+            v = host(named_v[full_name])
+            if idx is not None:
+                m, v = m[idx], v[idx]
+                full_name = ("blocks.%d." % idx) + full_name[len("blocks."):]
+            return [(P + full_name, np.asarray(p_arr)),
+                    (M + full_name, _cast_moment(np.asarray(m), moment_dtype)),
+                    (V + full_name, _cast_moment(np.asarray(v), moment_dtype))]
+
+        groups, labels = [], []
+        for i in range(n_layers):
+            g = []
+            for n, leaf in block_items:
+                g += triple(n, leaf[i], idx=i)
+            groups.append(g)
+            labels.append(f"layer:{i}")
+        groups.append([t for n, leaf in head_items for t in triple(n, leaf)])
+        labels.append("head")
+        meta = {"count": int(state["opt"]["count"]),
+                "step": int(state["step"]), "kind": "offload_state_v1",
+                "layout": LAYER_LAYOUT, "n_layers": n_layers,
+                "moment_dtype": moment_dtype}
+        store = SegmentStore.create(directory, groups, len(groups),
+                                    meta=meta, group_labels=labels)
+        return cls(store, like_params=params, max_resident=max_resident,
+                   prefetch=prefetch)
+
+    @classmethod
+    def open(cls, directory: str, like_params, *, max_resident: int = 2,
+             prefetch: bool = True) -> "LayerStreamedState":
+        return cls(SegmentStore.open(directory), like_params=like_params,
+                   max_resident=max_resident, prefetch=prefetch)
+
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str, work_dir: str, like_params, *,
+                        max_resident: int = 2, prefetch: bool = True
+                        ) -> "LayerStreamedState":
+        store = SegmentStore.link_clone(ckpt_dir, work_dir)
+        return cls(store, like_params=like_params,
+                   max_resident=max_resident, prefetch=prefetch)
+
+    # ------------------------------------------------------------------
+    # layer access (the streamed driver's working set)
+    # ------------------------------------------------------------------
+    @property
+    def head_segment(self) -> int:
+        return self.n_layers
+
+    def prefetch_layer(self, i: int):
+        """Hint the double-buffered prefetcher (out-of-range is a no-op)."""
+        self.engine.prefetch(i)
+
+    def layer_params(self, i: int):
+        """One block's param pytree (jnp copies; safe across eviction)."""
+        data = self.engine.acquire(i)
+        prefix = f"{P}blocks.{i}."
+        return jax.tree.unflatten(
+            self.block_treedef,
+            [jnp.asarray(data[prefix + n]) for n in self.block_names])
+
+    def head_params(self):
+        """The embed/ln_f/wpe/meta tree (everything outside the stack)."""
+        data = self.engine.acquire(self.head_segment)
+        return jax.tree.unflatten(
+            self.head_treedef,
+            [jnp.asarray(data[P + n]) for n in self.head_names])
+
+    def finish_step(self):
+        """Advance the shared AdamW count after a full update sweep."""
+        self.count += 1
+        self.step += 1
+
+    # ------------------------------------------------------------------
+    # whole-tree views (checkpoint equivalence tests / eval)
+    # ------------------------------------------------------------------
+    def materialize_params(self):
+        """Re-stack the per-layer segments into the full stacked tree."""
+        per_layer: Dict[str, List[np.ndarray]] = {n: [] for n in
+                                                  self.block_names}
+        self.engine.prefetch(0)
+        for seg in range(self.n_layers):
+            self.engine.prefetch(seg + 1)
+            data = self.engine.acquire(seg)
+            prefix = f"{P}blocks.{seg}."
+            for n in self.block_names:
+                per_layer[n].append(np.array(data[prefix + n]))
+        head = self.engine.acquire(self.head_segment)
+        named = {"blocks." + n: jnp.asarray(np.stack(arrs))
+                 for n, arrs in per_layer.items()}
+        for n in self.head_names:
+            named[n] = jnp.asarray(np.array(head[P + n]))
+        return jax.tree.unflatten(self.treedef,
+                                  [named[n] for n in self.names])
+
+    def apply_update(self, grads, **kw):
+        raise NotImplementedError(
+            "LayerStreamedState is driven by repro.core.stream (per-segment "
+            "updates straight off the backward sweep), not by a full "
+            "in-memory gradient tree")
 
 
 def offload_dir_for(out_dir: Optional[str], explicit: str = "") -> str:

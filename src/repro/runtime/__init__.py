@@ -1,2 +1,3 @@
 from repro.runtime.metrics import MetricsObserver, read_rss_mb  # noqa: F401
+from repro.runtime.trainer import TrainerRuntime, build_data  # noqa: F401
 from repro.runtime.visualizer import write_dashboard  # noqa: F401

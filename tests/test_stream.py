@@ -1,0 +1,295 @@
+"""Layer-streamed fwd/bwd (paper §4.1.1 C1, full depth; repro/core/stream.py).
+
+Covers: per-layer loss/grad equivalence of the two-sweep program vs the
+in-memory jit path (dense and ssm families), layer-aligned segment mapping
+round-trip, bf16 moment segments, the analytic depth-independent resident
+bound, TrainerRuntime resume determinism across all three loop variants,
+and the checkpoint layout dispatch/guards.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.config import TrainConfig
+from repro.core.step import init_state, make_grad_step, make_stream_step
+from repro.core.zero import stream_resident_bytes
+from repro.launch.train import train_loop
+from repro.models import registry
+from repro.offload import LayerStreamedState, OffloadedTrainState
+from repro.param import flatten_names
+
+
+def _batch(cfg, batch=4, seq=32, seed=1):
+    b = registry.make_batch(jax.random.PRNGKey(seed), cfg, batch, seq)
+    b["labels"] = b["tokens"]
+    return b
+
+
+def _tcfg(**kw):
+    base = dict(global_batch=4, seq_len=32, learning_rate=1e-4,
+                total_steps=10, warmup_steps=1, compute_dtype="float32")
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# per-layer grad + loss equivalence vs the in-memory jit path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["gpt2_124m", "mamba2_130m"])
+def test_streamed_grads_match_jit_path(arch, tmp_path):
+    cfg = configs.get_smoke(arch)
+    tcfg = _tcfg(grad_clip=0.0)        # compare raw (unclipped) gradients
+    batch = _batch(cfg)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    loss_mem, _, grads_mem = jax.jit(make_grad_step(cfg, tcfg))(
+        state["params"], batch)
+    gnamed = {n: np.asarray(g, np.float32)
+              for n, g in flatten_names(grads_mem)}
+
+    lstate = LayerStreamedState.create(state, str(tmp_path / "segs"))
+    step_fn = make_stream_step(cfg, tcfg, lstate, str(tmp_path / "grads"))
+    loss_eval, _ = step_fn.loss_only(batch)   # streamed eval, pre-update
+    np.testing.assert_allclose(float(loss_mem), float(loss_eval), atol=1e-5)
+    loss_s, metrics = step_fn(batch, 0)
+    np.testing.assert_allclose(float(loss_mem), loss_s, atol=1e-5)
+
+    # per-layer gradient equality, read straight from the scratch segments
+    gstore = step_fn.grad_engine.store
+    step_fn.grad_engine.flush()
+    for seg in range(lstate.n_layers):
+        data = gstore.read_segment(seg)
+        for name, g in data.items():
+            # blocks.<i>.<leaf> <-> stacked blocks.<leaf> row i
+            rest = name.split(".", 2)[2]
+            ref = gnamed["blocks." + rest][seg]
+            np.testing.assert_allclose(g, ref, atol=1e-5, rtol=1e-4)
+    head = gstore.read_segment(lstate.head_segment)
+    for name, g in head.items():
+        np.testing.assert_allclose(g, gnamed[name], atol=1e-5, rtol=1e-4)
+    step_fn.close()
+    lstate.close()
+
+
+# ---------------------------------------------------------------------------
+# smoke-train equivalence (acceptance criterion: <=1e-5/step over >=10 steps)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("micro", [1, 2])
+def test_stream_smoke_train_matches_in_memory(tmp_path, micro):
+    cfg = configs.get_smoke("gpt2_124m")
+    base = dict(global_batch=4, seq_len=32, learning_rate=1e-4,
+                microbatches=micro, total_steps=10, warmup_steps=1,
+                compute_dtype="float32")
+    _, obs_mem = train_loop(cfg, TrainConfig(**base), out_dir=None,
+                            print_fn=None)
+    _, obs_str = train_loop(
+        cfg, TrainConfig(**base, offload_stream_params=True,
+                         offload_dir=str(tmp_path / "segs")),
+        out_dir=None, print_fn=None)
+    losses_mem = [r["loss"] for r in obs_mem.rows]
+    losses_str = [r["loss"] for r in obs_str.rows]
+    assert len(losses_str) == 10
+    np.testing.assert_allclose(losses_mem, losses_str, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# layer-aligned mapping round trip
+# ---------------------------------------------------------------------------
+def test_layer_aligned_segments_roundtrip(tmp_path):
+    cfg = configs.get_smoke("gpt2_124m")
+    tcfg = _tcfg()
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    lstate = LayerStreamedState.create(state, str(tmp_path / "segs"))
+    # one segment per block + one head segment, labelled
+    assert lstate.store.num_segments == cfg.n_layers + 1
+    assert lstate.store.labels == [f"layer:{i}" for i in
+                                   range(cfg.n_layers)] + ["head"]
+    # every leaf of segment i belongs to block i (or the head)
+    for seg in range(cfg.n_layers):
+        for n in lstate.seg_param_names(seg):
+            assert n.startswith(f"blocks.{seg}."), (seg, n)
+    for n in lstate.seg_param_names(lstate.head_segment):
+        assert not n.startswith("blocks."), n
+    # materialized tree is bit-identical to what was paged out
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 state["params"], lstate.materialize_params())
+    # per-layer access equals the stacked rows
+    bp1 = lstate.layer_params(1)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b[1]),
+                 bp1, state["params"]["blocks"])
+    lstate.flush()
+    # reopen from the mapping table alone
+    re = LayerStreamedState.open(lstate.store.directory, state["params"])
+    assert re.n_layers == cfg.n_layers
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 state["params"], re.materialize_params())
+    lstate.close()
+    re.close()
+
+
+# ---------------------------------------------------------------------------
+# bf16 moment segments (halved m/v bytes, fp32 round-trip math)
+# ---------------------------------------------------------------------------
+def test_bf16_moment_segments(tmp_path):
+    cfg = configs.get_smoke("gpt2_124m")
+    tcfg = _tcfg()
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(state["params"]))
+    ost32 = OffloadedTrainState.create(state, str(tmp_path / "f32"), 4)
+    ost16 = OffloadedTrainState.create(state, str(tmp_path / "bf16"), 4,
+                                       moment_dtype="bfloat16")
+    assert ost32.state_bytes == n * 12          # fp32 p + m + v
+    assert ost16.state_bytes == n * 8           # fp32 p + bf16 m + v
+    grads = jax.tree.map(lambda p: jnp.full_like(p, 1e-3), state["params"])
+    p32 = ost32.apply_update(grads, lr=1e-3)
+    p16 = ost16.apply_update(grads, lr=1e-3)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-4),
+                 p32, p16)
+    ost32.close()
+    ost16.close()
+
+
+def test_stream_loop_with_bf16_moments(tmp_path):
+    cfg = configs.get_smoke("gpt2_124m")
+    base = dict(global_batch=4, seq_len=32, learning_rate=1e-4, total_steps=4,
+                warmup_steps=1, compute_dtype="float32")
+    _, obs_mem = train_loop(cfg, TrainConfig(**base), out_dir=None,
+                            print_fn=None)
+    _, obs_b16 = train_loop(
+        cfg, TrainConfig(**base, offload_stream_params=True,
+                         offload_moment_dtype="bfloat16",
+                         offload_dir=str(tmp_path / "segs")),
+        out_dir=None, print_fn=None)
+    np.testing.assert_allclose([r["loss"] for r in obs_mem.rows],
+                               [r["loss"] for r in obs_b16.rows], atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# resident bound: a few layer segments + head, independent of depth
+# ---------------------------------------------------------------------------
+def test_stream_resident_bytes_depth_independent():
+    smoke = configs.get_smoke("gpt2_124m")
+    shallow = registry.param_specs(smoke)
+    deep = registry.param_specs(dataclasses.replace(smoke, n_layers=12))
+    full_s, res_s = stream_resident_bytes(shallow, window=2)
+    full_d, res_d = stream_resident_bytes(deep, window=2)
+    assert full_d > full_s
+    assert res_d == res_s                  # depth-independent
+    assert res_d < full_d
+    # bf16 moments shrink the streamed segments too
+    _, res_b16 = stream_resident_bytes(deep, window=2, moment_bytes=4)
+    assert res_b16 < res_d
+
+
+def test_measured_peak_resident_within_analytic_bound(tmp_path):
+    cfg = dataclasses.replace(configs.get_smoke("gpt2_124m"), n_layers=6)
+    tcfg = _tcfg(total_steps=4)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    lstate = LayerStreamedState.create(state, str(tmp_path / "segs"),
+                                      max_resident=tcfg.offload_resident)
+    step_fn = make_stream_step(cfg, tcfg, lstate, str(tmp_path / "grads"))
+    batch = _batch(cfg)
+    for step in range(2):
+        step_fn(batch, step)
+    measured = step_fn.stats()["param_peak_resident_bytes"]
+    _, analytic = stream_resident_bytes(registry.param_specs(cfg),
+                                        window=tcfg.offload_resident)
+    assert measured <= analytic
+    assert measured < lstate.store.total_bytes   # never whole-model resident
+    step_fn.close()
+    lstate.close()
+
+
+# ---------------------------------------------------------------------------
+# TrainerRuntime resume determinism (all three loop variants)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("extra", [
+    {},                                       # in-memory
+    {"offload_segments": 3},                  # optimizer offload
+    {"offload_stream_params": True},          # layer-streamed
+], ids=["memory", "offload", "stream"])
+def test_resume_determinism(tmp_path, extra):
+    cfg = configs.get_smoke("gpt2_124m")
+    # constant schedule: the cosine decay depends on total_steps, which
+    # differs between the interrupted and the straight run
+    base = dict(global_batch=2, seq_len=16, learning_rate=1e-4,
+                schedule="constant", warmup_steps=1, compute_dtype="float32")
+    tA = TrainConfig(**base, total_steps=6, **extra)
+    _, oA = train_loop(cfg, tA, out_dir=None, print_fn=None)
+    out = str(tmp_path / "run")
+    tB1 = TrainConfig(**base, total_steps=3, checkpoint_every=3, **extra)
+    _, oB1 = train_loop(cfg, tB1, out_dir=out, print_fn=None)
+    tB2 = TrainConfig(**base, total_steps=6, checkpoint_every=3, **extra)
+    _, oB2 = train_loop(cfg, tB2, out_dir=out, print_fn=None)
+    assert oB2.rows[0]["step"] == 3            # actually resumed
+    lossesA = [r["loss"] for r in oA.rows]
+    lossesB = ([r["loss"] for r in oB1.rows] +
+               [r["loss"] for r in oB2.rows])
+    np.testing.assert_allclose(lossesA, lossesB, atol=1e-6)
+
+
+def test_sigterm_preemption_flushes_consistent_checkpoint(tmp_path):
+    """A SIGTERM mid-run must flush at the next step *boundary* (the offload
+    segments mutate in place mid-step) and resume bit-deterministically."""
+    import signal as _signal
+    cfg = configs.get_smoke("gpt2_124m")
+    base = dict(global_batch=2, seq_len=16, learning_rate=1e-4,
+                schedule="constant", warmup_steps=1, compute_dtype="float32",
+                total_steps=6)
+    _, oA = train_loop(cfg, TrainConfig(**base, offload_stream_params=True,
+                                        offload_dir=str(tmp_path / "a")),
+                       out_dir=None, print_fn=None)
+    out = str(tmp_path / "run")
+    fired = []
+
+    def pfn(msg):
+        # raise SIGTERM inside step 1's body; the deferred handler lets the
+        # step (and its full update sweep) finish before flushing
+        if msg.startswith("step     1") and not fired:
+            fired.append(True)
+            _signal.raise_signal(_signal.SIGTERM)
+
+    t = TrainConfig(**base, offload_stream_params=True, checkpoint_every=100)
+    with pytest.raises(SystemExit) as e:
+        train_loop(cfg, t, out_dir=out, print_fn=pfn)
+    assert e.value.code == 128 + _signal.SIGTERM.value
+    _, oB = train_loop(cfg, t, out_dir=out, print_fn=None)
+    assert oB.rows[0]["step"] == 2             # steps 0 and 1 completed
+    lossesB = [None, None] + [r["loss"] for r in oB.rows]
+    np.testing.assert_allclose([r["loss"] for r in oA.rows][2:], lossesB[2:],
+                               atol=1e-6)
+
+
+def test_checkpoint_layout_guards(tmp_path):
+    cfg = configs.get_smoke("gpt2_124m")
+    base = dict(global_batch=2, seq_len=16, total_steps=2,
+                checkpoint_every=2, warmup_steps=1, compute_dtype="float32")
+    out = str(tmp_path / "run")
+    train_loop(cfg, TrainConfig(**base, offload_stream_params=True),
+               out_dir=out, print_fn=None)
+    # a layer-aligned checkpoint refuses the byte-balanced resume path...
+    with pytest.raises(ValueError, match="layer-aligned"):
+        train_loop(cfg, TrainConfig(**base, offload_segments=3),
+                   out_dir=out, print_fn=None)
+    # ...and the in-memory one
+    with pytest.raises(ValueError, match="offload"):
+        train_loop(cfg, TrainConfig(**base), out_dir=out, print_fn=None)
+    # byte-balanced checkpoints refuse the streamed resume path
+    out2 = str(tmp_path / "run2")
+    train_loop(cfg, TrainConfig(**base, offload_segments=3), out_dir=out2,
+               print_fn=None)
+    with pytest.raises(ValueError, match="byte-balanced"):
+        train_loop(cfg, TrainConfig(**base, offload_stream_params=True),
+                   out_dir=out2, print_fn=None)
+    # restore dispatch hands back the right class
+    from repro.checkpoint.store import restore_offload
+    from repro.param import abstract_params
+    like = abstract_params(registry.param_specs(cfg))
+    st, step = restore_offload(os.path.join(out, "ckpt"),
+                               str(tmp_path / "w"), like)
+    assert isinstance(st, LayerStreamedState) and step == 2
+    st.close()
