@@ -13,6 +13,9 @@ Chains (cumulative, as in the paper):
             param bytes while *computing* (block segments paged through the
             window) + the analytic depth-independent bound
             (repro/core/stream.py)
+  stream_lora  C6 over C1: LoRA over a frozen param-only base layout
+            (read-only window, no m/v segments) with the adapter's AdamW
+            memory-resident — the PEFT-on-a-phone-budget rows
 
 Measured on the REAL gpt2-124m config (paper's model) by compiling the
 train step on CPU and reading memory_analysis().temp bytes — compile-only,
@@ -37,8 +40,9 @@ from repro import configs
 from repro.config import TrainConfig
 from repro.core.step import (init_state, make_stream_step, make_train_step,
                              state_specs)
-from repro.core.zero import (bytes_per_device, offload_resident_bytes,
-                             stream_resident_bytes)
+from repro.core.lora import lora_specs
+from repro.core.zero import (bytes_per_device, lora_stream_resident_bytes,
+                             offload_resident_bytes, stream_resident_bytes)
 from repro.models import registry
 from repro.offload import LayerStreamedState, OffloadedTrainState
 from repro.param import abstract_params, tree_bytes, tree_map_specs
@@ -102,6 +106,7 @@ def main(fast: bool = False):
         f"activation temp saved by chain123: {saved:.0f}%")
     offload_rows(fast)
     stream_rows(fast)
+    stream_lora_rows(fast)
 
 
 def offload_rows(fast: bool = False, num_segments: int = 8, window: int = 2):
@@ -193,6 +198,56 @@ def stream_rows(fast: bool = False, window: int = 2):
     row("stream_resident_analytic_124m", 0.0,
         f"state {full/1e6:.0f}MB -> resident {res/1e6:.0f}MB "
         f"(window {window}; {res_b16/1e6:.0f}MB with bf16 moments)")
+
+
+def stream_lora_rows(fast: bool = False, window: int = 2, rank: int = 8):
+    """C6 over C1: streamed LoRA — frozen param-only base segments (no m/v,
+    read-only window) + memory-resident adapter AdamW.  Measured peak
+    resident state vs the Full-FT streamed figure, plus the analytic
+    frozen-layout bound."""
+    arch = "gpt2_124m"
+    steps = 2 if fast else 4
+    cfg = configs.get_smoke(arch)
+    tcfg = TrainConfig(global_batch=4, seq_len=64, compute_dtype="float32",
+                       total_steps=steps, warmup_steps=1,
+                       offload_resident=window, lora_rank=rank)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    adapter = {"lora": state["lora"], "opt": state["opt"],
+               "step": state["step"]}
+    adapter_b = tree_bytes(state["lora"]) + tree_bytes(
+        state["opt"]["m"]) + tree_bytes(state["opt"]["v"])
+    batch = registry.make_batch(jax.random.PRNGKey(1), cfg,
+                                tcfg.global_batch, tcfg.seq_len)
+    batch["labels"] = batch["tokens"]
+    with tempfile.TemporaryDirectory() as d:
+        lst = LayerStreamedState.create_frozen(state["base"], d + "/segs",
+                                               max_resident=window)
+        step = make_stream_step(cfg, tcfg, lst, "", adapter=adapter)
+        step(batch, 0)                  # warm the per-stage jit caches
+        t0 = time.perf_counter()
+        for i in range(steps):
+            step(batch, i + 1)
+        dt = time.perf_counter() - t0
+        s = step.stats()
+        full = lst.store.total_bytes
+        resident = s["param_peak_resident_bytes"] + adapter_b
+        row("stream_lora_resident_measured", dt / steps * 1e6,
+            f"base {full/1e6:.2f}MB read-only -> resident "
+            f"{resident/1e6:.2f}MB (adapter {adapter_b/1e6:.2f}MB in RAM) "
+            f"r{rank} segs {lst.n_layers}+head window {window} "
+            f"written_back {s['param_bytes_written']}B")
+        step.close()
+        lst.close()
+    # analytic, on the paper-scale model: p-only segments (~1/3 the Full-FT
+    # streamed bound) + the memory-resident adapter state
+    full_cfg = configs.get(arch)
+    specs = registry.param_specs(full_cfg)
+    lspecs = lora_specs(specs, tcfg.lora_targets, rank)
+    full, res = lora_stream_resident_bytes(specs, lspecs, window)
+    _, res_fullft = stream_resident_bytes(specs, window)
+    row("stream_lora_resident_analytic_124m", 0.0,
+        f"state {full/1e6:.0f}MB -> resident {res/1e6:.0f}MB "
+        f"(r{rank} window {window}; Full-FT streamed {res_fullft/1e6:.0f}MB)")
 
 
 def main_cli():

@@ -57,6 +57,19 @@ def main():
           f"state on disk {s['store_bytes']/1e6:.2f} MB | peak resident "
           f"param window {s['peak_resident_bytes']/1e6:.2f} MB")
 
+    # PEFT variant: LoRA over the streamed engine — the frozen base pages
+    # through read-only param-only segments (no m/v, no write-back) while
+    # the tiny adapter + its AdamW stay memory-resident; the bare adapter
+    # lands in <out>/adapter.safetensors.
+    lcfg = dataclasses.replace(scfg, lora_rank=8, lora_alpha=16.0,
+                               offload_moment_dtype="float32")
+    state, obs = train_loop(cfg, lcfg, out_dir="runs/offload_example_lora",
+                            dataset=dataset)
+    s = state["offload"].stats()
+    print(f"\n[streamed LoRA r8] final loss {obs.rows[-1]['loss']:.4f} | "
+          f"frozen base on disk {s['store_bytes']/1e6:.2f} MB (read-only) | "
+          f"peak resident param window {s['peak_resident_bytes']/1e6:.2f} MB")
+
 
 if __name__ == "__main__":
     main()

@@ -1,4 +1,5 @@
 from repro.checkpoint.store import (CheckpointStore, latest_step,  # noqa: F401
                                     restore, save)
 from repro.checkpoint.safetensors import (load_safetensors,  # noqa: F401
+                                          save_adapter, save_merged,
                                           save_safetensors)

@@ -52,6 +52,33 @@ def save_safetensors(path: str, tensors: Dict[str, np.ndarray],
             f.write(raw)
 
 
+def save_adapter(path: str, lora_params, *, rank: int, alpha: float,
+                 targets=()) -> str:
+    """Export the bare LoRA adapter: flat ``lora.<leaf>`` tensors plus the
+    PEFT hyperparameters in the metadata, so a config is reproducible from
+    the file alone.  Pairs with ``save_merged`` for deployment."""
+    from repro.param import flatten_names
+    named = {"lora." + n: np.asarray(v) for n, v in flatten_names(lora_params)}
+    save_safetensors(path, named, metadata={
+        "format": "lora_adapter", "lora_rank": rank, "lora_alpha": alpha,
+        "lora_targets": ",".join(targets)})
+    return path
+
+
+def save_merged(path: str, base_params, lora_params, *, rank: int,
+                alpha: float) -> str:
+    """Export deployment weights W' = W + (alpha/rank) A@B at every adapted
+    leaf (repro.core.lora.export_merged) — one self-contained model file,
+    no adapter needed at load time."""
+    from repro.core.lora import export_merged
+    from repro.param import flatten_names
+    merged = export_merged(base_params, lora_params, rank=rank, alpha=alpha)
+    named = {n: np.asarray(v) for n, v in flatten_names(merged)}
+    save_safetensors(path, named, metadata={
+        "format": "merged_model", "lora_rank": rank, "lora_alpha": alpha})
+    return path
+
+
 def load_safetensors(path: str):
     """Returns (tensors dict, metadata dict).  BF16 loads as uint16 view with
     a ml_dtypes.bfloat16 reinterpretation when available."""

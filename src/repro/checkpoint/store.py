@@ -36,7 +36,7 @@ def _state_to_named(state) -> Dict[str, np.ndarray]:
 
 
 def save(state, directory: str, step: int, keep: int = 3,
-         extra_meta: Optional[Dict[str, str]] = None):
+         extra_meta: Optional[Dict[str, Any]] = None):
     os.makedirs(directory, exist_ok=True)
     tmp = os.path.join(directory, f".tmp-{step}")
     final = os.path.join(directory, f"step_{step:08d}")
@@ -45,8 +45,11 @@ def save(state, directory: str, step: int, keep: int = 3,
     os.makedirs(tmp)
     named = _state_to_named(jax.device_get(state))
     save_safetensors(os.path.join(tmp, "state.safetensors"), named,
-                     metadata={"step": str(step), **(extra_meta or {})})
+                     metadata={"step": str(step),
+                               **{k: str(v) for k, v in
+                                  (extra_meta or {}).items()}})
     manifest = {"step": step, "time": time.time(),
+                "meta": dict(extra_meta or {}),
                 "leaves": {k: [list(v.shape), str(v.dtype)]
                            for k, v in named.items()}}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -143,6 +146,30 @@ def is_offload_checkpoint(directory: str, step: int) -> bool:
                                       "segments"))
 
 
+def checkpoint_meta(directory: str, step: int) -> Dict[str, Any]:
+    """Extra metadata stamped into a checkpoint's manifest at save time
+    (e.g. the seed/LoRA hyperparameters an adapter-only checkpoint depends
+    on).  Empty for checkpoints written before the field existed."""
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    if not os.path.isfile(path):
+        return {}
+    with open(path) as f:
+        return json.load(f).get("meta", {})
+
+
+def is_adapter_checkpoint(directory: str, step: int) -> bool:
+    """True for adapter-only checkpoints (frozen-base streamed LoRA): the
+    manifest lists ``lora.*`` leaves but no base/params tree — the frozen
+    base is re-derived from the seed on resume, never persisted."""
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    if not os.path.isfile(path):
+        return False
+    with open(path) as f:
+        leaves = json.load(f).get("leaves", {})
+    return (any(k.startswith("lora.") for k in leaves)
+            and not any(k.startswith(("base.", "params.")) for k in leaves))
+
+
 def offload_checkpoint_layout(directory: str, step: int) -> str:
     """Segment layout of an offload checkpoint: "layer_v1" (layer-aligned,
     param-streaming) or "" (byte-balanced optimizer offload)."""
@@ -188,19 +215,21 @@ class CheckpointStore:
             self._thread.join()
             self._thread = None
 
-    def save_async(self, state, step: int):
+    def save_async(self, state, step: int, extra_meta=None):
         self.wait()
         host_state = jax.device_get(state)  # snapshot before returning
 
         def _write():
-            save(host_state, self.directory, step, keep=self.keep)
+            save(host_state, self.directory, step, keep=self.keep,
+                 extra_meta=extra_meta)
 
         self._thread = threading.Thread(target=_write, daemon=False)
         self._thread.start()
 
-    def save_sync(self, state, step: int):
+    def save_sync(self, state, step: int, extra_meta=None):
         self.wait()
-        return save(state, self.directory, step, keep=self.keep)
+        return save(state, self.directory, step, keep=self.keep,
+                    extra_meta=extra_meta)
 
     def save_offload(self, ostate, step: int):
         """Zero-copy (hardlink) snapshot of an OffloadedTrainState — cheap

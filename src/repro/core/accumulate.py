@@ -16,10 +16,22 @@ import jax.numpy as jnp
 
 
 def split_batch(batch, n_micro: int):
-    """(B, ...) leaves -> (n_micro, B/n_micro, ...)."""
+    """(B, ...) leaves -> (n_micro, B/n_micro, ...).
+
+    Raises ``ValueError`` (not a bare assert — asserts vanish under
+    ``python -O`` and report an opaque tuple) when the batch does not split
+    into equal micro-batches."""
+    if n_micro < 1:
+        raise ValueError(f"microbatches must be >= 1, got {n_micro}")
+
     def f(x):
         b = x.shape[0]
-        assert b % n_micro == 0, (b, n_micro)
+        if b % n_micro != 0:
+            raise ValueError(
+                f"global batch {b} is not divisible by "
+                f"microbatches={n_micro}; gradient accumulation needs "
+                "equal-sized micro-batches — adjust --batch or "
+                "--microbatches")
         return x.reshape((n_micro, b // n_micro) + x.shape[1:])
     return jax.tree.map(f, batch)
 

@@ -57,6 +57,17 @@ class EnergyGovernor:
     throttled: bool = False
     history: List[dict] = field(default_factory=list)
 
+    # clamp ceiling for a rho mutated out of range after construction: the
+    # stretch t -> t/(1-rho) diverges (ZeroDivisionError) at rho = 1
+    MAX_RHO = 0.99
+
+    def __post_init__(self):
+        if not 0.0 <= self.reduction < 1.0:
+            raise ValueError(
+                f"reduction (rho) must satisfy 0 <= rho < 1, got "
+                f"{self.reduction}: the governor stretches the step "
+                "interval t -> t/(1-rho), which diverges at rho = 1")
+
     def after_step(self, step: int, step_time_s: float,
                    step_energy: float = 1.0) -> float:
         """Call after each optimizer step.  Returns injected delay (s)."""
@@ -64,9 +75,15 @@ class EnergyGovernor:
         delay = 0.0
         if step % max(self.check_every, 1) == 0:
             self.throttled = self.monitor.fraction() < self.threshold
-        if self.throttled and self.reduction > 0:
+        # the dataclass is mutable: re-clamp rho only if a caller wrote an
+        # out-of-range value after __post_init__ validated it (legal values
+        # pass through untouched, including those above MAX_RHO)
+        rho = self.reduction
+        if not 0.0 <= rho < 1.0:
+            rho = min(max(rho, 0.0), self.MAX_RHO)
+        if self.throttled and rho > 0:
             # stretch interval t -> t / (1 - rho)
-            delay = step_time_s * self.reduction / (1.0 - self.reduction)
+            delay = step_time_s * rho / (1.0 - rho)
             if delay > 0:
                 self.sleep_fn(delay)
         self.history.append({

@@ -31,16 +31,35 @@ from repro.param import init_params
 # ----------------------------------------------------------------------------
 # State construction
 # ----------------------------------------------------------------------------
+def _lora_specs_checked(specs, cfg: ModelConfig, tcfg: TrainConfig):
+    lspecs = lora_specs(specs, tcfg.lora_targets, tcfg.lora_rank)
+    if not lspecs:
+        raise ValueError(
+            f"lora_targets {tcfg.lora_targets!r} match no leaves of "
+            f"{cfg.name} ({cfg.family} family) — the adapter would be "
+            "empty and train nothing; pick >=2-D leaf names from the "
+            "model's param specs (e.g. wq,wk,wv,wo for attention, "
+            "w_x,w_out for the ssm family)")
+    return lspecs
+
+
+def init_adapter_state(rng, cfg: ModelConfig, tcfg: TrainConfig):
+    """The adapter-only slice of ``init_state``'s LoRA tree — identical
+    {"lora", "opt", "step"} leaves (same key folding) without materializing
+    the base.  Used when the frozen base segments already exist on disk."""
+    lspecs = _lora_specs_checked(registry.param_specs(cfg), cfg, tcfg)
+    lora = init_params(jax.random.fold_in(rng, 1), lspecs,
+                       dtype=jnp.float32)
+    return {"lora": lora, "opt": adamw_init(lora),
+            "step": jnp.zeros((), jnp.int32)}
+
+
 def init_state(rng, cfg: ModelConfig, tcfg: TrainConfig):
     specs = registry.param_specs(cfg)
     pd = dtype_of(tcfg.param_dtype)
     params = init_params(rng, specs, dtype=pd)
     if tcfg.lora_rank > 0:
-        lspecs = lora_specs(specs, tcfg.lora_targets, tcfg.lora_rank)
-        lora = init_params(jax.random.fold_in(rng, 1), lspecs,
-                           dtype=jnp.float32)
-        return {"base": params, "lora": lora, "opt": adamw_init(lora),
-                "step": jnp.zeros((), jnp.int32)}
+        return {"base": params, **init_adapter_state(rng, cfg, tcfg)}
     return {"params": params, "opt": adamw_init(params),
             "step": jnp.zeros((), jnp.int32)}
 
@@ -124,8 +143,11 @@ def make_grad_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
     Full-FT only: LoRA state is adapter-sized and never needs offload.
     """
     if tcfg.lora_rank > 0:
-        raise ValueError("offload grad step supports Full-FT only "
-                         "(lora_rank must be 0)")
+        raise ValueError(
+            "byte-balanced optimizer offload supports Full-FT only (the "
+            "adapter's optimizer state is tiny); for PEFT on a phone budget "
+            "combine --lora-rank with --offload-stream-params (frozen "
+            "streamed base + in-memory adapter)")
     model_loss = registry.loss_fn(cfg)
     reduce_dtype = (dtype_of(tcfg.grad_reduce_dtype)
                     if tcfg.grad_reduce_dtype else None)
@@ -145,17 +167,21 @@ def make_grad_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
 
 
 def make_stream_step(cfg: ModelConfig, tcfg: TrainConfig, lstate,
-                     grad_dir: str) -> Callable:
+                     grad_dir: str, adapter=None) -> Callable:
     """Layer-streamed train step (C1 phone realization, full depth): fwd/bwd
     pages block params through the offload window (repro/core/stream.py)
     instead of materializing the whole tree, then streams the AdamW update.
 
     ``lstate`` is a ``LayerStreamedState``; ``grad_dir`` holds the gradient
     scratch segments.  Returns ``step_fn(batch, step) -> (loss, metrics)``.
-    Full-FT only, like ``make_grad_step``.
+
+    With ``tcfg.lora_rank > 0`` (C6 over the streamed base) ``lstate`` must
+    be the frozen param-only layout and ``adapter`` the in-memory trainable
+    state {"lora", "opt", "step"}; ``grad_dir`` is unused (adapter grads
+    accumulate in memory).
     """
     from repro.core.stream import StreamedTrainStep
-    return StreamedTrainStep(cfg, tcfg, lstate, grad_dir)
+    return StreamedTrainStep(cfg, tcfg, lstate, grad_dir, adapter=adapter)
 
 
 def make_eval_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:

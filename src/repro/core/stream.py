@@ -30,12 +30,21 @@ mem-chain benchmark reports the measured one).
 Gradient accumulation (C2) composes: each micro-batch runs its own two
 sweeps and accumulates into the gradient scratch segments; the update sweep
 then applies the averaged, clipped gradient once.
+
+PEFT (C6) composes too: with ``tcfg.lora_rank > 0`` the base segments are a
+*frozen, param-only* layout (``LayerStreamedState.create_frozen``) served
+through a read-only window — no m/v segments, no dirty write-back, no
+gradient scratch store.  The (tiny) LoRA adapter tree stays memory-resident;
+``merge_lora`` is applied per block inside the jitted apply/VJP entry
+points, adapter cotangents accumulate in memory, and one in-memory AdamW
+updates the adapter after the sweeps.  Resident state drops to roughly a
+third of the Full-FT streamed bound (``repro.core.zero``).
 """
 from __future__ import annotations
 
 import math
 import os
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +57,7 @@ from repro.models.lm import make_layer_program
 from repro.offload.engine import OffloadEngine
 from repro.offload.segments import SegmentStore
 from repro.offload.state import LayerStreamedState, P
+from repro.optim.adamw import adamw_update
 from repro.optim.schedule import lr_schedule
 
 
@@ -77,22 +87,71 @@ class StreamedTrainStep:
     ``step_fn(batch, step) -> (loss, metrics)`` — the streamed counterpart
     of ``make_train_step``'s jitted body, matching its schedule, clipping
     and AdamW semantics.
+
+    With ``tcfg.lora_rank > 0`` (PEFT over a frozen streamed base):
+    ``lstate`` must be the frozen param-only layout and ``adapter`` supplies
+    the memory-resident trainable state ``{"lora", "opt", "step"}``.  The
+    backward sweep then returns adapter cotangents (stacked back into the
+    adapter's layout in memory — no scratch segments), and the update is a
+    single in-memory AdamW over the adapter tree.
     """
 
     def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
-                 lstate: LayerStreamedState, grad_dir: str):
-        if tcfg.lora_rank > 0:
-            raise ValueError("layer streaming supports Full-FT only "
-                             "(lora_rank must be 0)")
+                 lstate: LayerStreamedState, grad_dir: str,
+                 adapter: Optional[Dict[str, Any]] = None):
+        if tcfg.microbatches < 1:
+            raise ValueError(
+                f"microbatches must be >= 1, got {tcfg.microbatches}; pass "
+                "--microbatches 1 to disable gradient accumulation")
         self.cfg, self.tcfg = cfg, tcfg
         self.lstate = lstate
+        self.lora_mode = tcfg.lora_rank > 0
         self.program = make_layer_program(cfg, tcfg)
         self.windows = np.asarray(T.layer_windows(cfg))
-        os.makedirs(grad_dir, exist_ok=True)
-        self.grad_engine = OffloadEngine(
-            make_grad_store(lstate, grad_dir),
-            max_resident=max(1, tcfg.offload_resident),
-            prefetch=tcfg.offload_prefetch)
+        self.grad_engine: Optional[OffloadEngine] = None
+        if self.lora_mode:
+            if adapter is None:
+                raise ValueError(
+                    "streamed LoRA needs the in-memory adapter state "
+                    '{"lora", "opt", "step"} (see launch.train.'
+                    "stream_lora_train_loop)")
+            if not lstate.frozen:
+                raise ValueError(
+                    "streamed LoRA drives a frozen (param-only) base layout; "
+                    "create it with LayerStreamedState.create_frozen")
+            self.adapter = adapter
+            self._upd = jax.jit(adamw_update)
+            self._acc = None          # adapter-grad accumulator (in memory)
+        else:
+            if lstate.frozen:
+                raise ValueError(
+                    "frozen (param-only) layout carries no optimizer state; "
+                    "Full-FT streaming needs the (p, m, v) layout")
+            os.makedirs(grad_dir, exist_ok=True)
+            self.grad_engine = OffloadEngine(
+                make_grad_store(lstate, grad_dir),
+                max_resident=max(1, tcfg.offload_resident),
+                prefetch=tcfg.offload_prefetch)
+
+    # ------------------------------------------------------------------
+    # adapter plumbing (PEFT mode)
+    # ------------------------------------------------------------------
+    def adapter_state(self) -> Dict[str, Any]:
+        """The trainable state {"lora", "opt", "step"} — what adapter-only
+        checkpoints persist (the frozen base is re-derived from the seed)."""
+        return self.adapter
+
+    def _lora_split(self):
+        """(stacked block adapter tree, head adapter tree)."""
+        lora = self.adapter["lora"]
+        blocks = lora.get("blocks", {})
+        head = {k: v for k, v in lora.items() if k != "blocks"}
+        return blocks, head
+
+    @staticmethod
+    def _block_lora(lblocks, i: int):
+        """Slice block ``i``'s adapter factors off the stacked tree."""
+        return jax.tree.map(lambda a: a[i], lblocks)
 
     # ------------------------------------------------------------------
     def _sink(self, seg: int, names: List[str], grads: List[Any],
@@ -122,7 +181,11 @@ class StreamedTrainStep:
         backward sweep), else just the final one."""
         prog, lstate = self.program, self.lstate
         head = lstate.head_params()
-        x = prog.embed(head, mb)
+        if self.lora_mode:
+            lblocks, lhead = self._lora_split()
+            x = prog.embed(head, lhead, mb)
+        else:
+            x = prog.embed(head, mb)
         positions = prog.positions(x.shape[0], x.shape[1])
         acts = [x]
         aux_sum = jnp.zeros((), jnp.float32)
@@ -130,8 +193,12 @@ class StreamedTrainStep:
         for i in range(lstate.n_layers):
             lstate.prefetch_layer(i + 1)   # i+1 pages in while i computes
             bp = lstate.layer_params(i)
-            x, aux = prog.block(bp, x, jnp.asarray(self.windows[i]),
-                                positions)
+            win = jnp.asarray(self.windows[i])
+            if self.lora_mode:
+                x, aux = prog.block(bp, self._block_lora(lblocks, i), x, win,
+                                    positions)
+            else:
+                x, aux = prog.block(bp, x, win, positions)
             if keep_acts:
                 acts.append(x)
             else:
@@ -142,6 +209,8 @@ class StreamedTrainStep:
     def _two_sweeps(self, mb, first: bool, last: bool, n_micro: int):
         """Forward + backward over one micro-batch.  Returns
         (loss, metrics, sq_norm_contribution)."""
+        if self.lora_mode:
+            return self._two_sweeps_lora(mb, first, last, n_micro)
         prog, lstate = self.program, self.lstate
         L = lstate.n_layers
         head, acts, aux_sum, positions = self._forward_sweep(
@@ -175,6 +244,54 @@ class StreamedTrainStep:
                          jax.tree.leaves(dhead), first, last, n_micro)
         return loss, metrics, sq
 
+    def _two_sweeps_lora(self, mb, first: bool, last: bool, n_micro: int):
+        """PEFT variant: base segments are read-only; the backward sweep
+        returns adapter cotangents which accumulate in memory (the adapter
+        is tiny — no scratch segments needed)."""
+        prog, lstate = self.program, self.lstate
+        L = lstate.n_layers
+        lblocks, lhead = self._lora_split()
+        head, acts, aux_sum, positions = self._forward_sweep(
+            mb, keep_acts=True)
+
+        # ---- head loss + its VJP (adapter cotangent only) ---------------
+        loss, metrics, dhl, dx, daux = prog.head_vjp(head, lhead, acts[L],
+                                                     mb, aux_sum)
+
+        # ---- backward sweep: re-pull frozen blocks, collect adapter grads
+        block_grads: List[Any] = [None] * L
+        lstate.prefetch_layer(L - 1)
+        for i in reversed(range(L)):
+            lstate.prefetch_layer(i - 1)
+            bp = lstate.layer_params(i)
+            dlp, dx = prog.block_vjp(bp, self._block_lora(lblocks, i),
+                                     acts[i], jnp.asarray(self.windows[i]),
+                                     positions, dx, daux)
+            acts[i + 1] = None             # free the boundary activation
+            block_grads[i] = dlp
+
+        # embed's adapter contribution joins the unembed's
+        dhl_e = prog.embed_vjp(head, lhead, mb, dx)
+        dhl = jax.tree.map(jnp.add, dhl, dhl_e)
+
+        # re-stack per-block adapter grads into the adapter's stacked layout
+        g = dict(dhl)
+        if "blocks" in self.adapter["lora"]:
+            g["blocks"] = jax.tree.map(lambda *gs: jnp.stack(gs),
+                                       *block_grads)
+        self._acc = (g if first else
+                     jax.tree.map(jnp.add, self._acc, g))
+
+        sq = 0.0
+        if last:
+            for leaf in jax.tree.leaves(self._acc):
+                avg = np.asarray(leaf, np.float32)
+                if n_micro > 1:
+                    avg = avg / n_micro
+                sq += float(np.sum(np.square(avg, dtype=np.float32),
+                                   dtype=np.float32))
+        return loss, metrics, sq
+
     def _update_sweep(self, lr, clip_scale: float, n_micro: int):
         """Stream (p, m, v) + grad segments and AdamW each in place."""
         lstate, tcfg = self.lstate, self.tcfg
@@ -197,10 +314,26 @@ class StreamedTrainStep:
                                    weight_decay=tcfg.weight_decay)
         lstate.finish_step()
 
+    def _update_adapter(self, lr, clip_scale: float, n_micro: int):
+        """One in-memory AdamW over the accumulated adapter gradients —
+        the very update ``make_train_step`` applies in LoRA mode."""
+        tcfg = self.tcfg
+        grads = jax.tree.map(
+            lambda a: (a / n_micro if n_micro > 1 else a) * clip_scale,
+            self._acc)
+        new_lora, new_opt = self._upd(
+            grads, self.adapter["opt"], self.adapter["lora"], lr=lr,
+            beta1=tcfg.beta1, beta2=tcfg.beta2, eps=tcfg.eps,
+            weight_decay=tcfg.weight_decay)
+        self.adapter["lora"] = new_lora
+        self.adapter["opt"] = new_opt
+        self.adapter["step"] = self.adapter["step"] + 1
+        self._acc = None
+
     # ------------------------------------------------------------------
     def __call__(self, batch, step: int):
         tcfg = self.tcfg
-        n = max(1, tcfg.microbatches)
+        n = tcfg.microbatches
         micros = split_batch(batch, n) if n > 1 else None
         loss_sum, metrics, sq = 0.0, None, 0.0
         for j in range(n):
@@ -217,7 +350,10 @@ class StreamedTrainStep:
                          base_lr=tcfg.learning_rate,
                          warmup_steps=tcfg.warmup_steps,
                          total_steps=tcfg.total_steps, kind=tcfg.schedule)
-        self._update_sweep(lr, clip_scale, n)
+        if self.lora_mode:
+            self._update_adapter(lr, clip_scale, n)
+        else:
+            self._update_sweep(lr, clip_scale, n)
         metrics = dict(metrics)
         metrics["loss"] = loss_sum / n
         metrics["grad_norm"] = gnorm
@@ -229,12 +365,19 @@ class StreamedTrainStep:
         """Streamed forward pass (no grads, no update) — eval.  Returns
         (loss, metrics)."""
         head, acts, aux_sum, _ = self._forward_sweep(batch, keep_acts=False)
+        if self.lora_mode:
+            _, lhead = self._lora_split()
+            return self.program.head_loss(head, lhead, acts[0], batch,
+                                          aux_sum)
         return self.program.head_loss(head, acts[0], batch, aux_sum)
 
     def stats(self) -> Dict[str, Any]:
         s = {"param_" + k: v for k, v in self.lstate.stats().items()}
-        s.update({"grad_" + k: v for k, v in self.grad_engine.stats().items()})
+        if self.grad_engine is not None:
+            s.update({"grad_" + k: v
+                      for k, v in self.grad_engine.stats().items()})
         return s
 
     def close(self):
-        self.grad_engine.close()
+        if self.grad_engine is not None:
+            self.grad_engine.close()

@@ -57,6 +57,18 @@ def offload_resident_bytes(specs, num_segments: int, window: int = 2,
     return full_state, int(resident)
 
 
+def _stream_geometry(specs):
+    """(block leaf count, head leaf count, n_layers) of a stacked spec tree."""
+    block_n = sum(int(np.prod(s.shape))
+                  for s in jax.tree.leaves(specs["blocks"], is_leaf=is_spec))
+    head_n = sum(int(np.prod(s.shape))
+                 for k, sub in specs.items() if k != "blocks"
+                 for s in jax.tree.leaves(sub, is_leaf=is_spec))
+    n_layers = next(int(s.shape[0]) for s in
+                    jax.tree.leaves(specs["blocks"], is_leaf=is_spec))
+    return block_n, head_n, n_layers
+
+
 def stream_resident_bytes(specs, window: int = 2, param_bytes: int = 4,
                           moment_bytes: int = 8):
     """Analytic peak resident state bytes of the *layer-streamed* path
@@ -67,16 +79,29 @@ def stream_resident_bytes(specs, window: int = 2, param_bytes: int = 4,
     ``n_layers``.  Returns (full_state, resident) bytes like
     ``offload_resident_bytes``; ``moment_bytes=4`` models bf16 moments."""
     per_leaf = param_bytes + moment_bytes
-    block_n = sum(int(np.prod(s.shape))
-                  for s in jax.tree.leaves(specs["blocks"], is_leaf=is_spec))
-    head_n = sum(int(np.prod(s.shape))
-                 for k, sub in specs.items() if k != "blocks"
-                 for s in jax.tree.leaves(sub, is_leaf=is_spec))
-    n_layers = next(int(s.shape[0]) for s in
-                    jax.tree.leaves(specs["blocks"], is_leaf=is_spec))
+    block_n, head_n, n_layers = _stream_geometry(specs)
     layer_seg = block_n // max(n_layers, 1) * per_leaf
     full_state = (block_n + head_n) * per_leaf
     resident = head_n * per_leaf + (window + 1) * layer_seg
+    return full_state, int(resident)
+
+
+def lora_stream_resident_bytes(specs, adapter_specs, window: int = 2,
+                               param_bytes: int = 4):
+    """Analytic peak resident state bytes of *streamed LoRA* (frozen base):
+    the base segments hold params only — no m/v, so the streamed share is
+    roughly 1/3 of the Full-FT streamed bound — and the whole trainable
+    state (fp32 adapter + its AdamW m/v) stays memory-resident on top.
+    Returns (full_state, resident) bytes; ``adapter_specs`` is the LoRA
+    spec tree from ``repro.core.lora.lora_specs``."""
+    block_n, head_n, n_layers = _stream_geometry(specs)
+    layer_seg = block_n // max(n_layers, 1) * param_bytes
+    adapter_n = sum(int(np.prod(s.shape))
+                    for s in jax.tree.leaves(adapter_specs, is_leaf=is_spec))
+    adapter_state = adapter_n * (4 + 8)     # fp32 adapter + fp32 m + v
+    full_state = (block_n + head_n) * param_bytes + adapter_state
+    resident = (head_n * param_bytes + (window + 1) * layer_seg
+                + adapter_state)
     return full_state, int(resident)
 
 

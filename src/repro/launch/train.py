@@ -28,17 +28,19 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.config import ModelConfig, TrainConfig, dtype_of
-from repro.checkpoint.store import (is_offload_checkpoint,
+from repro.checkpoint.safetensors import save_adapter
+from repro.checkpoint.store import (checkpoint_meta, is_adapter_checkpoint,
+                                    is_offload_checkpoint,
                                     offload_checkpoint_layout, restore,
                                     restore_offload)
 from repro.core.energy import EnergyGovernor, SimulatedBattery
-from repro.core.step import (init_state, make_grad_step, make_stream_step,
-                             make_train_step)
+from repro.core.step import (init_adapter_state, init_state, make_grad_step,
+                             make_stream_step, make_train_step)
 from repro.models import registry
 from repro.offload.state import (LAYER_LAYOUT, LayerStreamedState,
                                  OffloadedTrainState, offload_dir_for)
 from repro.optim.schedule import lr_schedule
-from repro.param import abstract_params
+from repro.param import abstract_params, init_params, tree_bytes
 from repro.runtime.trainer import TrainerRuntime, build_data  # noqa: F401
 
 
@@ -46,21 +48,26 @@ def _resume_layout_guard(rt: TrainerRuntime, last: int, expected: str):
     """Refuse to resume a checkpoint written by a different loop variant.
 
     ``expected`` is the layout this loop can consume: "memory" (in-memory
-    jit), "byte" (byte-balanced optimizer offload) or "layer" (layer-aligned
-    param streaming).  The error names the flag that matches the checkpoint.
+    jit), "byte" (byte-balanced optimizer offload), "layer" (layer-aligned
+    param streaming) or "adapter" (adapter-only, frozen-base streamed LoRA).
+    The error names the flag that matches the checkpoint.
     """
     actual = "memory"
     if is_offload_checkpoint(rt.ckdir, last):
         actual = ("layer" if offload_checkpoint_layout(rt.ckdir, last) ==
                   LAYER_LAYOUT else "byte")
+    elif is_adapter_checkpoint(rt.ckdir, last):
+        actual = "adapter"
     if actual == expected:
         return
     kind = {"memory": "in-memory",
             "byte": "byte-balanced segment-offload",
-            "layer": "layer-aligned (param-streaming) segment-offload"}
+            "layer": "layer-aligned (param-streaming) segment-offload",
+            "adapter": "adapter-only (frozen-base streamed LoRA)"}
     flag = {"memory": "without offload flags",
             "byte": "with --offload-segments N",
-            "layer": "with --offload-stream-params"}
+            "layer": "with --offload-stream-params",
+            "adapter": "with --offload-stream-params --lora-rank N"}
     raise ValueError(
         f"{rt.ckdir} holds {kind[actual]} checkpoints; resume {flag[actual]} "
         f"(or point --out elsewhere)")
@@ -78,9 +85,11 @@ def train_loop(cfg: ModelConfig, tcfg: TrainConfig, *, out_dir: Optional[str],
                governor: Optional[EnergyGovernor] = None,
                dataset=None, print_fn=print):
     if tcfg.offload_stream_params:
-        return stream_train_loop(cfg, tcfg, out_dir=out_dir, seed=seed,
-                                 resume=resume, governor=governor,
-                                 dataset=dataset, print_fn=print_fn)
+        loop = (stream_lora_train_loop if tcfg.lora_rank > 0
+                else stream_train_loop)
+        return loop(cfg, tcfg, out_dir=out_dir, seed=seed,
+                    resume=resume, governor=governor,
+                    dataset=dataset, print_fn=print_fn)
     if tcfg.offload_segments > 0:
         return offload_train_loop(cfg, tcfg, out_dir=out_dir, seed=seed,
                                   resume=resume, governor=governor,
@@ -248,6 +257,124 @@ def stream_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
     return state, obs
 
 
+def stream_lora_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
+                           out_dir: Optional[str], seed: int = 0,
+                           resume: bool = True,
+                           governor: Optional[EnergyGovernor] = None,
+                           dataset=None, print_fn=print):
+    """PEFT on the streamed offload engine (paper C6 over C1, full depth):
+    the frozen base pages through *read-only* param-only layer segments —
+    no m/v segments, no dirty write-back, no gradient scratch — while the
+    (tiny) LoRA adapter and its AdamW state stay memory-resident.
+    ``merge_lora`` runs per block inside the jitted apply/VJP entry points,
+    so merged weights exist one block at a time.  Checkpoints are
+    **adapter-only**: base and adapter init both derive deterministically
+    from the seed (crc32 path fold, repro/param.py), so resume re-derives
+    the frozen base and restores just the adapter tree."""
+    rt = TrainerRuntime(cfg, tcfg, out_dir=out_dir, seed=seed,
+                        governor=governor, dataset=dataset, print_fn=print_fn)
+    if tcfg.offload_moment_dtype != "float32":
+        rt.log(f"[warn] --offload-moment-dtype {tcfg.offload_moment_dtype} "
+               "ignored: the frozen base layout stores params only "
+               "(no m/v segments); the adapter's moments live in RAM")
+    work_dir = offload_dir_for(out_dir, tcfg.offload_dir)
+    # the frozen base is fully determined by (arch, seed, param dtype)
+    base_tag = f"{cfg.name}|seed{seed}|{tcfg.param_dtype}"
+    # adapter init is tiny; the full base only materializes if the frozen
+    # segments still need laying out (see below)
+    adapter = init_adapter_state(jax.random.PRNGKey(seed), cfg, tcfg)
+    # everything the restored adapter is only valid against: base identity
+    # (base_tag covers arch/seed/dtype) and the merge hyperparameters —
+    # stamped into the checkpoint manifest, validated on resume
+    peft_meta = {"seed": int(seed), "base_tag": base_tag,
+                 "lora_rank": int(tcfg.lora_rank),
+                 "lora_alpha": float(tcfg.lora_alpha),
+                 "lora_targets": list(tcfg.lora_targets)}
+
+    start = 0
+    last = rt.latest_checkpoint()
+    if resume and last is not None:
+        _resume_layout_guard(rt, last, "adapter")
+        stored = checkpoint_meta(rt.ckdir, last)
+        bad = {k: (stored[k], v) for k, v in peft_meta.items()
+               if k in stored and stored[k] != v}
+        if bad:
+            raise ValueError(
+                f"{rt.ckdir} was written with different PEFT settings: " +
+                "; ".join(f"{k} was {was!r}, now {now!r}"
+                          for k, (was, now) in sorted(bad.items())) +
+                " — the adapter only matches the base/merge it was trained "
+                "against (rerun with the original flags, or point --out "
+                "elsewhere)")
+        adapter, start = restore(rt.ckdir, adapter)
+        start = int(start)
+        rt.log(f"[resume] adapter-only checkpoint step {start} "
+               f"(frozen base re-derived from seed {seed})")
+    # the frozen segments are read-only and seed-derived: a matching store
+    # left in work_dir by a previous run is reused as-is — no full-base RAM
+    # materialization and no parameter-sized rewrite to flash on restart
+    like_base = abstract_params(registry.param_specs(cfg),
+                                dtype=dtype_of(tcfg.param_dtype))
+    lstate = LayerStreamedState.open_frozen_if_matching(
+        work_dir, like_base, base_tag=base_tag,
+        max_resident=tcfg.offload_resident, prefetch=tcfg.offload_prefetch)
+    if lstate is not None:
+        rt.log("[stream+lora] reusing frozen base segments in "
+               f"{work_dir} (tag {base_tag})")
+    else:
+        # base only — the adapter above is the same tree init_state builds
+        base = init_params(jax.random.PRNGKey(seed),
+                           registry.param_specs(cfg),
+                           dtype=dtype_of(tcfg.param_dtype))
+        lstate = LayerStreamedState.create_frozen(
+            base, work_dir, base_tag=base_tag,
+            max_resident=tcfg.offload_resident,
+            prefetch=tcfg.offload_prefetch)
+        del base  # the read-only segment files own the base from here on
+
+    step_fn = make_stream_step(cfg, tcfg, lstate, grad_dir="",
+                               adapter=adapter)
+    # defer: the adapter/opt swap inside the update is not atomic mid-step
+    rt.install_sigterm(
+        lambda: rt.store.save_sync(step_fn.adapter_state(),
+                                   int(step_fn.adapter_state()["step"]),
+                                   extra_meta=peft_meta),
+        defer=True)
+    for step, batch in rt.steps(start):
+        loss, metrics = step_fn(batch, step)
+        rt.end_step(step, metrics)
+        if rt.checkpoint_due(step):
+            rt.store.save_async(step_fn.adapter_state(), step + 1,
+                                extra_meta=peft_meta)
+    if rt.store:
+        rt.store.wait()
+        rt.store.save_sync(step_fn.adapter_state(),
+                           int(step_fn.adapter_state()["step"]),
+                           extra_meta=peft_meta)
+    adapter = step_fn.adapter_state()
+    s = step_fn.stats()
+    adapter_mb = tree_bytes({"lora": adapter["lora"],
+                             "opt": adapter["opt"]}) / 1e6
+    rt.log(f"[stream+lora] {lstate.n_layers} frozen layer segments + head | "
+           f"base {s['param_store_bytes']/1e6:.1f} MB read-only | peak param "
+           f"window {s['param_peak_resident_bytes']/1e6:.1f} MB | adapter "
+           f"state {adapter_mb:.2f} MB resident | prefetch hit "
+           f"{s['param_prefetch_hits']}"
+           f"/{s['param_prefetch_hits']+s['param_sync_loads']}")
+    if out_dir:
+        save_adapter(os.path.join(out_dir, "adapter.safetensors"),
+                     adapter["lora"], rank=tcfg.lora_rank,
+                     alpha=tcfg.lora_alpha, targets=tcfg.lora_targets)
+    base = lstate.materialize_params()
+    step_fn.close()
+    lstate.close()
+    obs = rt.finish(f"{cfg.name} | streamed-LoRA r{tcfg.lora_rank} "
+                    f"x{lstate.n_layers}")
+    state = {"base": base, "lora": adapter["lora"], "opt": adapter["opt"],
+             "step": adapter["step"], "offload": lstate}
+    return state, obs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2_124m")
@@ -259,6 +386,13 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--lr", type=float, default=1e-5)
     ap.add_argument("--lora-rank", type=int, default=0)
+    ap.add_argument("--lora-alpha", type=float, default=None,
+                    help="LoRA scaling numerator (effective scale "
+                         "alpha/rank; default 32); requires --lora-rank")
+    ap.add_argument("--lora-targets", default=None,
+                    help="comma-separated leaf names to adapt (default "
+                         "wq,wk,wv,wo; use e.g. w_x,w_out for the ssm "
+                         "family); requires --lora-rank")
     ap.add_argument("--remat", default="none")
     ap.add_argument("--attention", default="streaming")
     ap.add_argument("--scan-layers", action=argparse.BooleanOptionalAction,
@@ -290,6 +424,21 @@ def main():
     ap.add_argument("--energy", action="store_true",
                     help="enable the K/mu/rho governor with a simulated battery")
     args = ap.parse_args()
+    # fail at parse time, not deep inside the first step's split_batch
+    if args.microbatches < 1:
+        ap.error(f"--microbatches must be >= 1, got {args.microbatches}")
+    if args.batch % args.microbatches != 0:
+        ap.error(f"--batch {args.batch} is not divisible by --microbatches "
+                 f"{args.microbatches}; each micro-batch must be equal-sized")
+    if args.lora_rank == 0 and (args.lora_alpha is not None
+                                or args.lora_targets is not None):
+        ap.error("--lora-alpha/--lora-targets have no effect without "
+                 "--lora-rank N")
+    lora_targets = tuple(
+        t.strip() for t in (args.lora_targets or "wq,wk,wv,wo").split(",")
+        if t.strip())
+    if args.lora_rank > 0 and not lora_targets:
+        ap.error("--lora-rank set but --lora-targets is empty")
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     tcfg = TrainConfig(
@@ -297,7 +446,9 @@ def main():
         microbatches=args.microbatches, learning_rate=args.lr,
         total_steps=args.steps, warmup_steps=max(args.steps // 20, 1),
         lora_rank=args.lora_rank,
-        lora_alpha=32.0 if args.lora_rank else 0.0,
+        lora_alpha=((32.0 if args.lora_alpha is None else args.lora_alpha)
+                    if args.lora_rank else 0.0),
+        lora_targets=lora_targets,
         remat_policy=args.remat, attention_impl=args.attention,
         scan_layers=args.scan_layers,
         compute_dtype="float32", checkpoint_every=args.checkpoint_every,

@@ -185,6 +185,21 @@ class LayerProgram(NamedTuple):
           -> (loss, metrics)                             eval / loss-only
       positions(b, s) -> position ids for block calls
 
+    When ``tcfg.lora_rank > 0`` the program is built in PEFT mode: every
+    entry point takes the (tiny, memory-resident) adapter sub-tree alongside
+    the frozen base tree, ``merge_lora`` is applied per block *inside* the
+    jit, and the VJPs differentiate with respect to the adapter only — the
+    cotangents returned alongside the activation cotangent are adapter
+    cotangents, and the base segments are never written:
+
+      embed(head, hlora, batch) -> x0
+      block(bp, blora, x, window, positions) -> (x, aux)
+      block_vjp(bp, blora, x, window, positions, dy, daux) -> (dblora, dx)
+      head_vjp(head, hlora, xL, batch, aux_sum)
+          -> (loss, metrics, dhlora, dxL, daux)
+      embed_vjp(head, hlora, batch, dx0) -> dhlora
+      head_loss(head, hlora, xL, batch, aux_sum) -> (loss, metrics)
+
     Per-step loss/grads match the in-memory jit path up to re-association
     noise (equivalence-tested at 1e-5 on the smoke configs).
     """
@@ -195,6 +210,7 @@ class LayerProgram(NamedTuple):
     embed_vjp: Any
     head_loss: Any
     positions: Any
+    lora: bool = False
 
 
 def make_layer_program(cfg: ModelConfig, tcfg: TrainConfig) -> LayerProgram:
@@ -246,6 +262,60 @@ def make_layer_program(cfg: ModelConfig, tcfg: TrainConfig) -> LayerProgram:
         metrics["aux_loss"] = aux
         return loss + aux, metrics
 
+    def positions(b, s):
+        return _positions(cfg, b, s)
+
+    if tcfg.lora_rank > 0:
+        from repro.core.lora import merge_lora
+        rank, alpha = tcfg.lora_rank, tcfg.lora_alpha
+
+        # merge_lora(train=True) stop-gradients every base leaf, so even
+        # though the VJPs below only differentiate the adapter args, the
+        # merged weights W' = sg(W) + (alpha/r) A@B are formed inside the
+        # jit — one block's merged copy at a time, never a full tree.
+        def lora_block_fn(bp, blp, x, window, positions):
+            return block_fn(merge_lora(bp, blp, rank=rank, alpha=alpha),
+                            x, window, positions)
+
+        def lora_embed_fn(head, hlp, batch):
+            return embed_fn(merge_lora(head, hlp, rank=rank, alpha=alpha),
+                            batch)
+
+        def lora_head_fn(head, hlp, x, batch, aux_sum):
+            return head_fn(merge_lora(head, hlp, rank=rank, alpha=alpha),
+                           x, batch, aux_sum)
+
+        @jax.jit
+        def lora_block_vjp(bp, blp, x, window, positions, dy, daux):
+            _, f_vjp = jax.vjp(
+                lambda lp, xx: lora_block_fn(bp, lp, xx, window, positions),
+                blp, x)
+            dlp, dx = f_vjp((dy, daux))
+            return dlp, dx
+
+        @jax.jit
+        def lora_head_vjp(head, hlp, x, batch, aux_sum):
+            loss, f_vjp, metrics = jax.vjp(
+                lambda lp, xx, a: lora_head_fn(head, lp, xx, batch, a),
+                hlp, x, aux_sum, has_aux=True)
+            dhlp, dx, daux = f_vjp(jnp.ones((), loss.dtype))
+            return loss, metrics, dhlp, dx, daux
+
+        @jax.jit
+        def lora_embed_vjp(head, hlp, batch, dx):
+            _, f_vjp = jax.vjp(lambda lp: lora_embed_fn(head, lp, batch),
+                               hlp)
+            (dhlp,) = f_vjp(dx)
+            return dhlp
+
+        return LayerProgram(embed=jax.jit(lora_embed_fn),
+                            block=jax.jit(lora_block_fn),
+                            block_vjp=lora_block_vjp,
+                            head_vjp=lora_head_vjp,
+                            embed_vjp=lora_embed_vjp,
+                            head_loss=jax.jit(lora_head_fn),
+                            positions=positions, lora=True)
+
     @jax.jit
     def block_vjp(bp, x, window, positions, dy, daux):
         _, f_vjp = jax.vjp(
@@ -266,9 +336,6 @@ def make_layer_program(cfg: ModelConfig, tcfg: TrainConfig) -> LayerProgram:
         _, f_vjp = jax.vjp(lambda h: embed_fn(h, batch), head)
         (dhead,) = f_vjp(dx)
         return dhead
-
-    def positions(b, s):
-        return _positions(cfg, b, s)
 
     return LayerProgram(embed=jax.jit(embed_fn), block=jax.jit(block_fn),
                         block_vjp=block_vjp, head_vjp=head_vjp,

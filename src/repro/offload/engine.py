@@ -109,10 +109,14 @@ class OffloadEngine:
     """LRU-resident window + prefetch + dirty write-back over segments."""
 
     def __init__(self, store: SegmentStore, max_resident: int = 2,
-                 prefetch: bool = True):
+                 prefetch: bool = True, read_only: bool = False):
         assert max_resident >= 1
         self.store = store
         self.max_resident = max_resident
+        # read-only window mode (frozen-base PEFT streaming): segments are
+        # never dirtied, so eviction is a plain drop and mark_dirty is a
+        # programming error rather than a silent corruption vector
+        self.read_only = read_only
         self._resident: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()
         self._dirty: set = set()
         self._prefetcher: Optional[Prefetcher] = (
@@ -165,6 +169,10 @@ class OffloadEngine:
         return int(sum(self.store.seg_nbytes[s] for s in segs))
 
     def mark_dirty(self, seg: int):
+        if self.read_only:
+            raise RuntimeError(
+                f"segment {seg} is in a read-only window (frozen base "
+                "layout) — nothing may be written back")
         assert seg in self._resident, seg
         self._dirty.add(seg)
 

@@ -121,6 +121,12 @@ class SegmentStore:
         overwrites everything (e.g. the gradient sink).
         """
         os.makedirs(directory, exist_ok=True)
+        # drop any previous mapping table first: an interrupted re-layout
+        # must never leave a stale table pointing at partially overwritten
+        # segment bytes (the table lands again, atomically, at the end)
+        stale = os.path.join(directory, cls.TABLE)
+        if os.path.exists(stale):
+            os.remove(stale)
         arrs = [[(n, np.asarray(a)) for n, a in g] for g in groups]
         sizes = [sum(a.nbytes for _, a in g) for g in arrs]
         if group_labels is not None:
@@ -228,32 +234,46 @@ class SegmentStore:
     # ------------------------------------------------------------------
     def read_segment(self, seg: int, copy: bool = True
                      ) -> Dict[str, np.ndarray]:
-        """All leaves of one segment.  ``copy=False`` returns read-only
-        views into the page-cache mmap (zero-copy restore path); ``copy=True``
-        returns private arrays safe to mutate."""
+        """All leaves of one segment.
+
+        ``copy=True`` returns private arrays safe to mutate; the memory map
+        (and its file descriptor) is closed before returning — relying on GC
+        to drop the map would pin one fd per call until collection.
+
+        ``copy=False`` returns read-only views into the page-cache mmap
+        (zero-copy restore path).  Each view's ``.base`` chain keeps the map
+        — and its fd — alive until *every* view is garbage-collected, so
+        hold the result only for as long as the zero-copy read is needed and
+        never across a ``write_segment``/``_break_cow`` of the same segment
+        (the views would keep reading the replaced inode)."""
         mm = np.memmap(self.segment_path(seg), dtype=np.uint8, mode="r")
-        out = {}
-        for r in self._seg_leaves[seg]:
-            flat = mm[r.offset:r.offset + r.nbytes].view(_np_dtype(r.dtype))
-            arr = flat.reshape(r.shape)
-            out[r.name] = np.array(arr) if copy else arr
-        if copy:
-            del mm
-        return out
+        try:
+            out = {}
+            for r in self._seg_leaves[seg]:
+                flat = mm[r.offset:r.offset + r.nbytes].view(
+                    _np_dtype(r.dtype))
+                arr = flat.reshape(r.shape)
+                out[r.name] = np.array(arr) if copy else arr
+            return out
+        finally:
+            if copy:
+                mm._mmap.close()   # release the fd now, not at GC time
 
     def write_segment(self, seg: int, named: Dict[str, np.ndarray]):
         """Write (a subset of) one segment's leaves back and flush.  Breaks
         any snapshot hardlink first (copy-on-write)."""
         self._break_cow(seg)
         mm = np.memmap(self.segment_path(seg), dtype=np.uint8, mode="r+")
-        for name, value in named.items():
-            r = self._by_name[name]
-            assert r.segment == seg, (name, r.segment, seg)
-            a = np.ascontiguousarray(np.asarray(value), _np_dtype(r.dtype))
-            assert a.nbytes == r.nbytes, (name, a.nbytes, r.nbytes)
-            mm[r.offset:r.offset + r.nbytes] = _as_bytes(a)
-        mm.flush()
-        del mm
+        try:
+            for name, value in named.items():
+                r = self._by_name[name]
+                assert r.segment == seg, (name, r.segment, seg)
+                a = np.ascontiguousarray(np.asarray(value), _np_dtype(r.dtype))
+                assert a.nbytes == r.nbytes, (name, a.nbytes, r.nbytes)
+                mm[r.offset:r.offset + r.nbytes] = _as_bytes(a)
+            mm.flush()
+        finally:
+            mm._mmap.close()       # no views escape this scope
 
     def _break_cow(self, seg: int):
         if not self._cow[seg]:

@@ -57,10 +57,15 @@ class OffloadedTrainState:
     def __init__(self, store: SegmentStore, *, treedef, names: List[str],
                  max_resident: int = 2, prefetch: bool = True):
         self.store = store
+        # frozen layout (PEFT base): p-segments only, no m/v, and the window
+        # is read-only — the base is never updated, so nothing is ever
+        # dirtied or written back
+        self.frozen = bool(store.meta.get("frozen", False))
         # a window below 1 cannot hold the segment being computed on; clamp
         # like the grad engine does (repro/core/stream.py)
         self.engine = OffloadEngine(store, max_resident=max(1, max_resident),
-                                    prefetch=prefetch)
+                                    prefetch=prefetch,
+                                    read_only=self.frozen)
         self.treedef = treedef
         self.names = names
         self.count = int(store.meta.get("count", 0))
@@ -146,6 +151,10 @@ class OffloadedTrainState:
         ``gnamed`` maps this segment's plain param names to gradients.
         Moments stored in a reduced dtype round-trip through float32.
         Returns the new param arrays (name -> jnp)."""
+        if self.frozen:
+            raise RuntimeError(
+                "frozen (param-only) layout holds no optimizer state — the "
+                "base is read-only; train the adapter instead")
         data = self.engine.acquire(seg)
         pnames = self._seg_pnames[seg]
         sub_p = {n: data[P + n] for n in pnames}
@@ -192,7 +201,8 @@ class OffloadedTrainState:
     # ------------------------------------------------------------------
     def flush(self):
         self.engine.flush()
-        self.store.write_meta(count=self.count, step=self.step)
+        if not self.frozen:     # a frozen base carries no step counters
+            self.store.write_meta(count=self.count, step=self.step)
 
     def snapshot(self, dest_dir: str):
         """Zero-copy checkpoint of the whole state (see SegmentStore)."""
@@ -225,6 +235,12 @@ class LayerStreamedState(OffloadedTrainState):
     everything outside the block stack (embed, ln_f, wpe, meta, ...).  The
     streamed driver pulls one block segment through the LRU window per layer
     of compute and never materializes the stacked tree.
+
+    ``create_frozen`` lays out the *param-only* variant for PEFT: the same
+    layer-aligned geometry but p-segments without m/v (the frozen base needs
+    no optimizer state), served through a read-only window — no dirty
+    tracking, no write-back, no gradient scratch.  The (tiny) trainable
+    adapter lives outside this store entirely (repro/core/stream.py).
     """
 
     def __init__(self, store: SegmentStore, *, like_params,
@@ -245,6 +261,33 @@ class LayerStreamedState(OffloadedTrainState):
     # ------------------------------------------------------------------
     # construction
     # ------------------------------------------------------------------
+    @staticmethod
+    def _per_layer_name(full_name: str, idx: Optional[int]) -> str:
+        """Stacked leaf name -> per-layer leaf name (head leaves unchanged)."""
+        if idx is None:
+            return full_name
+        return ("blocks.%d." % idx) + full_name[len("blocks."):]
+
+    @staticmethod
+    def _layer_groups(params, pack):
+        """Shared layer-aligned grouping walk: splits the stacked tree into
+        one group per block (leading ``layers`` dim sliced off) plus a
+        trailing head group.  ``pack(full_name, idx) -> [(name, arr), ...]``
+        emits one tensor's leaf records (p only, or the (p, m, v) triple).
+        Returns (groups, labels, n_layers)."""
+        named_p = flatten_names(params)
+        block_names = [n for n, _ in named_p if n.startswith("blocks.")]
+        head_names = [n for n, _ in named_p if not n.startswith("blocks.")]
+        n_layers = (int(dict(named_p)[block_names[0]].shape[0])
+                    if block_names else 0)
+        groups, labels = [], []
+        for i in range(n_layers):
+            groups.append([t for n in block_names for t in pack(n, i)])
+            labels.append(f"layer:{i}")
+        groups.append([t for n in head_names for t in pack(n, None)])
+        labels.append("head")
+        return groups, labels, n_layers
+
     @classmethod
     def create(cls, state: Dict[str, Any], directory: str, *,
                max_resident: int = 2, prefetch: bool = True,
@@ -253,35 +296,22 @@ class LayerStreamedState(OffloadedTrainState):
         block leaves are split on their leading ``layers`` dim into one group
         per block, plus a trailing head group."""
         params = state["params"]
-        named_p = flatten_names(params)
-        named_m = dict(flatten_names(state["opt"]["m"]))
-        named_v = dict(flatten_names(state["opt"]["v"]))
         host = jax.device_get
-        block_items = [(n, host(leaf)) for n, leaf in named_p
-                       if n.startswith("blocks.")]
-        head_items = [(n, host(leaf)) for n, leaf in named_p
-                      if not n.startswith("blocks.")]
-        n_layers = int(block_items[0][1].shape[0]) if block_items else 0
+        named_p = {n: host(x) for n, x in flatten_names(params)}
+        named_m = {n: host(x) for n, x in flatten_names(state["opt"]["m"])}
+        named_v = {n: host(x) for n, x in flatten_names(state["opt"]["v"])}
 
-        def triple(full_name, p_arr, idx=None):
-            m = host(named_m[full_name])
-            v = host(named_v[full_name])
+        def triple(full_name, idx):
+            p, m, v = (named_p[full_name], named_m[full_name],
+                       named_v[full_name])
             if idx is not None:
-                m, v = m[idx], v[idx]
-                full_name = ("blocks.%d." % idx) + full_name[len("blocks."):]
-            return [(P + full_name, np.asarray(p_arr)),
-                    (M + full_name, _cast_moment(np.asarray(m), moment_dtype)),
-                    (V + full_name, _cast_moment(np.asarray(v), moment_dtype))]
+                p, m, v = p[idx], m[idx], v[idx]
+            name = cls._per_layer_name(full_name, idx)
+            return [(P + name, np.asarray(p)),
+                    (M + name, _cast_moment(np.asarray(m), moment_dtype)),
+                    (V + name, _cast_moment(np.asarray(v), moment_dtype))]
 
-        groups, labels = [], []
-        for i in range(n_layers):
-            g = []
-            for n, leaf in block_items:
-                g += triple(n, leaf[i], idx=i)
-            groups.append(g)
-            labels.append(f"layer:{i}")
-        groups.append([t for n, leaf in head_items for t in triple(n, leaf)])
-        labels.append("head")
+        groups, labels, n_layers = cls._layer_groups(params, triple)
         meta = {"count": int(state["opt"]["count"]),
                 "step": int(state["step"]), "kind": "offload_state_v1",
                 "layout": LAYER_LAYOUT, "n_layers": n_layers,
@@ -290,6 +320,56 @@ class LayerStreamedState(OffloadedTrainState):
                                     meta=meta, group_labels=labels)
         return cls(store, like_params=params, max_resident=max_resident,
                    prefetch=prefetch)
+
+    @classmethod
+    def create_frozen(cls, params, directory: str, *, max_resident: int = 2,
+                      prefetch: bool = True, base_tag: str = ""
+                      ) -> "LayerStreamedState":
+        """Page a frozen base out param-only (no m/v segments): one p-segment
+        per block plus the head segment, read-only through fwd/bwd.  Resident
+        bytes per segment drop to ~1/3 of the Full-FT layout.
+
+        ``base_tag`` identifies how the base was derived (e.g. arch + seed);
+        ``open_frozen_if_matching`` uses it to reuse an existing store on
+        restart instead of rewriting every segment file."""
+        host = jax.device_get
+        named_p = {n: host(x) for n, x in flatten_names(params)}
+
+        def p_only(full_name, idx):
+            p = named_p[full_name]
+            if idx is not None:
+                p = p[idx]
+            return [(P + cls._per_layer_name(full_name, idx), np.asarray(p))]
+
+        groups, labels, n_layers = cls._layer_groups(params, p_only)
+        meta = {"kind": "offload_state_v1", "layout": LAYER_LAYOUT,
+                "n_layers": n_layers, "frozen": True, "base_tag": base_tag}
+        store = SegmentStore.create(directory, groups, len(groups),
+                                    meta=meta, group_labels=labels)
+        return cls(store, like_params=params, max_resident=max_resident,
+                   prefetch=prefetch)
+
+    @classmethod
+    def open_frozen_if_matching(cls, directory: str, like_params, *,
+                                base_tag: str, max_resident: int = 2,
+                                prefetch: bool = True
+                                ) -> Optional["LayerStreamedState"]:
+        """Reattach to an existing frozen store iff it was created from the
+        same base (``base_tag`` match) — the segments are read-only and
+        seed-derived, so reuse skips re-paging the whole model to flash on
+        every restart.  Returns None on any mismatch or unreadable store."""
+        if not os.path.isfile(os.path.join(directory, SegmentStore.TABLE)):
+            return None
+        try:
+            st = cls.open(directory, like_params,
+                          max_resident=max_resident, prefetch=prefetch)
+        except Exception:       # corrupt/foreign table -> lay out fresh
+            return None
+        if (st.frozen and base_tag
+                and st.store.meta.get("base_tag") == base_tag):
+            return st
+        st.close()
+        return None
 
     @classmethod
     def open(cls, directory: str, like_params, *, max_resident: int = 2,

@@ -82,6 +82,16 @@ def test_lora_merge_math():
                                rtol=1e-6)
 
 
+def test_lora_rejects_targets_matching_nothing():
+    """A typo'd (or wrong-family) target list used to produce an empty
+    adapter that silently trained zero parameters."""
+    cfg = configs.get_smoke("mamba2_130m")     # no wq/wk/wv/wo leaves
+    tcfg = TrainConfig(global_batch=2, seq_len=8, lora_rank=4,
+                       compute_dtype="float32")
+    with pytest.raises(ValueError, match="lora_targets"):
+        init_state(jax.random.PRNGKey(0), cfg, tcfg)
+
+
 def test_lora_trains_only_adapter():
     cfg = configs.get_smoke("qwen25_05b")
     tcfg = TrainConfig(global_batch=2, seq_len=8, lora_rank=4,
@@ -175,3 +185,34 @@ def test_governor_check_every_k():
     assert not gov.throttled
     gov.after_step(5, 0.1)
     assert gov.throttled
+
+
+def test_governor_rejects_degenerate_reduction():
+    """rho >= 1 makes the stretch t/(1-rho) diverge (regression: used to
+    reach after_step and die with ZeroDivisionError at rho = 1)."""
+    for rho in (1.0, 1.5, -0.1):
+        with pytest.raises(ValueError, match="rho"):
+            EnergyGovernor(reduction=rho)
+    # construction-time validation can be bypassed by mutating the (mutable)
+    # dataclass afterwards; after_step must clamp instead of dividing by 0
+    gov = EnergyGovernor(check_every=1, threshold=0.99, reduction=0.5,
+                         monitor=SimulatedBattery(level=10.0),
+                         sleep_fn=lambda s: None)
+    gov.reduction = 1.0
+    delay = gov.after_step(0, 0.1)       # throttled; must not raise
+    assert np.isfinite(delay)
+
+
+# ---------------------------------------------------------------------------
+# C2: split_batch input validation (regression: bare assert, stripped
+# under python -O and reporting an opaque tuple)
+# ---------------------------------------------------------------------------
+def test_split_batch_rejects_indivisible_batch():
+    from repro.core.accumulate import split_batch
+    batch = {"tokens": jnp.zeros((5, 8), jnp.int32)}
+    with pytest.raises(ValueError, match="not divisible"):
+        split_batch(batch, 2)
+    with pytest.raises(ValueError, match="microbatches"):
+        split_batch(batch, 0)
+    out = split_batch({"tokens": jnp.zeros((6, 8), jnp.int32)}, 3)
+    assert out["tokens"].shape == (3, 2, 8)

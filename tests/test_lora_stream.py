@@ -1,0 +1,348 @@
+"""PEFT on the streamed offload engine (paper C6 over C1; repro/core/stream.py).
+
+Covers: streamed-LoRA vs in-memory-LoRA loss/grad equivalence (dense and
+ssm families), the frozen param-only layout (p-segments without m/v, a
+read-only window that never writes back), the analytic frozen-layout
+resident bound, adapter-only checkpoint resume determinism, the
+cross-layout resume guards, and the adapter/merged safetensors exports.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.config import TrainConfig
+from repro.core.lora import lora_specs, merge_lora
+from repro.core.step import init_state, make_stream_step, make_train_step
+from repro.core.zero import lora_stream_resident_bytes, stream_resident_bytes
+from repro.launch.train import train_loop
+from repro.models import registry
+from repro.offload import LayerStreamedState
+from repro.param import flatten_names
+
+SSM_TARGETS = ("w_x", "w_out")
+
+
+def _batch(cfg, batch=4, seq=32, seed=1):
+    b = registry.make_batch(jax.random.PRNGKey(seed), cfg, batch, seq)
+    b["labels"] = b["tokens"]
+    return b
+
+
+def _tcfg(**kw):
+    base = dict(global_batch=4, seq_len=32, learning_rate=1e-3,
+                total_steps=10, warmup_steps=1, compute_dtype="float32",
+                lora_rank=4, lora_alpha=16.0)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def _adapter_of(state):
+    return {"lora": state["lora"], "opt": state["opt"],
+            "step": state["step"]}
+
+
+# ---------------------------------------------------------------------------
+# adapter grad + loss equivalence vs the in-memory LoRA jit path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,targets", [
+    ("gpt2_124m", ("wq", "wk", "wv", "wo")),
+    ("mamba2_130m", SSM_TARGETS),
+], ids=["dense", "ssm"])
+def test_streamed_lora_grads_match_jit_path(arch, targets, tmp_path):
+    cfg = configs.get_smoke(arch)
+    tcfg = _tcfg(grad_clip=0.0, lora_targets=targets)
+    batch = _batch(cfg)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+
+    # reference adapter gradients straight off the merged in-memory loss
+    model_loss = registry.loss_fn(cfg)
+
+    def loss_of(lora):
+        params = merge_lora(state["base"], lora, rank=tcfg.lora_rank,
+                            alpha=tcfg.lora_alpha)
+        loss, _ = model_loss(params, batch, cfg, tcfg)
+        return loss
+
+    loss_mem, grads_mem = jax.jit(jax.value_and_grad(loss_of))(state["lora"])
+    gnamed = {n: np.asarray(g, np.float32)
+              for n, g in flatten_names(grads_mem)}
+
+    lstate = LayerStreamedState.create_frozen(state["base"],
+                                              str(tmp_path / "segs"))
+    step_fn = make_stream_step(cfg, tcfg, lstate, "",
+                               adapter=_adapter_of(state))
+    loss_eval, _ = step_fn.loss_only(batch)       # streamed eval, pre-update
+    np.testing.assert_allclose(float(loss_mem), float(loss_eval), atol=1e-5)
+
+    # one two-sweep pass fills the in-memory adapter-grad accumulator
+    loss_s, _, _ = step_fn._two_sweeps(batch, True, True, 1)
+    np.testing.assert_allclose(float(loss_mem), float(loss_s), atol=1e-5)
+    for name, g in flatten_names(step_fn._acc):
+        np.testing.assert_allclose(np.asarray(g, np.float32), gnamed[name],
+                                   atol=1e-5, rtol=1e-4)
+    # the frozen base never sees a write
+    assert step_fn.stats()["param_bytes_written"] == 0
+    step_fn.close()
+    lstate.close()
+
+
+# ---------------------------------------------------------------------------
+# smoke-train equivalence (acceptance bar: <=1e-5/step over >=10 steps)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("micro", [1, 2])
+def test_stream_lora_smoke_train_matches_in_memory(tmp_path, micro):
+    cfg = configs.get_smoke("gpt2_124m")
+    base = dict(global_batch=4, seq_len=32, learning_rate=1e-3,
+                microbatches=micro, total_steps=10, warmup_steps=1,
+                compute_dtype="float32", lora_rank=4, lora_alpha=16.0)
+    _, obs_mem = train_loop(cfg, TrainConfig(**base), out_dir=None,
+                            print_fn=None)
+    _, obs_str = train_loop(
+        cfg, TrainConfig(**base, offload_stream_params=True,
+                         offload_dir=str(tmp_path / "segs")),
+        out_dir=None, print_fn=None)
+    losses_mem = [r["loss"] for r in obs_mem.rows]
+    losses_str = [r["loss"] for r in obs_str.rows]
+    assert len(losses_str) == 10
+    np.testing.assert_allclose(losses_mem, losses_str, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# frozen layout: p-only segments, read-only window, resident bound
+# ---------------------------------------------------------------------------
+def test_frozen_layout_is_param_only_and_read_only(tmp_path):
+    cfg = configs.get_smoke("gpt2_124m")
+    tcfg = _tcfg()
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    lstate = LayerStreamedState.create_frozen(state["base"],
+                                              str(tmp_path / "segs"))
+    # param bytes only: exactly 1/3 of the (p, m, v) fp32 layout
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(state["base"]))
+    assert lstate.store.total_bytes == n * 4
+    assert lstate.frozen and lstate.engine.read_only
+    assert lstate.store.num_segments == cfg.n_layers + 1
+    # every segment holds p.* leaves only — no m/v records anywhere
+    assert all(r.name.startswith("p.") for r in lstate.store.records)
+    # the window refuses writes
+    lstate.engine.acquire(0)
+    with pytest.raises(RuntimeError, match="read-only"):
+        lstate.engine.mark_dirty(0)
+    # and the streamed AdamW path refuses the frozen layout
+    with pytest.raises(RuntimeError, match="frozen"):
+        lstate._update_segment(0, {}, jnp.zeros((), jnp.int32), lr=1e-3,
+                               beta1=0.9, beta2=0.999, eps=1e-8,
+                               weight_decay=0.0)
+    # materialized base is bit-identical to what was paged out
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 state["base"], lstate.materialize_params())
+    lstate.close()
+
+
+def test_mode_layout_mismatches_are_rejected(tmp_path):
+    cfg = configs.get_smoke("gpt2_124m")
+    state = init_state(jax.random.PRNGKey(0), cfg, _tcfg())
+    frozen = LayerStreamedState.create_frozen(state["base"],
+                                              str(tmp_path / "f"))
+    # Full-FT streaming over a frozen store: no optimizer state to stream
+    with pytest.raises(ValueError, match="frozen"):
+        make_stream_step(cfg, _tcfg(lora_rank=0), frozen,
+                         str(tmp_path / "g"))
+    # LoRA without the adapter state
+    with pytest.raises(ValueError, match="adapter"):
+        make_stream_step(cfg, _tcfg(), frozen, "")
+    frozen.close()
+    # LoRA over a full (p, m, v) layout: wrong store kind
+    full_state = init_state(jax.random.PRNGKey(0), cfg, _tcfg(lora_rank=0))
+    full = LayerStreamedState.create(full_state, str(tmp_path / "pmv"))
+    with pytest.raises(ValueError, match="frozen"):
+        make_stream_step(cfg, _tcfg(), full, "", adapter=_adapter_of(state))
+    full.close()
+    # microbatches must be validated, not silently clamped
+    with pytest.raises(ValueError, match="microbatches"):
+        make_stream_step(cfg, _tcfg(microbatches=0), frozen, "",
+                         adapter=_adapter_of(state))
+
+
+def test_frozen_store_reuse_on_restart(tmp_path):
+    """Restarting a streamed-LoRA run must reattach to the existing frozen
+    segments (they are read-only and seed-derived) instead of re-paging the
+    whole base to flash — guarded by the base_tag stamp."""
+    cfg = configs.get_smoke("gpt2_124m")
+    state = init_state(jax.random.PRNGKey(0), cfg, _tcfg())
+    d = str(tmp_path / "segs")
+    lst = LayerStreamedState.create_frozen(state["base"], d,
+                                           base_tag="gpt2|seed0|float32")
+    lst.close()
+    re = LayerStreamedState.open_frozen_if_matching(
+        d, state["base"], base_tag="gpt2|seed0|float32")
+    assert re is not None and re.frozen
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 state["base"], re.materialize_params())
+    re.close()
+    # a different tag (other seed/arch/dtype) must refuse the stale store
+    assert LayerStreamedState.open_frozen_if_matching(
+        d, state["base"], base_tag="gpt2|seed1|float32") is None
+    # and a Full-FT (p, m, v) store is never treated as a frozen base
+    full = LayerStreamedState.create(
+        init_state(jax.random.PRNGKey(0), cfg, _tcfg(lora_rank=0)),
+        str(tmp_path / "pmv"))
+    full.close()
+    assert LayerStreamedState.open_frozen_if_matching(
+        str(tmp_path / "pmv"), state["base"],
+        base_tag="gpt2|seed0|float32") is None
+
+
+def test_frozen_resident_bound(tmp_path):
+    cfg = configs.get_smoke("gpt2_124m")
+    tcfg = _tcfg(total_steps=2)
+    specs = registry.param_specs(cfg)
+    lspecs = lora_specs(specs, tcfg.lora_targets, tcfg.lora_rank)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    adapter = _adapter_of(state)
+    from repro.param import tree_bytes
+    adapter_b = tree_bytes({"lora": adapter["lora"],
+                            "opt": adapter["opt"]})
+    lstate = LayerStreamedState.create_frozen(
+        state["base"], str(tmp_path / "segs"),
+        max_resident=tcfg.offload_resident)
+    step_fn = make_stream_step(cfg, tcfg, lstate, "", adapter=adapter)
+    batch = _batch(cfg)
+    for step in range(2):
+        step_fn(batch, step)
+    measured = step_fn.stats()["param_peak_resident_bytes"] + adapter_b
+    full, analytic = lora_stream_resident_bytes(
+        specs, lspecs, window=tcfg.offload_resident)
+    assert measured <= analytic
+    # the frozen bound undercuts the Full-FT streamed bound (m/v vanish)
+    _, full_ft = stream_resident_bytes(specs, window=tcfg.offload_resident)
+    assert analytic < full_ft
+    step_fn.close()
+    lstate.close()
+
+
+# ---------------------------------------------------------------------------
+# adapter-only checkpoints: resume determinism + cross-layout guards
+# ---------------------------------------------------------------------------
+def test_adapter_checkpoint_resume_determinism(tmp_path):
+    cfg = configs.get_smoke("gpt2_124m")
+    base = dict(global_batch=2, seq_len=16, learning_rate=1e-3,
+                schedule="constant", warmup_steps=1, compute_dtype="float32",
+                lora_rank=4, lora_alpha=16.0, offload_stream_params=True)
+    tA = TrainConfig(**base, total_steps=6)
+    _, oA = train_loop(cfg, tA, out_dir=str(tmp_path / "a"), print_fn=None)
+    out = str(tmp_path / "run")
+    tB1 = TrainConfig(**base, total_steps=3, checkpoint_every=3)
+    _, oB1 = train_loop(cfg, tB1, out_dir=out, print_fn=None)
+    # the checkpoint is adapter-only: lora.* leaves, no base/params tree
+    from repro.checkpoint.store import is_adapter_checkpoint, latest_step
+    ckdir = os.path.join(out, "ckpt")
+    last = latest_step(ckdir)
+    assert is_adapter_checkpoint(ckdir, last)
+    import json
+    with open(os.path.join(ckdir, f"step_{last:08d}",
+                           "manifest.json")) as f:
+        leaves = json.load(f)["leaves"]
+    assert any(k.startswith("lora.") for k in leaves)
+    assert not any(k.startswith(("base.", "params.")) for k in leaves)
+    tB2 = TrainConfig(**base, total_steps=6, checkpoint_every=3)
+    _, oB2 = train_loop(cfg, tB2, out_dir=out, print_fn=None)
+    assert oB2.rows[0]["step"] == 3            # actually resumed
+    lossesA = [r["loss"] for r in oA.rows]
+    lossesB = ([r["loss"] for r in oB1.rows] +
+               [r["loss"] for r in oB2.rows])
+    np.testing.assert_allclose(lossesA, lossesB, atol=1e-6)
+
+
+def test_cross_layout_resume_guards(tmp_path):
+    cfg = configs.get_smoke("gpt2_124m")
+    base = dict(global_batch=2, seq_len=16, total_steps=2,
+                checkpoint_every=2, warmup_steps=1, compute_dtype="float32")
+    out = str(tmp_path / "run")
+    train_loop(cfg, TrainConfig(**base, offload_stream_params=True,
+                                lora_rank=4, lora_alpha=16.0),
+               out_dir=out, print_fn=None)
+    # an adapter-only checkpoint refuses the Full-FT streamed resume path...
+    with pytest.raises(ValueError, match="adapter-only"):
+        train_loop(cfg, TrainConfig(**base, offload_stream_params=True),
+                   out_dir=out, print_fn=None)
+    # ...and the in-memory one
+    with pytest.raises(ValueError, match="adapter-only"):
+        train_loop(cfg, TrainConfig(**base), out_dir=out, print_fn=None)
+    # a Full-FT layer-streamed checkpoint refuses the streamed-LoRA resume
+    out2 = str(tmp_path / "run2")
+    train_loop(cfg, TrainConfig(**base, offload_stream_params=True),
+               out_dir=out2, print_fn=None)
+    with pytest.raises(ValueError, match="layer-aligned"):
+        train_loop(cfg, TrainConfig(**base, offload_stream_params=True,
+                                    lora_rank=4, lora_alpha=16.0),
+                   out_dir=out2, print_fn=None)
+    # an in-memory LoRA checkpoint (full state) is NOT adapter-only
+    out3 = str(tmp_path / "run3")
+    train_loop(cfg, TrainConfig(**base, lora_rank=4, lora_alpha=16.0),
+               out_dir=out3, print_fn=None)
+    with pytest.raises(ValueError, match="in-memory"):
+        train_loop(cfg, TrainConfig(**base, offload_stream_params=True,
+                                    lora_rank=4, lora_alpha=16.0),
+                   out_dir=out3, print_fn=None)
+
+
+def test_adapter_resume_rejects_mismatched_peft_settings(tmp_path):
+    """The frozen base is re-derived from the seed and the merge math from
+    rank/alpha — resuming an adapter checkpoint under different settings
+    must hard-error, not silently train against the wrong base."""
+    cfg = configs.get_smoke("gpt2_124m")
+    base = dict(global_batch=2, seq_len=16, total_steps=2,
+                checkpoint_every=2, warmup_steps=1, compute_dtype="float32",
+                offload_stream_params=True, lora_rank=4)
+    out = str(tmp_path / "run")
+    train_loop(cfg, TrainConfig(**base, lora_alpha=16.0), out_dir=out,
+               seed=0, print_fn=None)
+    longer = {**base, "total_steps": 4}
+    with pytest.raises(ValueError, match="seed"):
+        train_loop(cfg, TrainConfig(**longer, lora_alpha=16.0),
+                   out_dir=out, seed=1, print_fn=None)
+    with pytest.raises(ValueError, match="lora_alpha"):
+        train_loop(cfg, TrainConfig(**longer, lora_alpha=32.0),
+                   out_dir=out, seed=0, print_fn=None)
+    # matching settings still resume fine
+    _, obs = train_loop(cfg, TrainConfig(**longer, lora_alpha=16.0),
+                        out_dir=out, seed=0, print_fn=None)
+    assert obs.rows[0]["step"] == 2
+
+
+# ---------------------------------------------------------------------------
+# adapter / merged exports
+# ---------------------------------------------------------------------------
+def test_adapter_export_and_merged_export(tmp_path):
+    cfg = configs.get_smoke("gpt2_124m")
+    tcfg = _tcfg(total_steps=2, checkpoint_every=0)
+    out = str(tmp_path / "run")
+    state, _ = train_loop(
+        cfg, TrainConfig(**dict(
+            global_batch=2, seq_len=16, total_steps=2, warmup_steps=1,
+            compute_dtype="float32", lora_rank=4, lora_alpha=16.0,
+            offload_stream_params=True)),
+        out_dir=out, print_fn=None)
+    # the loop exports the bare adapter next to the run artifacts
+    from repro.checkpoint.safetensors import (load_safetensors, save_merged)
+    tensors, meta = load_safetensors(os.path.join(out,
+                                                  "adapter.safetensors"))
+    assert meta["format"] == "lora_adapter" and meta["lora_rank"] == "4"
+    assert all(k.startswith("lora.") for k in tensors)
+    named_lora = dict(flatten_names(state["lora"]))
+    for k, v in tensors.items():
+        np.testing.assert_array_equal(v, np.asarray(named_lora[k[5:]]))
+    # merged export equals merge_lora(train=False) applied to the state
+    mpath = save_merged(str(tmp_path / "merged.safetensors"),
+                        state["base"], state["lora"],
+                        rank=tcfg.lora_rank, alpha=tcfg.lora_alpha)
+    merged, mmeta = load_safetensors(mpath)
+    assert mmeta["format"] == "merged_model"
+    ref = merge_lora(state["base"], state["lora"], rank=tcfg.lora_rank,
+                     alpha=tcfg.lora_alpha, train=False)
+    for n, leaf in flatten_names(ref):
+        np.testing.assert_allclose(merged[n], np.asarray(leaf), atol=1e-6)
