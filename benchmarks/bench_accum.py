@@ -8,9 +8,8 @@ from __future__ import annotations
 import math
 
 import jax
-import numpy as np
 
-from benchmarks.common import row, time_call
+from benchmarks.common import row
 from repro import configs
 from repro.config import TrainConfig
 from repro.core.accumulate import value_and_grad_accumulated
@@ -34,7 +33,8 @@ def main(fast: bool = False):
                       attn_chunk=16)
     batch = {k: jax.numpy.asarray(v) for k, v in ds.example(0).items()}
     batch = {k: jax.numpy.stack([v] * 8) for k, v in batch.items()}
-    loss_fn = lambda p, b: registry.loss_fn(cfg)(p, b, cfg, tc0)
+    def loss_fn(p, b):
+        return registry.loss_fn(cfg)(p, b, cfg, tc0)
     _, _, g_full = value_and_grad_accumulated(loss_fn, params, batch, 1)
 
     for tag, micro in (("b8a1", 1), ("b4a2", 2), ("b2a4", 4), ("b1a8", 8)):

@@ -8,7 +8,6 @@ intermediate footprint across sequence lengths.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import row, time_call
 from repro.core.attention import attention

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import math
 
-import jax
 
 from benchmarks.common import row
 from repro import configs

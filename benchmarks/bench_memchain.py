@@ -16,6 +16,11 @@ Chains (cumulative, as in the paper):
   stream_lora  C6 over C1: LoRA over a frozen param-only base layout
             (read-only window, no m/v segments) with the adapter's AdamW
             memory-resident — the PEFT-on-a-phone-budget rows
+  stream_qlora  streamed LoRA over an int8-quantized frozen base
+            (--base-quant int8): the window holds the *encoded* segments
+            and the jitted per-block program dequantizes — measured +
+            analytic resident bytes and the on-flash base bytes next to
+            their fp32 frozen-base counterparts
 
 Measured on the REAL gpt2-124m config (paper's model) by compiling the
 train step on CPU and reading memory_analysis().temp bytes — compile-only,
@@ -41,11 +46,12 @@ from repro.config import TrainConfig
 from repro.core.step import (init_state, make_stream_step, make_train_step,
                              state_specs)
 from repro.core.lora import lora_specs
-from repro.core.zero import (bytes_per_device, lora_stream_resident_bytes,
+from repro.core.zero import (bytes_per_device, frozen_base_bytes,
+                             lora_stream_resident_bytes,
                              offload_resident_bytes, stream_resident_bytes)
 from repro.models import registry
 from repro.offload import LayerStreamedState, OffloadedTrainState
-from repro.param import abstract_params, tree_bytes, tree_map_specs
+from repro.param import tree_bytes
 
 
 def _compile_temp_bytes(cfg, tcfg):
@@ -107,6 +113,7 @@ def main(fast: bool = False):
     offload_rows(fast)
     stream_rows(fast)
     stream_lora_rows(fast)
+    stream_qlora_rows(fast)
 
 
 def offload_rows(fast: bool = False, num_segments: int = 8, window: int = 2):
@@ -248,6 +255,74 @@ def stream_lora_rows(fast: bool = False, window: int = 2, rank: int = 8):
     row("stream_lora_resident_analytic_124m", 0.0,
         f"state {full/1e6:.0f}MB -> resident {res/1e6:.0f}MB "
         f"(r{rank} window {window}; Full-FT streamed {res_fullft/1e6:.0f}MB)")
+
+
+def stream_qlora_rows(fast: bool = False, window: int = 2, rank: int = 8):
+    """Streamed QLoRA: int8 per-channel quantized frozen base — the window
+    holds the encoded segments (int8 codes + scales) and the jitted
+    per-block program dequantizes, so both the on-flash base bytes and the
+    resident window shrink ~4x vs the fp32 frozen base.  Measured rows run
+    the smoke config; analytic rows account the paper-scale model."""
+    arch = "gpt2_124m"
+    steps = 2 if fast else 4
+    cfg = configs.get_smoke(arch)
+    tcfg = TrainConfig(global_batch=4, seq_len=64, compute_dtype="float32",
+                       total_steps=steps, warmup_steps=1,
+                       offload_resident=window, lora_rank=rank,
+                       base_quant="int8")
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    adapter = {"lora": state["lora"], "opt": state["opt"],
+               "step": state["step"]}
+    adapter_b = tree_bytes(state["lora"]) + tree_bytes(
+        state["opt"]["m"]) + tree_bytes(state["opt"]["v"])
+    batch = registry.make_batch(jax.random.PRNGKey(1), cfg,
+                                tcfg.global_batch, tcfg.seq_len)
+    batch["labels"] = batch["tokens"]
+    with tempfile.TemporaryDirectory() as d:
+        lst32 = LayerStreamedState.create_frozen(state["base"], d + "/f32",
+                                                 max_resident=window)
+        flash32 = lst32.store.total_bytes
+        lst32.close()
+        lst = LayerStreamedState.create_frozen(state["base"], d + "/i8",
+                                               max_resident=window,
+                                               quant="int8")
+        step = make_stream_step(cfg, tcfg, lst, "", adapter=adapter)
+        step(batch, 0)                  # warm the per-stage jit caches
+        t0 = time.perf_counter()
+        for i in range(steps):
+            step(batch, i + 1)
+        dt = time.perf_counter() - t0
+        s = step.stats()
+        flash8 = lst.store.total_bytes
+        resident = s["param_peak_resident_bytes"] + adapter_b
+        row("stream_qlora_resident_measured", dt / steps * 1e6,
+            f"base {flash8/1e6:.2f}MB int8 read-only -> resident "
+            f"{resident/1e6:.2f}MB (adapter {adapter_b/1e6:.2f}MB in RAM) "
+            f"r{rank} window {window} written_back "
+            f"{s['param_bytes_written']}B")
+        row("stream_qlora_flash_measured", 0.0,
+            f"on-flash frozen base {flash32/1e6:.2f}MB fp32 -> "
+            f"{flash8/1e6:.2f}MB int8 (x{flash32/max(flash8,1):.2f})")
+        step.close()
+        lst.close()
+    # analytic, on the paper-scale model: int8 base segments + scales, fp32
+    # norms/biases, memory-resident adapter state — next to the fp32 figures
+    full_cfg = configs.get(arch)
+    specs = registry.param_specs(full_cfg)
+    lspecs = lora_specs(specs, tcfg.lora_targets, rank)
+    _, res32 = lora_stream_resident_bytes(specs, lspecs, window)
+    _, res8 = lora_stream_resident_bytes(specs, lspecs, window,
+                                         base_quant="int8")
+    seg32, head32, n_layers = frozen_base_bytes(specs)
+    seg8, head8, _ = frozen_base_bytes(specs, base_quant="int8")
+    fl32 = seg32 * n_layers + head32
+    fl8 = seg8 * n_layers + head8
+    row("stream_qlora_resident_analytic_124m", 0.0,
+        f"resident {res32/1e6:.0f}MB fp32-base -> {res8/1e6:.0f}MB int8-base "
+        f"(x{res32/max(res8,1):.1f}; r{rank} window {window})")
+    row("stream_qlora_flash_analytic_124m", 0.0,
+        f"on-flash frozen base {fl32/1e6:.0f}MB -> {fl8/1e6:.0f}MB "
+        f"(x{fl32/max(fl8,1):.2f})")
 
 
 def main_cli():

@@ -11,7 +11,6 @@ import dataclasses
 import os
 import shutil
 
-import jax
 import numpy as np
 
 from repro import configs

@@ -20,7 +20,7 @@ from repro import configs
 from repro.checkpoint import save_safetensors
 from repro.config import TrainConfig
 from repro.core.step import make_eval_step
-from repro.data.corpus import CHQA_CATEGORIES, chqa_pairs
+from repro.data.corpus import chqa_pairs
 from repro.data.dataset import QADataset, packed_batches
 from repro.data.tokenizer import ByteTokenizer
 from repro.launch.train import train_loop

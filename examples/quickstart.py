@@ -5,7 +5,6 @@ train() — realized with the repro public API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 
 from repro import configs
 from repro.config import TrainConfig

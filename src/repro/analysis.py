@@ -19,9 +19,7 @@ Conventions:
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import numpy as np
 
@@ -244,7 +242,7 @@ def step_hbm_bytes(cfg: ModelConfig, tcfg: TrainConfig, shape: ShapeSpec,
 
 
 def _cache_elems(cfg: ModelConfig, shape: ShapeSpec) -> float:
-    from repro.launch import dryrun as _d  # cache_len policy lives there
+    # cache_len policy mirrors repro.launch.dryrun: seq + 512 decode pad
     max_len = shape.seq_len + 512
     elems = 0.0
     if cfg.family != "ssm":

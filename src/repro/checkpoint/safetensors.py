@@ -53,15 +53,19 @@ def save_safetensors(path: str, tensors: Dict[str, np.ndarray],
 
 
 def save_adapter(path: str, lora_params, *, rank: int, alpha: float,
-                 targets=()) -> str:
+                 targets=(), base_quant: str = "") -> str:
     """Export the bare LoRA adapter: flat ``lora.<leaf>`` tensors plus the
     PEFT hyperparameters in the metadata, so a config is reproducible from
-    the file alone.  Pairs with ``save_merged`` for deployment."""
+    the file alone.  ``base_quant`` records the frozen-base codec the
+    adapter was trained against (an adapter learns around the quantization
+    error, so "int8" vs fp32 matters at apply time).  Pairs with
+    ``save_merged`` for deployment."""
     from repro.param import flatten_names
     named = {"lora." + n: np.asarray(v) for n, v in flatten_names(lora_params)}
     save_safetensors(path, named, metadata={
         "format": "lora_adapter", "lora_rank": rank, "lora_alpha": alpha,
-        "lora_targets": ",".join(targets)})
+        "lora_targets": ",".join(targets),
+        "base_quant": base_quant or "fp32"})
     return path
 
 

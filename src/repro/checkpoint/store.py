@@ -130,8 +130,13 @@ def save_offload(ostate, directory: str, step: int, keep: int = 3) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     ostate.snapshot(os.path.join(tmp, "segments"))
+    # the storage codecs travel with the checkpoint (the hardlinked mapping
+    # table is authoritative; the manifest copy makes them greppable and
+    # feeds the resume guards without opening the segment store)
     manifest = {"step": step, "time": time.time(), "offload": True,
-                "state_bytes": int(ostate.state_bytes)}
+                "state_bytes": int(ostate.state_bytes),
+                "moment_dtype": ostate.moment_dtype,
+                "base_quant": getattr(ostate, "base_quant", "")}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 
@@ -178,7 +178,10 @@ class TrainConfig:
                                        # params page through the window during
                                        # compute, not just the optimizer update
     offload_moment_dtype: str = "float32"  # float32 | bfloat16 (halves m/v segment
-                                       # bytes; round-trip cast in the update)
+                                       # bytes; bf16 segment codec, fp32 math)
+    base_quant: str = ""               # "" | int8: quantize the *frozen* base
+                                       # segments of streamed LoRA per channel
+                                       # (QLoRA-style; ~4x less flash + window)
 
     # --- LoRA (paper C6) ---
     lora_rank: int = 0                 # 0 -> Full-FT

@@ -9,7 +9,7 @@ optimizer update pays (visible in the roofline collective term).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

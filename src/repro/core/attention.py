@@ -22,9 +22,6 @@ position >= SENTINEL marks padding.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -8,13 +8,12 @@ or the bare adapter both fall out of the same tree (checkpoint/safetensors).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import TrainConfig
-from repro.param import ParamSpec, is_spec, spec
+from repro.param import is_spec, spec
 
 
 def _targeted(path_leaf: str, targets: Tuple[str, ...]) -> bool:

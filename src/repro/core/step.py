@@ -13,13 +13,12 @@ State pytrees:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import ModelConfig, RunConfig, TrainConfig, dtype_of
+from repro.config import ModelConfig, TrainConfig, dtype_of
 from repro.core.accumulate import value_and_grad_accumulated
 from repro.core.lora import lora_specs, merge_lora
 from repro.models import registry

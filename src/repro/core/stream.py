@@ -39,6 +39,12 @@ gradient scratch store.  The (tiny) LoRA adapter tree stays memory-resident;
 points, adapter cotangents accumulate in memory, and one in-memory AdamW
 updates the adapter after the sweeps.  Resident state drops to roughly a
 third of the Full-FT streamed bound (``repro.core.zero``).
+
+QLoRA composes on top (``tcfg.base_quant == "int8"``): the frozen base
+segments are per-channel quantized (repro/offload/codecs.py) and the window
+keeps them *encoded* — ``layer_params``/``head_params`` hand the program
+(codes, scales) tree pairs and the jitted entry points dequantize per
+block, so fp32 base weights only ever exist as XLA transients.
 """
 from __future__ import annotations
 
@@ -56,7 +62,8 @@ from repro.models import transformer as T
 from repro.models.lm import make_layer_program
 from repro.offload.engine import OffloadEngine
 from repro.offload.segments import SegmentStore
-from repro.offload.state import LayerStreamedState, P
+from repro.offload.state import (LayerStreamedState, P,
+                                 ensure_base_quant_match)
 from repro.optim.adamw import adamw_update
 from repro.optim.schedule import lr_schedule
 
@@ -106,6 +113,7 @@ class StreamedTrainStep:
         self.cfg, self.tcfg = cfg, tcfg
         self.lstate = lstate
         self.lora_mode = tcfg.lora_rank > 0
+        ensure_base_quant_match(lstate, tcfg.base_quant)
         self.program = make_layer_program(cfg, tcfg)
         self.windows = np.asarray(T.layer_windows(cfg))
         self.grad_engine: Optional[OffloadEngine] = None

@@ -12,13 +12,11 @@ This module provides the placement helpers the training loop uses.
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.param import is_spec, tree_map_specs
+from repro.param import is_spec
 from repro.sharding import PRESETS, resolve_spec, shardings_for_specs
 
 
@@ -86,22 +84,49 @@ def stream_resident_bytes(specs, window: int = 2, param_bytes: int = 4,
     return full_state, int(resident)
 
 
+def _quant_leaf_bytes(shape, param_bytes: int, base_quant: str) -> int:
+    """Stored bytes of one frozen-base leaf under a base quantization:
+    int8 quantizes matrix leaves (ndim >= 2) to 1 byte/element + one fp32
+    scale per last-axis channel; vector/scalar leaves stay full precision
+    (mirrors ``LayerStreamedState.create_frozen``'s codec assignment)."""
+    n = int(np.prod(shape)) if len(shape) else 1
+    if base_quant == "int8" and len(shape) >= 2:
+        return n + int(shape[-1]) * 4
+    return n * param_bytes
+
+
+def frozen_base_bytes(specs, param_bytes: int = 4, base_quant: str = ""):
+    """(per-layer segment bytes, head segment bytes, n_layers) of the frozen
+    param-only layout — the on-flash accounting of the streamed-LoRA base.
+    Stacked block leaves are sliced per layer before the quantization rule
+    applies, matching the stored layout."""
+    _, _, n_layers = _stream_geometry(specs)
+    layer_seg = sum(
+        _quant_leaf_bytes(s.shape[1:], param_bytes, base_quant)
+        for s in jax.tree.leaves(specs["blocks"], is_leaf=is_spec))
+    head = sum(_quant_leaf_bytes(s.shape, param_bytes, base_quant)
+               for k, sub in specs.items() if k != "blocks"
+               for s in jax.tree.leaves(sub, is_leaf=is_spec))
+    return layer_seg, head, n_layers
+
+
 def lora_stream_resident_bytes(specs, adapter_specs, window: int = 2,
-                               param_bytes: int = 4):
+                               param_bytes: int = 4, base_quant: str = ""):
     """Analytic peak resident state bytes of *streamed LoRA* (frozen base):
     the base segments hold params only — no m/v, so the streamed share is
     roughly 1/3 of the Full-FT streamed bound — and the whole trainable
     state (fp32 adapter + its AdamW m/v) stays memory-resident on top.
-    Returns (full_state, resident) bytes; ``adapter_specs`` is the LoRA
-    spec tree from ``repro.core.lora.lora_specs``."""
-    block_n, head_n, n_layers = _stream_geometry(specs)
-    layer_seg = block_n // max(n_layers, 1) * param_bytes
+    ``base_quant="int8"`` models the quantized frozen base: the window holds
+    the *encoded* segments, so its share shrinks ~4x along with the flash
+    bytes.  Returns (full_state, resident) bytes; ``adapter_specs`` is the
+    LoRA spec tree from ``repro.core.lora.lora_specs``."""
+    layer_seg, head_b, n_layers = frozen_base_bytes(specs, param_bytes,
+                                                    base_quant)
     adapter_n = sum(int(np.prod(s.shape))
                     for s in jax.tree.leaves(adapter_specs, is_leaf=is_spec))
     adapter_state = adapter_n * (4 + 8)     # fp32 adapter + fp32 m + v
-    full_state = (block_n + head_n) * param_bytes + adapter_state
-    resident = (head_n * param_bytes + (window + 1) * layer_seg
-                + adapter_state)
+    full_state = layer_seg * n_layers + head_b + adapter_state
+    resident = head_b + (window + 1) * layer_seg + adapter_state
     return full_state, int(resident)
 
 

@@ -9,11 +9,11 @@ packed_batches — fixed-shape (batch, seq) batches with shifted labels, -1 at
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, List, Sequence
+from typing import Dict, Iterator, Sequence
 
 import numpy as np
 
-from repro.data.tokenizer import BOS, EOS, PAD, ByteTokenizer
+from repro.data.tokenizer import PAD, ByteTokenizer
 
 IGNORE = -1
 

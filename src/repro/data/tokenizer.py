@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import collections
 import json
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Iterable, List, Optional, Tuple
 
 PAD, BOS, EOS = 0, 1, 2
 N_SPECIAL = 3

@@ -17,9 +17,6 @@ h // (H // KVH) inside the BlockSpec index maps.
 from __future__ import annotations
 
 import functools
-import math
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -79,9 +76,9 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
 
     @pl.when(ik == n_kv - 1)
     def _out():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
-        lse_ref[0, 0] = (m_scr[...] + jnp.log(l)).astype(lse_ref.dtype)
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_scr[...] + jnp.log(denom)).astype(lse_ref.dtype)
 
 
 def flash_fwd(q, k, v, *, scale, causal, window, q_offset, kv_len,

@@ -23,7 +23,6 @@ Collective wire-bytes model (documented here, used by §Roofline):
 """
 import argparse
 import json
-import math
 import re
 import time
 from typing import Any, Dict, Optional
@@ -38,7 +37,7 @@ from repro.core.step import make_train_step, state_specs
 from repro.launch.mesh import make_production_mesh
 from repro.models import registry
 from repro.param import ParamSpec, tree_map_specs
-from repro.sharding import PRESETS, resolve_spec, shardings_for_specs
+from repro.sharding import PRESETS, resolve_spec
 
 # ---------------------------------------------------------------------------
 # TPU v5e hardware constants (per chip)
@@ -151,7 +150,6 @@ _GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
 def _line_result_bytes(line: str) -> int:
     """Sum byte sizes of the result shapes on an HLO line (handles tuples)."""
-    lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1]
     # result type annotation appears right after '=': take shapes before op name
     m = re.search(r"=\s*(.*?)\s(all-gather|all-reduce|reduce-scatter|"
                   r"all-to-all|collective-permute)", line)

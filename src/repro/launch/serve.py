@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +16,6 @@ import numpy as np
 from repro import configs
 from repro.config import ModelConfig, TrainConfig
 from repro.core.step import make_serve_step
-from repro.data.tokenizer import ByteTokenizer
 from repro.models import registry
 from repro.param import init_params
 

@@ -73,13 +73,6 @@ def _resume_layout_guard(rt: TrainerRuntime, last: int, expected: str):
         f"(or point --out elsewhere)")
 
 
-def _warn_moment_dtype(rt: TrainerRuntime, ostate, tcfg: TrainConfig):
-    if ostate.moment_dtype != tcfg.offload_moment_dtype:
-        rt.log(f"[warn] --offload-moment-dtype {tcfg.offload_moment_dtype} "
-               f"ignored: the resumed segment files store "
-               f"{ostate.moment_dtype} moments (fixed at create time)")
-
-
 def train_loop(cfg: ModelConfig, tcfg: TrainConfig, *, out_dir: Optional[str],
                seed: int = 0, resume: bool = True,
                governor: Optional[EnergyGovernor] = None,
@@ -151,7 +144,7 @@ def offload_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
             rt.ckdir, work_dir, like_params, last,
             max_resident=tcfg.offload_resident,
             prefetch=tcfg.offload_prefetch)
-        _warn_moment_dtype(rt, ostate, tcfg)
+        rt.guard_segment_layout(ostate)
         rt.log(f"[resume] offload checkpoint step {start}")
     if ostate is None:
         state = init_state(jax.random.PRNGKey(seed), cfg, tcfg)
@@ -221,7 +214,7 @@ def stream_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
             rt.ckdir, work_dir, like_params, last,
             max_resident=tcfg.offload_resident,
             prefetch=tcfg.offload_prefetch)
-        _warn_moment_dtype(rt, lstate, tcfg)
+        rt.guard_segment_layout(lstate)
         rt.log(f"[resume] layer-streamed checkpoint step {start}")
     if lstate is None:
         state = init_state(jax.random.PRNGKey(seed), cfg, tcfg)
@@ -267,26 +260,32 @@ def stream_lora_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
     no m/v segments, no dirty write-back, no gradient scratch — while the
     (tiny) LoRA adapter and its AdamW state stay memory-resident.
     ``merge_lora`` runs per block inside the jitted apply/VJP entry points,
-    so merged weights exist one block at a time.  Checkpoints are
-    **adapter-only**: base and adapter init both derive deterministically
-    from the seed (crc32 path fold, repro/param.py), so resume re-derives
-    the frozen base and restores just the adapter tree."""
+    so merged weights exist one block at a time.  With ``--base-quant int8``
+    the frozen segments are additionally per-channel quantized (QLoRA-style)
+    and stay int8 in the window — the program dequantizes per block inside
+    the jit.  Checkpoints are **adapter-only**: base and adapter init both
+    derive deterministically from the seed (crc32 path fold, repro/param.py),
+    so resume re-derives (and re-quantizes) the frozen base and restores
+    just the adapter tree."""
     rt = TrainerRuntime(cfg, tcfg, out_dir=out_dir, seed=seed,
                         governor=governor, dataset=dataset, print_fn=print_fn)
-    if tcfg.offload_moment_dtype != "float32":
-        rt.log(f"[warn] --offload-moment-dtype {tcfg.offload_moment_dtype} "
-               "ignored: the frozen base layout stores params only "
-               "(no m/v segments); the adapter's moments live in RAM")
     work_dir = offload_dir_for(out_dir, tcfg.offload_dir)
-    # the frozen base is fully determined by (arch, seed, param dtype)
-    base_tag = f"{cfg.name}|seed{seed}|{tcfg.param_dtype}"
+    # the frozen base is fully determined by (arch, seed, param dtype) plus
+    # its segment quantization; the quant suffix only appears when set so
+    # pre-codec fp32 tags (and their checkpoints) stay valid
+    base_tag = (f"{cfg.name}|seed{seed}|{tcfg.param_dtype}"
+                + (f"|{tcfg.base_quant}" if tcfg.base_quant else ""))
     # adapter init is tiny; the full base only materializes if the frozen
     # segments still need laying out (see below)
     adapter = init_adapter_state(jax.random.PRNGKey(seed), cfg, tcfg)
     # everything the restored adapter is only valid against: base identity
-    # (base_tag covers arch/seed/dtype) and the merge hyperparameters —
-    # stamped into the checkpoint manifest, validated on resume
+    # (base_tag covers arch/seed/dtype/quant) and the merge hyperparameters
+    # — stamped into the checkpoint manifest, validated on resume.  An
+    # adapter trained against an int8 base is NOT valid against the fp32
+    # base (and vice versa): the adapter learned around the quantization
+    # error, so a codec mismatch hard-errors via base_quant/base_tag.
     peft_meta = {"seed": int(seed), "base_tag": base_tag,
+                 "base_quant": tcfg.base_quant,
                  "lora_rank": int(tcfg.lora_rank),
                  "lora_alpha": float(tcfg.lora_alpha),
                  "lora_targets": list(tcfg.lora_targets)}
@@ -329,8 +328,10 @@ def stream_lora_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
         lstate = LayerStreamedState.create_frozen(
             base, work_dir, base_tag=base_tag,
             max_resident=tcfg.offload_resident,
-            prefetch=tcfg.offload_prefetch)
+            prefetch=tcfg.offload_prefetch,
+            quant=tcfg.base_quant)
         del base  # the read-only segment files own the base from here on
+    rt.guard_segment_layout(lstate)
 
     step_fn = make_stream_step(cfg, tcfg, lstate, grad_dir="",
                                adapter=adapter)
@@ -355,21 +356,25 @@ def stream_lora_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
     s = step_fn.stats()
     adapter_mb = tree_bytes({"lora": adapter["lora"],
                              "opt": adapter["opt"]}) / 1e6
+    quant_note = f" ({tcfg.base_quant})" if tcfg.base_quant else ""
     rt.log(f"[stream+lora] {lstate.n_layers} frozen layer segments + head | "
-           f"base {s['param_store_bytes']/1e6:.1f} MB read-only | peak param "
-           f"window {s['param_peak_resident_bytes']/1e6:.1f} MB | adapter "
-           f"state {adapter_mb:.2f} MB resident | prefetch hit "
+           f"base {s['param_store_bytes']/1e6:.1f} MB read-only{quant_note} |"
+           f" peak param window {s['param_peak_resident_bytes']/1e6:.1f} MB |"
+           f" adapter state {adapter_mb:.2f} MB resident | prefetch hit "
            f"{s['param_prefetch_hits']}"
            f"/{s['param_prefetch_hits']+s['param_sync_loads']}")
     if out_dir:
         save_adapter(os.path.join(out_dir, "adapter.safetensors"),
                      adapter["lora"], rank=tcfg.lora_rank,
-                     alpha=tcfg.lora_alpha, targets=tcfg.lora_targets)
+                     alpha=tcfg.lora_alpha, targets=tcfg.lora_targets,
+                     base_quant=tcfg.base_quant)
+    # a quantized base materializes dequantized, so the merged export folds
+    # the adapter into the same weights the adapter actually trained against
     base = lstate.materialize_params()
     step_fn.close()
     lstate.close()
     obs = rt.finish(f"{cfg.name} | streamed-LoRA r{tcfg.lora_rank} "
-                    f"x{lstate.n_layers}")
+                    f"x{lstate.n_layers}{quant_note}")
     state = {"base": base, "lora": adapter["lora"], "opt": adapter["opt"],
              "step": adapter["step"], "offload": lstate}
     return state, obs
@@ -417,7 +422,13 @@ def main():
                     choices=("float32", "bfloat16"),
                     help="storage dtype of the AdamW m/v segments "
                          "(bfloat16 halves their bytes; update math stays "
-                         "fp32 via round-trip cast)")
+                         "fp32 via the bf16 segment codec)")
+    ap.add_argument("--base-quant", default="", choices=("", "int8"),
+                    help="quantize the frozen base segments of streamed "
+                         "LoRA (requires --lora-rank and "
+                         "--offload-stream-params): int8 per-channel "
+                         "absmax, ~4x less flash and resident window; the "
+                         "jitted per-block program dequantizes on the fly")
     ap.add_argument("--out", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
@@ -439,6 +450,10 @@ def main():
         if t.strip())
     if args.lora_rank > 0 and not lora_targets:
         ap.error("--lora-rank set but --lora-targets is empty")
+    if args.base_quant and not (args.lora_rank > 0
+                                and args.offload_stream_params):
+        ap.error("--base-quant applies to the frozen base of streamed LoRA; "
+                 "pass --lora-rank N and --offload-stream-params with it")
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     tcfg = TrainConfig(
@@ -458,7 +473,8 @@ def main():
         offload_dir=args.offload_dir,
         offload_resident=args.offload_resident,
         offload_prefetch=args.offload_prefetch,
-        offload_moment_dtype=args.offload_moment_dtype)
+        offload_moment_dtype=args.offload_moment_dtype,
+        base_quant=args.base_quant)
     governor = None
     if args.energy:
         governor = EnergyGovernor(monitor=SimulatedBattery(

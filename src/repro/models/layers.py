@@ -5,7 +5,7 @@ parameters come in as pytrees declared via ParamSpec.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

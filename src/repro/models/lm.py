@@ -14,7 +14,7 @@ donated cache pytree whose content depends on the family (kv and/or ssm).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -190,7 +190,11 @@ class LayerProgram(NamedTuple):
     the frozen base tree, ``merge_lora`` is applied per block *inside* the
     jit, and the VJPs differentiate with respect to the adapter only — the
     cotangents returned alongside the activation cotangent are adapter
-    cotangents, and the base segments are never written:
+    cotangents, and the base segments are never written.  With
+    ``tcfg.base_quant`` the base arguments arrive *encoded* — a
+    (codes_tree, scales_tree) pair of int8 codes + per-channel scales — and
+    are dequantized as the first op inside each jitted entry point, so fp32
+    base weights exist one block at a time, only as XLA transients:
 
       embed(head, hlora, batch) -> x0
       block(bp, blora, x, window, positions) -> (x, aux)
@@ -265,24 +269,40 @@ def make_layer_program(cfg: ModelConfig, tcfg: TrainConfig) -> LayerProgram:
     def positions(b, s):
         return _positions(cfg, b, s)
 
+    if tcfg.base_quant and tcfg.lora_rank <= 0:
+        raise ValueError(
+            "--base-quant applies to the frozen base of streamed LoRA "
+            "(--lora-rank N with --offload-stream-params); quantized "
+            "Full-FT training would fold quantization error back into the "
+            "updated weights every step")
+
     if tcfg.lora_rank > 0:
         from repro.core.lora import merge_lora
+        from repro.offload.codecs import dequant_tree
         rank, alpha = tcfg.lora_rank, tcfg.lora_alpha
+        # quantized frozen base: the segments stay int8 in the window and
+        # arrive here as (codes, scales) pairs; dequant_tree decodes them
+        # inside the jit (a no-op on plain trees), so the fp32 base exists
+        # per block only, fused into the merge below
+        base_of = dequant_tree if tcfg.base_quant else (lambda t: t)
 
         # merge_lora(train=True) stop-gradients every base leaf, so even
         # though the VJPs below only differentiate the adapter args, the
         # merged weights W' = sg(W) + (alpha/r) A@B are formed inside the
         # jit — one block's merged copy at a time, never a full tree.
         def lora_block_fn(bp, blp, x, window, positions):
-            return block_fn(merge_lora(bp, blp, rank=rank, alpha=alpha),
+            return block_fn(merge_lora(base_of(bp), blp, rank=rank,
+                                       alpha=alpha),
                             x, window, positions)
 
         def lora_embed_fn(head, hlp, batch):
-            return embed_fn(merge_lora(head, hlp, rank=rank, alpha=alpha),
+            return embed_fn(merge_lora(base_of(head), hlp, rank=rank,
+                                       alpha=alpha),
                             batch)
 
         def lora_head_fn(head, hlp, x, batch, aux_sum):
-            return head_fn(merge_lora(head, hlp, rank=rank, alpha=alpha),
+            return head_fn(merge_lora(base_of(head), hlp, rank=rank,
+                                      alpha=alpha),
                            x, batch, aux_sum)
 
         @jax.jit

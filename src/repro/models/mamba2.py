@@ -11,14 +11,13 @@ configuration.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, TrainConfig
 from repro.param import spec
-from repro.sharding import constrain
 
 
 def d_inner(cfg: ModelConfig) -> int:

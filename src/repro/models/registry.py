@@ -11,7 +11,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.config import ModelConfig, ShapeSpec, TrainConfig
+from repro.config import ModelConfig, ShapeSpec
 from repro.models import lm, whisper
 
 

@@ -9,16 +9,14 @@ Layers are stacked on a leading ``layers`` dim and executed with ``lax.scan``
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import ModelConfig, TrainConfig, dtype_of
+from repro.config import ModelConfig, TrainConfig
 from repro.core import attention as attn_mod
-from repro.core.attention import attention, default_positions
-from repro.core.remat import maybe_remat
+from repro.core.attention import attention
 from repro.models import layers as L
 from repro.param import spec, tree_map_specs
 from repro.sharding import constrain
@@ -133,7 +131,6 @@ def apply_attention(p, x, cfg: ModelConfig, tcfg: TrainConfig, *,
         if cross_kv is None:
             k = L.apply_norm({"scale": p["k_norm"]}, k, "rmsnorm")
 
-    causal = cross_kv is None
     if cross_kv is None and cfg.pos_variant == "rope":
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)

@@ -7,12 +7,16 @@ segments backed by memory-mapped files; only a small LRU window of segments
 is resident, a background double-buffered prefetcher loads segment ``i+1``
 while segment ``i`` computes, and dirty (updated) segments are written back.
 
+- codecs.py    SegmentCodec: per-leaf storage codecs (identity / bf16 / int8
+               per-channel quantization) — all dtype conversion lives here
 - segments.py  SegmentStore: mapping table + mmap segment files + COW snapshot
 - engine.py    OffloadEngine: LRU residency window + prefetch + write-back
 - state.py     OffloadedTrainState: segment-by-segment AdamW update;
                LayerStreamedState: layer-aligned segments (one per block +
                head) for the streamed fwd/bwd driver (repro/core/stream.py)
 """
+from repro.offload.codecs import (CODECS, QuantLeaf,  # noqa: F401
+                                  SegmentCodec, dequant_tree, get_codec)
 from repro.offload.segments import (LeafRecord, SegmentStore,  # noqa: F401
                                     plan_segments)
 from repro.offload.engine import OffloadEngine, Prefetcher  # noqa: F401

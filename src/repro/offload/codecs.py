@@ -1,0 +1,228 @@
+"""Pluggable segment codecs: how a leaf's logical array maps to stored bytes.
+
+Every leaf in a ``SegmentStore`` mapping table carries a codec name; the
+codec owns the storage layout of that leaf inside its segment file.  The
+engine decodes on pull and encodes on dirty write-back, so all dtype
+conversion lives here instead of being smeared across the offload stack
+(the old ``_cast_moment`` / fp32 round-trip special cases).
+
+  identity   stored bytes == the logical array's bytes (no conversion)
+  bf16       stored as bfloat16; ``decode`` returns the logical (fp32)
+             dtype, but the *window* representation stays bfloat16 — the
+             half-sized AdamW moment segments keep their resident-memory
+             win, and the update's fp32 math happens at the consumption
+             point (cast on use, ``storage_roundtrip`` on store), exactly
+             the pre-codec numerics
+  int8       per-channel absmax symmetric quantization (QLoRA-style frozen
+             base): int8 codes over the last axis' channels plus one fp32
+             scale per channel, packed [codes | scales] inside the segment.
+             ~4x smaller than fp32 both on flash and in the resident window.
+
+A codec therefore distinguishes three representations of one leaf: the
+stored bytes, the *window* form the engine keeps resident (``window`` —
+compact: bf16 stays bf16, int8 stays encoded), and the fully decoded
+logical array (``decode`` — what ``read_segment`` hands to generic
+consumers).  For the quantized frozen base the window must stay int8 —
+decoding happens *inside* the jitted per-block apply/VJP
+(``repro.models.lm``), so fp32 weights exist one block at a time.
+``read_segment(..., encoded=True)`` returns ``QuantLeaf(codes, scales)``
+views instead of decoded arrays; ``dequant_leaf``/``dequant_tree`` are the
+jnp-side decoders.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import numpy as np
+
+
+def np_dtype(name: str) -> np.dtype:
+    if name == "bfloat16":
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(name)
+
+
+class QuantLeaf(NamedTuple):
+    """Encoded leaf handed to the jit boundary: int8 codes in the logical
+    shape + per-channel fp32 scales.  ``scales.size == 0`` marks a leaf the
+    codec passes through undecoded (identity)."""
+    codes: np.ndarray
+    scales: np.ndarray
+
+    @property
+    def nbytes(self) -> int:
+        return self.codes.nbytes + self.scales.nbytes
+
+
+def _n_scales(shape: Tuple[int, ...]) -> int:
+    """int8 channel count: one scale per last-axis channel for matrices,
+    one per-tensor scale for vectors (0-d leaves are not quantizable)."""
+    return int(shape[-1]) if len(shape) >= 2 else 1
+
+
+class SegmentCodec:
+    """Base codec: identity (stored bytes are the logical array's bytes)."""
+
+    name = "identity"
+
+    def encoded_nbytes(self, shape: Tuple[int, ...], dtype: str) -> int:
+        return int(np.prod(shape, dtype=np.int64)) * np_dtype(dtype).itemsize
+
+    def encode(self, arr: np.ndarray, dtype: str) -> np.ndarray:
+        """Logical array -> flat uint8 storage bytes."""
+        a = np.ascontiguousarray(np.asarray(arr), np_dtype(dtype))
+        return a.reshape(-1).view(np.uint8) if a.ndim else a.view(np.uint8)
+
+    def decode(self, buf: np.ndarray, shape: Tuple[int, ...], dtype: str,
+               copy: bool = True) -> np.ndarray:
+        """Flat uint8 storage bytes -> logical array.  ``copy=False`` may
+        return a view into ``buf`` (identity only)."""
+        arr = buf.view(np_dtype(dtype)).reshape(shape)
+        return np.array(arr) if copy else arr
+
+    def decode_encoded(self, buf: np.ndarray, shape: Tuple[int, ...],
+                       dtype: str) -> QuantLeaf:
+        """Storage bytes -> the still-encoded representation for the jit
+        boundary.  Non-quantizing codecs decode fully (empty scales)."""
+        return QuantLeaf(self.decode(buf, shape, dtype),
+                         np.empty((0,), np.float32))
+
+    def window(self, buf: np.ndarray, shape: Tuple[int, ...],
+               dtype: str) -> np.ndarray:
+        """Storage bytes -> the representation the engine keeps resident.
+        Defaults to the decoded logical array; compact codecs override so
+        the window never inflates (bf16 moments stay bf16-resident — the
+        consumer casts to fp32 at use and re-rounds on store)."""
+        return self.decode(buf, shape, dtype)
+
+    def storage_roundtrip(self, arr: np.ndarray) -> np.ndarray:
+        """decode(encode(arr)) without touching bytes: what a value becomes
+        after one trip through storage.  The state layer applies this when
+        storing updated values into a decoded window copy, so in-window
+        precision always equals on-flash precision."""
+        return arr
+
+
+class Bf16Codec(SegmentCodec):
+    name = "bf16"
+
+    def encoded_nbytes(self, shape, dtype):
+        return int(np.prod(shape, dtype=np.int64)) * 2
+
+    def encode(self, arr, dtype):
+        a = np.ascontiguousarray(
+            np.asarray(arr, np.float32).astype(np_dtype("bfloat16")))
+        return a.reshape(-1).view(np.uint8) if a.ndim else a.view(np.uint8)
+
+    def decode(self, buf, shape, dtype, copy=True):
+        arr = buf.view(np_dtype("bfloat16")).reshape(shape)
+        return np.asarray(arr, np_dtype(dtype))
+
+    def window(self, buf, shape, dtype):
+        # resident form stays bfloat16: decoding moments to fp32 here would
+        # silently hand back the halved window bytes this codec exists for
+        return np.array(buf.view(np_dtype("bfloat16")).reshape(shape))
+
+    def storage_roundtrip(self, arr):
+        a = np.asarray(arr)
+        return a.astype(np_dtype("bfloat16")).astype(a.dtype)
+
+
+class Int8Codec(SegmentCodec):
+    """Per-channel absmax symmetric int8: codes = round(x / scale) in
+    [-127, 127] with scale = absmax / 127 over each last-axis channel
+    (per-tensor for 1-D leaves).  Storage layout: [codes | fp32 scales]."""
+
+    name = "int8"
+
+    def encoded_nbytes(self, shape, dtype):
+        return int(np.prod(shape, dtype=np.int64)) + _n_scales(shape) * 4
+
+    def _quantize(self, arr) -> QuantLeaf:
+        a = np.asarray(arr, np.float32)
+        if a.ndim == 0:
+            raise ValueError("int8 codec cannot quantize 0-d leaves")
+        red = tuple(range(a.ndim - 1)) if a.ndim >= 2 else None
+        absmax = np.max(np.abs(a), axis=red) if a.ndim >= 2 else \
+            np.max(np.abs(a), keepdims=True)
+        absmax = np.asarray(absmax, np.float32).reshape(_n_scales(a.shape))
+        scales = np.where(absmax > 0, absmax / 127.0, 1.0).astype(np.float32)
+        codes = np.clip(np.rint(a / scales), -127, 127).astype(np.int8)
+        return QuantLeaf(codes, scales)
+
+    def encode(self, arr, dtype):
+        q = self._quantize(arr)
+        return np.concatenate([q.codes.reshape(-1).view(np.uint8),
+                               q.scales.view(np.uint8)])
+
+    def decode(self, buf, shape, dtype, copy=True):
+        q = self.decode_encoded(buf, shape, dtype)
+        return dequant_np(q).astype(np_dtype(dtype), copy=False)
+
+    def decode_encoded(self, buf, shape, dtype):
+        n = int(np.prod(shape, dtype=np.int64))
+        codes = np.array(buf[:n].view(np.int8)).reshape(shape)
+        scales = np.array(buf[n:].view(np.float32))
+        return QuantLeaf(codes, scales)
+
+    def storage_roundtrip(self, arr):
+        a = np.asarray(arr)
+        return dequant_np(self._quantize(a)).astype(a.dtype, copy=False)
+
+
+CODECS: Dict[str, SegmentCodec] = {c.name: c for c in
+                                   (SegmentCodec(), Bf16Codec(), Int8Codec())}
+
+
+def get_codec(name: str) -> SegmentCodec:
+    try:
+        return CODECS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown segment codec {name!r}; this build provides "
+            f"{sorted(CODECS)} — the segment layout was written by a newer "
+            "build (upgrade) or the mapping table is corrupt (re-create the "
+            "layout)") from None
+
+
+def moment_codec(moment_dtype: str) -> str:
+    """Map the user-facing --offload-moment-dtype knob to a codec name."""
+    if moment_dtype in ("", "float32"):
+        return "identity"
+    if moment_dtype == "bfloat16":
+        return "bf16"
+    raise ValueError(f"unsupported moment dtype {moment_dtype!r} "
+                     "(float32 or bfloat16)")
+
+
+# ----------------------------------------------------------------------------
+# decode helpers for QuantLeaf trees (numpy side + jit side)
+# ----------------------------------------------------------------------------
+def dequant_np(leaf: QuantLeaf) -> np.ndarray:
+    """Numpy dequantization (materialize / export path)."""
+    if leaf.scales.size == 0:
+        return leaf.codes
+    return (np.asarray(leaf.codes, np.float32)
+            * leaf.scales.astype(np.float32))
+
+
+def dequant_leaf(codes, scales):
+    """jnp dequantization of one leaf — runs inside the jitted per-block
+    apply/VJP, so the fp32 copy of a quantized weight exists only as a
+    transient inside XLA.  Empty scales mark identity passthrough."""
+    if scales.shape == (0,):
+        return codes
+    import jax.numpy as jnp
+    return codes.astype(jnp.float32) * scales
+
+
+def dequant_tree(pair):
+    """(codes_tree, scales_tree) -> decoded param tree, leaf-wise.  The pair
+    is what ``LayerStreamedState.layer_params``/``head_params`` return for a
+    quantized frozen base; plain (unpaired) trees pass through untouched."""
+    if not (isinstance(pair, tuple) and len(pair) == 2):
+        return pair
+    import jax
+    codes, scales = pair
+    return jax.tree.map(dequant_leaf, codes, scales)

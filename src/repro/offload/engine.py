@@ -31,9 +31,17 @@ class Prefetcher:
     miss).  The buffer is consume-once: ownership moves to the caller.
     """
 
-    def __init__(self, store: SegmentStore, depth: int = 2):
+    def __init__(self, store: SegmentStore, depth: int = 2,
+                 encoded: bool = False):
         self._store = store
         self._depth = max(1, depth)
+        self._encoded = encoded
+        # window-form reads: leaves stay at their codec's resident
+        # representation (bf16 moments bf16, int8 QuantLeafs when encoded)
+        self._read = (
+            (lambda seg: store.read_segment(seg, copy=True, encoded=True))
+            if encoded else
+            (lambda seg: store.read_segment(seg, copy=True, window=True)))
         self._lock = threading.Condition()
         self._queue: list = []
         self._buffers: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()
@@ -56,7 +64,7 @@ class Prefetcher:
                     continue
                 self._inflight.add(seg)
             try:
-                data = self._store.read_segment(seg, copy=True)
+                data = self._read(seg)
             except Exception:
                 # never strand the id in _inflight (take() would block
                 # forever); the consumer's sync fallback re-raises the
@@ -89,7 +97,7 @@ class Prefetcher:
                 self.prefetch_hits += 1
                 return self._buffers.pop(seg)
         self.sync_loads += 1
-        return self._store.read_segment(seg, copy=True)
+        return self._read(seg)
 
     def invalidate(self, seg: int):
         """Drop any buffered copy (stale after a write-back)."""
@@ -109,7 +117,8 @@ class OffloadEngine:
     """LRU-resident window + prefetch + dirty write-back over segments."""
 
     def __init__(self, store: SegmentStore, max_resident: int = 2,
-                 prefetch: bool = True, read_only: bool = False):
+                 prefetch: bool = True, read_only: bool = False,
+                 encoded: bool = False):
         assert max_resident >= 1
         self.store = store
         self.max_resident = max_resident
@@ -117,10 +126,19 @@ class OffloadEngine:
         # never dirtied, so eviction is a plain drop and mark_dirty is a
         # programming error rather than a silent corruption vector
         self.read_only = read_only
+        # encoded window mode (quantized frozen base): pulls skip the codec
+        # decode so the window stays int8-resident — dequantization happens
+        # inside the jitted per-block program, never in the window.  The
+        # window never writes back encoded leaves, so this implies read_only.
+        self.encoded = encoded
+        if encoded and not read_only:
+            raise ValueError("an encoded (no-decode) window cannot write "
+                             "back; encoded=True requires read_only=True")
         self._resident: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()
         self._dirty: set = set()
         self._prefetcher: Optional[Prefetcher] = (
-            Prefetcher(store, depth=max(1, max_resident - 1))
+            Prefetcher(store, depth=max(1, max_resident - 1),
+                       encoded=encoded)
             if prefetch else None)
         # --- statistics ---
         self.hits = 0
@@ -130,8 +148,14 @@ class OffloadEngine:
         self.peak_resident_bytes = 0
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _data_bytes(data: Dict[str, np.ndarray]) -> int:
+        # actual bytes held, not storage bytes: a decoded bf16 leaf sits in
+        # the window as fp32, an encoded int8 leaf as its codes + scales
+        return int(sum(v.nbytes for v in data.values()))
+
     def _resident_bytes(self) -> int:
-        return int(sum(self.store.seg_nbytes[s] for s in self._resident))
+        return int(sum(self._data_bytes(d) for d in self._resident.values()))
 
     def prefetch(self, seg: int):
         if self._prefetcher is not None and seg not in self._resident:
@@ -149,7 +173,9 @@ class OffloadEngine:
         if self._prefetcher is not None:
             data = self._prefetcher.take(seg)
         else:
-            data = self.store.read_segment(seg, copy=True)
+            data = self.store.read_segment(
+                seg, copy=True, encoded=self.encoded,
+                window=not self.encoded)
         self.bytes_read += self.store.seg_nbytes[seg]
         self._resident[seg] = data
         self._resident.move_to_end(seg)
@@ -165,8 +191,8 @@ class OffloadEngine:
         if self._prefetcher is None:
             return 0
         with self._prefetcher._lock:
-            segs = list(self._prefetcher._buffers)
-        return int(sum(self.store.seg_nbytes[s] for s in segs))
+            bufs = list(self._prefetcher._buffers.values())
+        return int(sum(self._data_bytes(d) for d in bufs))
 
     def mark_dirty(self, seg: int):
         if self.read_only:

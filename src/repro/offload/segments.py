@@ -16,6 +16,13 @@ the map is dropped.  ``snapshot``/``link_clone`` hardlink the segment files
 (zero-copy checkpointing) and flip the store into copy-on-write mode so the
 snapshot inode is never mutated: the first later write to a segment rewrites
 it under a fresh inode via copy + atomic replace.
+
+Every leaf carries a *codec* (repro/offload/codecs.py) deciding how its
+logical array maps to stored bytes: ``identity`` (raw), ``bf16`` (half-sized
+moments) or ``int8`` (per-channel quantized frozen base).  The mapping table
+records the codec per leaf (table version 2); version-1 tables — written
+before the codec column existed — upgrade transparently on open (their
+bf16-stored moments become ``bf16``-codec leaves with fp32 logical dtype).
 """
 from __future__ import annotations
 
@@ -26,27 +33,19 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.offload.codecs import get_codec
+
+TABLE_VERSION = 2
+
 
 class LeafRecord(NamedTuple):
     name: str
     segment: int
     offset: int      # byte offset inside the segment file
-    nbytes: int
-    shape: Tuple[int, ...]
-    dtype: str       # numpy dtype name ("float32", "bfloat16", ...)
-
-
-def _np_dtype(name: str) -> np.dtype:
-    if name == "bfloat16":
-        import ml_dtypes
-        return np.dtype(ml_dtypes.bfloat16)
-    return np.dtype(name)
-
-
-def _as_bytes(arr: np.ndarray) -> np.ndarray:
-    """Contiguous uint8 view of an array's buffer."""
-    arr = np.ascontiguousarray(arr)
-    return arr.reshape(-1).view(np.uint8) if arr.ndim else arr.view(np.uint8)
+    nbytes: int      # *stored* bytes (post-codec; != logical for bf16/int8)
+    shape: Tuple[int, ...]   # logical shape
+    dtype: str       # logical numpy dtype name ("float32", "bfloat16", ...)
+    codec: str = "identity"
 
 
 def plan_segments(group_nbytes: Sequence[int], num_segments: int
@@ -102,12 +101,15 @@ class SegmentStore:
     # ------------------------------------------------------------------
     @classmethod
     def create(cls, directory: str,
-               groups: Sequence[Sequence[Tuple[str, np.ndarray]]],
+               groups: Sequence[Sequence[Tuple]],
                num_segments: int, meta: Optional[Dict] = None,
                group_labels: Optional[Sequence[str]] = None,
                write: bool = True) -> "SegmentStore":
-        """Write ``groups`` (ordered lists of (name, array); a group is kept
-        within one segment) into ``num_segments`` segment files.
+        """Write ``groups`` (ordered lists of (name, array) or
+        (name, array, codec); a group is kept within one segment) into
+        ``num_segments`` segment files.  Omitted codecs default to identity;
+        stored bytes per leaf come from the codec, so a bf16 or int8 leaf
+        occupies less flash than its logical array.
 
         ``group_labels`` (one per *group*) turns on aligned mode: each group
         gets its own segment (``num_segments`` must equal the group count) and
@@ -127,8 +129,10 @@ class SegmentStore:
         stale = os.path.join(directory, cls.TABLE)
         if os.path.exists(stale):
             os.remove(stale)
-        arrs = [[(n, np.asarray(a)) for n, a in g] for g in groups]
-        sizes = [sum(a.nbytes for _, a in g) for g in arrs]
+        arrs = [[(t[0], np.asarray(t[1]), t[2] if len(t) > 2 else "identity")
+                 for t in g] for g in groups]
+        sizes = [sum(get_codec(c).encoded_nbytes(a.shape, a.dtype.name)
+                     for _, a, c in g) for g in arrs]
         if group_labels is not None:
             assert len(group_labels) == len(groups) == num_segments, (
                 len(group_labels), len(groups), num_segments)
@@ -139,13 +143,16 @@ class SegmentStore:
         seg_nbytes: List[int] = []
         for seg, (g0, g1) in enumerate(bounds):
             offset = 0
-            for name, a in (pair for g in arrs[g0:g1] for pair in g):
-                records.append(LeafRecord(name, seg, offset, a.nbytes,
-                                          tuple(a.shape), a.dtype.name))
-                offset += a.nbytes
+            for name, a, codec in (t for g in arrs[g0:g1] for t in g):
+                nbytes = get_codec(codec).encoded_nbytes(a.shape,
+                                                         a.dtype.name)
+                records.append(LeafRecord(name, seg, offset, nbytes,
+                                          tuple(a.shape), a.dtype.name,
+                                          codec))
+                offset += nbytes
             seg_nbytes.append(offset)
         store = cls(directory, records, seg_nbytes, meta)
-        flat = {n: a for g in arrs for n, a in g}
+        flat = {n: a for g in arrs for n, a, _ in g}
         for seg in range(len(seg_nbytes)):
             with open(store.segment_path(seg), "wb") as f:
                 f.truncate(seg_nbytes[seg])
@@ -158,13 +165,35 @@ class SegmentStore:
 
     @classmethod
     def open(cls, directory: str) -> "SegmentStore":
-        with open(os.path.join(directory, cls.TABLE)) as f:
+        path = os.path.join(directory, cls.TABLE)
+        with open(path) as f:
             table = json.load(f)
-        records = [LeafRecord(r["name"], r["segment"], r["offset"],
-                              r["nbytes"], tuple(r["shape"]), r["dtype"])
-                   for r in table["leaves"]]
+        version = table.get("version", 1)
+        if version not in (1, TABLE_VERSION):
+            raise ValueError(
+                f"mapping table {path} has version {version}; this build "
+                f"reads versions 1-{TABLE_VERSION}.  The segment layout was "
+                "written by a newer build — upgrade the package, or "
+                "re-create the layout (delete the segment directory and "
+                "rerun) to continue with this one")
+        records = [cls._leaf_record(r, version) for r in table["leaves"]]
         return cls(directory, records, table["seg_nbytes"],
                    table.get("meta", {}))
+
+    @staticmethod
+    def _leaf_record(r: Dict, version: int) -> LeafRecord:
+        """One mapping-table row -> LeafRecord, upgrading version-1 rows:
+        they predate the codec column, and their reduced-precision moments
+        (``m.``/``v.`` leaves stored as bfloat16 with an ad-hoc cast in the
+        update) become ``bf16``-codec leaves with fp32 logical dtype — the
+        same bytes on flash, now decoded/encoded by the codec layer."""
+        codec = r.get("codec", "identity")
+        dtype = r["dtype"]
+        if (version == 1 and dtype == "bfloat16"
+                and r["name"].startswith(("m.", "v."))):
+            codec, dtype = "bf16", "float32"
+        return LeafRecord(r["name"], r["segment"], r["offset"], r["nbytes"],
+                          tuple(r["shape"]), dtype, codec)
 
     @classmethod
     def link_clone(cls, src_dir: str, dest_dir: str) -> "SegmentStore":
@@ -184,7 +213,7 @@ class SegmentStore:
         return store
 
     def _write_table(self):
-        table = {"version": 1, "seg_nbytes": self.seg_nbytes,
+        table = {"version": TABLE_VERSION, "seg_nbytes": self.seg_nbytes,
                  "meta": self.meta,
                  "leaves": [r._asdict() for r in self.records]}
         tmp = os.path.join(self.directory, self.TABLE + ".tmp")
@@ -232,45 +261,64 @@ class SegmentStore:
     # ------------------------------------------------------------------
     # I/O
     # ------------------------------------------------------------------
-    def read_segment(self, seg: int, copy: bool = True
-                     ) -> Dict[str, np.ndarray]:
-        """All leaves of one segment.
+    def read_segment(self, seg: int, copy: bool = True,
+                     encoded: bool = False,
+                     window: bool = False) -> Dict[str, np.ndarray]:
+        """All leaves of one segment, decoded through each leaf's codec.
 
         ``copy=True`` returns private arrays safe to mutate; the memory map
         (and its file descriptor) is closed before returning — relying on GC
         to drop the map would pin one fd per call until collection.
 
         ``copy=False`` returns read-only views into the page-cache mmap
-        (zero-copy restore path).  Each view's ``.base`` chain keeps the map
-        — and its fd — alive until *every* view is garbage-collected, so
-        hold the result only for as long as the zero-copy read is needed and
-        never across a ``write_segment``/``_break_cow`` of the same segment
-        (the views would keep reading the replaced inode)."""
+        where the codec allows it (identity; converting codecs always
+        allocate).  Each view's ``.base`` chain keeps the map — and its fd —
+        alive until *every* view is garbage-collected, so hold the result
+        only for as long as the zero-copy read is needed and never across a
+        ``write_segment``/``_break_cow`` of the same segment (the views
+        would keep reading the replaced inode).
+
+        ``window=True`` returns each leaf's *window* representation (the
+        offload engine's resident form): private arrays that stay at
+        storage precision where that matters (bf16 moments remain bf16, so
+        the halved resident bytes survive; the consumer casts at use).
+
+        ``encoded=True`` skips decoding entirely: every leaf comes back as
+        a ``QuantLeaf`` (codes in the logical shape + per-channel scales;
+        empty scales for passthrough codecs) — the quantized-frozen-base
+        window keeps segments int8-resident and defers dequantization to
+        the jitted per-block program."""
         mm = np.memmap(self.segment_path(seg), dtype=np.uint8, mode="r")
         try:
             out = {}
             for r in self._seg_leaves[seg]:
-                flat = mm[r.offset:r.offset + r.nbytes].view(
-                    _np_dtype(r.dtype))
-                arr = flat.reshape(r.shape)
-                out[r.name] = np.array(arr) if copy else arr
+                buf = mm[r.offset:r.offset + r.nbytes]
+                codec = get_codec(r.codec)
+                if encoded:
+                    out[r.name] = codec.decode_encoded(buf, r.shape, r.dtype)
+                elif window:
+                    out[r.name] = codec.window(buf, r.shape, r.dtype)
+                else:
+                    out[r.name] = codec.decode(buf, r.shape, r.dtype,
+                                               copy=copy)
             return out
         finally:
-            if copy:
+            if copy or encoded or window:
                 mm._mmap.close()   # release the fd now, not at GC time
 
     def write_segment(self, seg: int, named: Dict[str, np.ndarray]):
-        """Write (a subset of) one segment's leaves back and flush.  Breaks
-        any snapshot hardlink first (copy-on-write)."""
+        """Encode (a subset of) one segment's leaves back through their
+        codecs and flush.  Breaks any snapshot hardlink first
+        (copy-on-write)."""
         self._break_cow(seg)
         mm = np.memmap(self.segment_path(seg), dtype=np.uint8, mode="r+")
         try:
             for name, value in named.items():
                 r = self._by_name[name]
                 assert r.segment == seg, (name, r.segment, seg)
-                a = np.ascontiguousarray(np.asarray(value), _np_dtype(r.dtype))
-                assert a.nbytes == r.nbytes, (name, a.nbytes, r.nbytes)
-                mm[r.offset:r.offset + r.nbytes] = _as_bytes(a)
+                enc = get_codec(r.codec).encode(np.asarray(value), r.dtype)
+                assert enc.nbytes == r.nbytes, (name, enc.nbytes, r.nbytes)
+                mm[r.offset:r.offset + r.nbytes] = enc
             mm.flush()
         finally:
             mm._mmap.close()       # no views escape this scope

@@ -22,9 +22,15 @@ Two layouts share the machinery:
   through the window while computing — peak resident params no longer scale
   with model size.
 
-Moments can be stored in bfloat16 (``moment_dtype="bfloat16"``): m/v segment
-bytes halve; the update round-trips them through float32 (cast on load,
-cast back on store) so AdamW math stays fp32.
+Storage precision is the codec layer's job (repro/offload/codecs.py):
+moments stored in bfloat16 (``moment_dtype="bfloat16"``) are ``bf16``-codec
+leaves — the engine pulls each leaf's compact *window* form (bf16 moments
+stay bf16-resident, preserving the halved window bytes) and the update
+casts to fp32 at use and back on store, so AdamW math stays fp32 and
+in-window precision equals on-flash precision.  A frozen base can be
+``int8``-quantized per channel (``create_frozen(quant="int8")``): the
+window then holds the *encoded* segments and dequantization happens inside
+the jitted per-block program.
 """
 from __future__ import annotations
 
@@ -35,8 +41,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.offload.codecs import QuantLeaf, dequant_np, moment_codec
 from repro.offload.engine import OffloadEngine
-from repro.offload.segments import SegmentStore, _np_dtype
+from repro.offload.segments import SegmentStore
 from repro.optim.adamw import adamw_update
 from repro.param import flatten_names
 
@@ -44,11 +51,23 @@ P, M, V = "p.", "m.", "v."
 
 LAYER_LAYOUT = "layer_v1"
 
+BASE_QUANTS = ("", "int8")     # frozen-base quantization choices
 
-def _cast_moment(arr: np.ndarray, moment_dtype: str) -> np.ndarray:
-    if moment_dtype in ("", "float32"):
-        return arr
-    return np.asarray(arr).astype(_np_dtype(moment_dtype))
+
+def ensure_base_quant_match(lstate, base_quant: str):
+    """One shared guard for CLI-flag vs segment-layout quantization: the
+    jitted program is built for one base encoding, so feeding it segments
+    of another must fail loudly up front, with the same message everywhere
+    (TrainerRuntime.guard_segment_layout and StreamedTrainStep both call
+    this)."""
+    store_quant = getattr(lstate, "base_quant", "") or ""
+    if store_quant != (base_quant or ""):
+        raise ValueError(
+            f"--base-quant {base_quant or 'fp32'} does not match the "
+            f"existing segment layout in {lstate.store.directory} "
+            f"(stored {store_quant or 'fp32'}); rerun with the original "
+            "quantization, or point --offload-dir/--out at a fresh "
+            "directory")
 
 
 class OffloadedTrainState:
@@ -62,10 +81,14 @@ class OffloadedTrainState:
         # dirtied or written back
         self.frozen = bool(store.meta.get("frozen", False))
         # a window below 1 cannot hold the segment being computed on; clamp
-        # like the grad engine does (repro/core/stream.py)
+        # like the grad engine does (repro/core/stream.py).  A quantized
+        # frozen base keeps its window *encoded* (int8-resident): decode
+        # happens inside the jitted per-block program, not on pull.
+        self.base_quant = str(store.meta.get("base_quant", ""))
         self.engine = OffloadEngine(store, max_resident=max(1, max_resident),
                                     prefetch=prefetch,
-                                    read_only=self.frozen)
+                                    read_only=self.frozen,
+                                    encoded=bool(self.base_quant))
         self.treedef = treedef
         self.names = names
         self.count = int(store.meta.get("count", 0))
@@ -91,9 +114,10 @@ class OffloadedTrainState:
         named_m = dict(flatten_names(state["opt"]["m"]))
         named_v = dict(flatten_names(state["opt"]["v"]))
         host = jax.device_get
+        mcodec = moment_codec(moment_dtype)
         groups = [[(P + n, host(leaf)),
-                   (M + n, _cast_moment(host(named_m[n]), moment_dtype)),
-                   (V + n, _cast_moment(host(named_v[n]), moment_dtype))]
+                   (M + n, host(named_m[n]), mcodec),
+                   (V + n, host(named_v[n]), mcodec)]
                   for n, leaf in named_p]
         meta = {"count": int(state["opt"]["count"]),
                 "step": int(state["step"]), "kind": "offload_state_v1",
@@ -148,8 +172,11 @@ class OffloadedTrainState:
     def _update_segment(self, seg: int, gnamed: Dict[str, Any], count,
                         *, lr, beta1, beta2, eps, weight_decay):
         """AdamW one segment in place (window owns the arrays; marked dirty).
-        ``gnamed`` maps this segment's plain param names to gradients.
-        Moments stored in a reduced dtype round-trip through float32.
+        ``gnamed`` maps this segment's plain param names to gradients.  The
+        window holds each leaf's codec *window* form — storage precision,
+        so bf16 moments stay half-sized while resident; the fp32 math
+        round-trips here (cast on load, cast back on the in-place store),
+        which also keeps in-window precision equal to on-flash precision.
         Returns the new param arrays (name -> jnp)."""
         if self.frozen:
             raise RuntimeError(
@@ -301,6 +328,8 @@ class LayerStreamedState(OffloadedTrainState):
         named_m = {n: host(x) for n, x in flatten_names(state["opt"]["m"])}
         named_v = {n: host(x) for n, x in flatten_names(state["opt"]["v"])}
 
+        mcodec = moment_codec(moment_dtype)
+
         def triple(full_name, idx):
             p, m, v = (named_p[full_name], named_m[full_name],
                        named_v[full_name])
@@ -308,8 +337,8 @@ class LayerStreamedState(OffloadedTrainState):
                 p, m, v = p[idx], m[idx], v[idx]
             name = cls._per_layer_name(full_name, idx)
             return [(P + name, np.asarray(p)),
-                    (M + name, _cast_moment(np.asarray(m), moment_dtype)),
-                    (V + name, _cast_moment(np.asarray(v), moment_dtype))]
+                    (M + name, np.asarray(m), mcodec),
+                    (V + name, np.asarray(v), mcodec)]
 
         groups, labels, n_layers = cls._layer_groups(params, triple)
         meta = {"count": int(state["opt"]["count"]),
@@ -323,27 +352,38 @@ class LayerStreamedState(OffloadedTrainState):
 
     @classmethod
     def create_frozen(cls, params, directory: str, *, max_resident: int = 2,
-                      prefetch: bool = True, base_tag: str = ""
-                      ) -> "LayerStreamedState":
+                      prefetch: bool = True, base_tag: str = "",
+                      quant: str = "") -> "LayerStreamedState":
         """Page a frozen base out param-only (no m/v segments): one p-segment
         per block plus the head segment, read-only through fwd/bwd.  Resident
         bytes per segment drop to ~1/3 of the Full-FT layout.
 
-        ``base_tag`` identifies how the base was derived (e.g. arch + seed);
-        ``open_frozen_if_matching`` uses it to reuse an existing store on
-        restart instead of rewriting every segment file."""
+        ``quant="int8"`` additionally quantizes every matrix leaf (ndim >= 2
+        after the per-layer slice) per channel — QLoRA-style: norms/biases
+        stay fp32, the weight matrices that dominate the bytes go int8, for
+        ~4x less flash *and* ~4x smaller resident window (the window holds
+        the encoded segments; the jitted per-block program dequantizes).
+
+        ``base_tag`` identifies how the base was derived (arch + seed +
+        dtype + quant); ``open_frozen_if_matching`` uses it to reuse an
+        existing store on restart instead of rewriting every segment file."""
+        if quant not in BASE_QUANTS:
+            raise ValueError(f"unsupported base quantization {quant!r}; "
+                             f"choose from {[q or 'fp32' for q in BASE_QUANTS]}")
         host = jax.device_get
         named_p = {n: host(x) for n, x in flatten_names(params)}
 
         def p_only(full_name, idx):
-            p = named_p[full_name]
+            p = np.asarray(named_p[full_name])
             if idx is not None:
                 p = p[idx]
-            return [(P + cls._per_layer_name(full_name, idx), np.asarray(p))]
+            codec = "int8" if (quant == "int8" and p.ndim >= 2) else "identity"
+            return [(P + cls._per_layer_name(full_name, idx), p, codec)]
 
         groups, labels, n_layers = cls._layer_groups(params, p_only)
         meta = {"kind": "offload_state_v1", "layout": LAYER_LAYOUT,
-                "n_layers": n_layers, "frozen": True, "base_tag": base_tag}
+                "n_layers": n_layers, "frozen": True, "base_tag": base_tag,
+                "base_quant": quant}
         store = SegmentStore.create(directory, groups, len(groups),
                                     meta=meta, group_labels=labels)
         return cls(store, like_params=params, max_resident=max_resident,
@@ -396,20 +436,35 @@ class LayerStreamedState(OffloadedTrainState):
         """Hint the double-buffered prefetcher (out-of-range is a no-op)."""
         self.engine.prefetch(i)
 
+    def _tree_of(self, treedef, leaves):
+        """Window leaves -> the pytree handed to the per-block program.
+
+        Plain layout: one tree of jnp copies (safe across eviction).
+        Quantized layout: the window holds encoded ``QuantLeaf``s — return a
+        (codes_tree, scales_tree) pair so the jitted program receives int8
+        codes and dequantizes internally (repro.offload.codecs.dequant_tree);
+        fp32 copies of the base never exist outside the jit."""
+        if not self.base_quant:
+            return jax.tree.unflatten(treedef,
+                                      [jnp.asarray(v) for v in leaves])
+        return (jax.tree.unflatten(treedef,
+                                   [jnp.asarray(v.codes) for v in leaves]),
+                jax.tree.unflatten(treedef,
+                                   [jnp.asarray(v.scales) for v in leaves]))
+
     def layer_params(self, i: int):
-        """One block's param pytree (jnp copies; safe across eviction)."""
+        """One block's param pytree (a (codes, scales) pair when the frozen
+        base is quantized)."""
         data = self.engine.acquire(i)
         prefix = f"{P}blocks.{i}."
-        return jax.tree.unflatten(
-            self.block_treedef,
-            [jnp.asarray(data[prefix + n]) for n in self.block_names])
+        return self._tree_of(self.block_treedef,
+                             [data[prefix + n] for n in self.block_names])
 
     def head_params(self):
         """The embed/ln_f/wpe/meta tree (everything outside the stack)."""
         data = self.engine.acquire(self.head_segment)
-        return jax.tree.unflatten(
-            self.head_treedef,
-            [jnp.asarray(data[P + n]) for n in self.head_names])
+        return self._tree_of(self.head_treedef,
+                             [data[P + n] for n in self.head_names])
 
     def finish_step(self):
         """Advance the shared AdamW count after a full update sweep."""
@@ -419,8 +474,14 @@ class LayerStreamedState(OffloadedTrainState):
     # ------------------------------------------------------------------
     # whole-tree views (checkpoint equivalence tests / eval)
     # ------------------------------------------------------------------
+    @staticmethod
+    def _decoded(v):
+        """Window leaf -> decoded host array (dequantizes encoded leaves)."""
+        return dequant_np(v) if isinstance(v, QuantLeaf) else v
+
     def materialize_params(self):
-        """Re-stack the per-layer segments into the full stacked tree."""
+        """Re-stack the per-layer segments into the full stacked tree.  A
+        quantized base materializes *dequantized* (export/merge path)."""
         per_layer: Dict[str, List[np.ndarray]] = {n: [] for n in
                                                   self.block_names}
         self.engine.prefetch(0)
@@ -429,12 +490,12 @@ class LayerStreamedState(OffloadedTrainState):
             data = self.engine.acquire(seg)
             prefix = f"{P}blocks.{seg}."
             for n in self.block_names:
-                per_layer[n].append(np.array(data[prefix + n]))
+                per_layer[n].append(np.array(self._decoded(data[prefix + n])))
         head = self.engine.acquire(self.head_segment)
         named = {"blocks." + n: jnp.asarray(np.stack(arrs))
                  for n, arrs in per_layer.items()}
         for n in self.head_names:
-            named[n] = jnp.asarray(np.array(head[P + n]))
+            named[n] = jnp.asarray(np.array(self._decoded(head[P + n])))
         return jax.tree.unflatten(self.treedef,
                                   [named[n] for n in self.names])
 

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint.store import CheckpointStore, latest_step
 from repro.config import ModelConfig, TrainConfig
+from repro.offload.state import ensure_base_quant_match
 from repro.data.corpus import synthetic_wikitext
 from repro.data.dataset import LMDataset, packed_batches
 from repro.data.tokenizer import ByteTokenizer
@@ -70,6 +71,27 @@ class TrainerRuntime:
     def log(self, msg: str):
         if self.print_fn:
             self.print_fn(msg)
+
+    def guard_segment_layout(self, ostate):
+        """Reconcile CLI storage flags against an existing segment layout
+        (one shared guard for every offload loop variant — this used to be
+        mirrored per-loop).  Storage choices are fixed when the layout is
+        created: a differing ``--offload-moment-dtype`` is merely ignored
+        (warn), but a differing ``--base-quant`` would hand the jitted
+        program the wrong encoding, so it hard-errors."""
+        tcfg = self.tcfg
+        if getattr(ostate, "frozen", False):
+            if tcfg.offload_moment_dtype != "float32":
+                self.log(f"[warn] --offload-moment-dtype "
+                         f"{tcfg.offload_moment_dtype} ignored: the frozen "
+                         "base layout stores params only (no m/v segments); "
+                         "the adapter's moments live in RAM")
+        elif ostate.moment_dtype != tcfg.offload_moment_dtype:
+            self.log(f"[warn] --offload-moment-dtype "
+                     f"{tcfg.offload_moment_dtype} ignored: the resumed "
+                     f"segment files store {ostate.moment_dtype} moments "
+                     "(fixed at create time)")
+        ensure_base_quant_match(ostate, tcfg.base_quant)
 
     def install_sigterm(self, flush_fn: Callable[[], None],
                         defer: bool = False):

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import html
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 
 def _sparkline(values: List[float], width=560, height=120, label="") -> str:

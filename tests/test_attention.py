@@ -1,12 +1,12 @@
 """Memory-efficient attention (paper C4): streaming == naive exact softmax."""
-from conftest import hypothesis_or_stub
-
-hypothesis, st = hypothesis_or_stub()
 import jax
 import jax.numpy as jnp
 import numpy as np
+from conftest import hypothesis_or_stub
 
-from repro.core.attention import SENTINEL, attention, default_positions
+from repro.core.attention import SENTINEL, attention
+
+hypothesis, st = hypothesis_or_stub()
 
 
 def _rand(key, *shape):

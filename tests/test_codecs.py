@@ -1,0 +1,381 @@
+"""Pluggable segment codecs (repro/offload/codecs.py) and the int8-quantized
+frozen base (streamed QLoRA).
+
+Covers: identity/bf16 encode-decode round-trip exactness, per-channel int8
+quantization error bounds, the mapping-table version upgrade (v1 tables from
+before the codec column still open, with their bf16 moments re-expressed as
+the bf16 codec) and the unknown-version guard, engine pull/write-back
+through every codec, the encoded (int8-resident) window, the quantized
+analytic bounds, and streamed int8-LoRA training: loss tracks the fp32
+frozen-base run within tolerance over 10 steps (dense + ssm), adapter-only
+resume is deterministic, and a codec mismatch on resume hard-errors.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.config import TrainConfig
+from repro.core.lora import lora_specs
+from repro.core.step import init_state, make_stream_step
+from repro.core.zero import frozen_base_bytes, lora_stream_resident_bytes
+from repro.launch.train import train_loop
+from repro.models import registry
+from repro.offload import LayerStreamedState, OffloadEngine, SegmentStore
+from repro.offload.codecs import (QuantLeaf, dequant_np, get_codec,
+                                  moment_codec)
+
+# streamed int8-LoRA must track the fp32 frozen-base run at least this
+# closely over 10 smoke steps (measured drift is ~1e-3; the bound leaves
+# an order of magnitude of headroom without ever hiding a real break)
+INT8_LOSS_ATOL = 1e-2
+
+
+# ---------------------------------------------------------------------------
+# codec round trips
+# ---------------------------------------------------------------------------
+def test_identity_roundtrip_exact():
+    rng = np.random.RandomState(0)
+    c = get_codec("identity")
+    for shape in [(7, 3), (5,), (2, 3, 4)]:
+        x = rng.randn(*shape).astype(np.float32)
+        buf = c.encode(x, "float32")
+        assert buf.nbytes == c.encoded_nbytes(shape, "float32") == x.nbytes
+        np.testing.assert_array_equal(c.decode(buf, shape, "float32"), x)
+        np.testing.assert_array_equal(c.storage_roundtrip(x), x)
+
+
+def test_bf16_roundtrip_exact_on_representable_values():
+    import ml_dtypes
+    rng = np.random.RandomState(1)
+    c = get_codec("bf16")
+    x = rng.randn(6, 4).astype(np.float32)
+    xb = x.astype(ml_dtypes.bfloat16).astype(np.float32)  # representable
+    buf = c.encode(xb, "float32")
+    assert buf.nbytes == c.encoded_nbytes(xb.shape, "float32") == xb.size * 2
+    np.testing.assert_array_equal(c.decode(buf, xb.shape, "float32"), xb)
+    # storage_roundtrip == what a write/read trip would produce
+    np.testing.assert_array_equal(c.storage_roundtrip(x), xb)
+
+
+def test_int8_per_channel_error_bound():
+    rng = np.random.RandomState(2)
+    c = get_codec("int8")
+    # mixed channel magnitudes: per-channel scaling must bound each channel
+    # by its own absmax/254, not the tensor-wide one
+    x = rng.randn(64, 8).astype(np.float32) * np.logspace(-2, 2, 8,
+                                                          dtype=np.float32)
+    buf = c.encode(x, "float32")
+    assert buf.nbytes == c.encoded_nbytes(x.shape, "float32") == x.size + 8 * 4
+    y = c.decode(buf, x.shape, "float32")
+    half_step = np.abs(x).max(axis=0) / 127.0 / 2.0
+    assert np.all(np.abs(x - y) <= half_step[None, :] * (1 + 1e-6) + 1e-12)
+    # encoded view: int8 codes + one fp32 scale per channel
+    q = c.decode_encoded(buf, x.shape, "float32")
+    assert q.codes.dtype == np.int8 and q.scales.shape == (8,)
+    np.testing.assert_allclose(dequant_np(q), y)
+
+
+def test_int8_edge_cases():
+    c = get_codec("int8")
+    # an all-zero channel must decode to zeros, not NaN
+    z = np.zeros((4, 3), np.float32)
+    np.testing.assert_array_equal(c.decode(c.encode(z, "float32"),
+                                           z.shape, "float32"), z)
+    # 1-D leaves quantize per tensor (one scale)
+    v = np.linspace(-2, 2, 33, dtype=np.float32)
+    buf = c.encode(v, "float32")
+    assert buf.nbytes == 33 + 4
+    assert np.abs(c.decode(buf, v.shape, "float32") - v).max() <= 2 / 254 * 1.01
+    with pytest.raises(ValueError, match="0-d"):
+        c.encode(np.float32(1.0), "float32")
+
+
+def test_unknown_codec_is_actionable():
+    with pytest.raises(ValueError, match="unknown segment codec"):
+        get_codec("nf4")
+    assert moment_codec("bfloat16") == "bf16"
+    assert moment_codec("float32") == "identity"
+
+
+# ---------------------------------------------------------------------------
+# mapping table: version upgrade + unknown-version guard
+# ---------------------------------------------------------------------------
+def _mixed_store(d):
+    rng = np.random.RandomState(3)
+    groups = [[("p.w", rng.randn(8, 4).astype(np.float32)),
+               ("m.w", rng.randn(8, 4).astype(np.float32), "bf16"),
+               ("v.w", np.abs(rng.randn(8, 4)).astype(np.float32), "bf16")]]
+    return SegmentStore.create(d, groups, 1,
+                               meta={"moment_dtype": "bfloat16"})
+
+
+def test_v1_table_upgrades_on_open(tmp_path):
+    """A version-1 table (pre-codec) must open with its bf16-stored moments
+    re-expressed as bf16-codec leaves — same bytes, same decoded values."""
+    d = str(tmp_path / "s")
+    store = _mixed_store(d)
+    want = store.read_segment(0)
+    # rewrite the table exactly as PR 2 wrote it: version 1, no codec
+    # column, moments recorded at their storage dtype
+    path = os.path.join(d, SegmentStore.TABLE)
+    with open(path) as f:
+        table = json.load(f)
+    table["version"] = 1
+    for r in table["leaves"]:
+        del r["codec"]
+        if r["name"].startswith(("m.", "v.")):
+            r["dtype"] = "bfloat16"
+    with open(path, "w") as f:
+        json.dump(table, f)
+    re = SegmentStore.open(d)
+    assert re.record("m.w").codec == "bf16"
+    assert re.record("m.w").dtype == "float32"     # logical dtype
+    assert re.record("p.w").codec == "identity"
+    got = re.read_segment(0)
+    for n in want:
+        np.testing.assert_array_equal(got[n], want[n])
+    # a meta rewrite persists the upgraded table as version 2
+    re.write_meta(step=1)
+    with open(path) as f:
+        assert json.load(f)["version"] == 2
+
+
+def test_newer_table_version_raises_actionable_error(tmp_path):
+    d = str(tmp_path / "s")
+    _mixed_store(d)
+    path = os.path.join(d, SegmentStore.TABLE)
+    with open(path) as f:
+        table = json.load(f)
+    table["version"] = 99
+    with open(path, "w") as f:
+        json.dump(table, f)
+    with pytest.raises(ValueError, match="version 99"):
+        SegmentStore.open(d)
+
+
+# ---------------------------------------------------------------------------
+# engine pull / write-back through each codec
+# ---------------------------------------------------------------------------
+def test_engine_decodes_on_pull_and_encodes_on_writeback(tmp_path):
+    import ml_dtypes
+    rng = np.random.RandomState(4)
+    x = rng.randn(8, 4).astype(np.float32)
+    d = str(tmp_path / "s")
+    SegmentStore.create(d, [[("p.w", x, "int8"), ("m.w", x, "bf16"),
+                             ("v.w", x)]], 1)
+    store = SegmentStore.open(d)
+    eng = OffloadEngine(store, max_resident=1, prefetch=False)
+    data = eng.acquire(0)
+    # pull hands each leaf's *window* form: identity/int8 decode to fp32,
+    # bf16 stays bf16-resident (its halved window bytes must survive)
+    np.testing.assert_array_equal(data["v.w"], x)
+    assert data["v.w"].dtype == np.float32
+    assert data["m.w"].dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(data["m.w"], np.float32),
+        x.astype(ml_dtypes.bfloat16).astype(np.float32))
+    half_step = np.abs(x).max(axis=0) / 254.0
+    assert data["p.w"].dtype == np.float32
+    assert np.all(np.abs(data["p.w"] - x) <= half_step[None, :] * 1.01)
+    # mutate through the window; write-back re-encodes through the codecs
+    data["m.w"][...] = x + 1
+    data["v.w"][...] = x - 1
+    data["p.w"][...] = 2 * x
+    eng.mark_dirty(0)
+    eng.flush()
+    eng.close()
+    fresh = SegmentStore.open(d).read_segment(0)
+    np.testing.assert_array_equal(
+        fresh["m.w"], (x + 1).astype(ml_dtypes.bfloat16).astype(np.float32))
+    np.testing.assert_array_equal(fresh["v.w"], x - 1)
+    assert np.all(np.abs(fresh["p.w"] - 2 * x) <= 2 * half_step[None, :] * 1.01)
+
+
+def test_encoded_window_stays_int8_resident(tmp_path):
+    rng = np.random.RandomState(5)
+    x = rng.randn(32, 16).astype(np.float32)
+    d = str(tmp_path / "s")
+    SegmentStore.create(d, [[("p.w", x, "int8")], [("p.b", x[0])]], 2,
+                        meta={"frozen": True})
+    store = SegmentStore.open(d)
+    eng = OffloadEngine(store, max_resident=2, prefetch=False,
+                        read_only=True, encoded=True)
+    data = eng.acquire(0)
+    q = data["p.w"]
+    assert isinstance(q, QuantLeaf) and q.codes.dtype == np.int8
+    # identity leaves pass through with empty scales
+    plain = eng.acquire(1)["p.b"]
+    assert isinstance(plain, QuantLeaf) and plain.scales.size == 0
+    # resident accounting bills the encoded bytes, not decoded fp32
+    assert eng.peak_resident_bytes <= store.total_bytes < x.nbytes * 2
+    eng.close()
+    # an encoded window that could write back would corrupt the store
+    with pytest.raises(ValueError, match="read_only"):
+        OffloadEngine(store, read_only=False, encoded=True)
+
+
+# ---------------------------------------------------------------------------
+# quantized frozen base layout
+# ---------------------------------------------------------------------------
+def _tcfg(**kw):
+    base = dict(global_batch=4, seq_len=32, learning_rate=1e-3,
+                total_steps=10, warmup_steps=1, compute_dtype="float32",
+                lora_rank=4, lora_alpha=16.0)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def test_quantized_frozen_layout_bytes_and_decode(tmp_path):
+    cfg = configs.get_smoke("gpt2_124m")
+    state = init_state(jax.random.PRNGKey(0), cfg, _tcfg())
+    f32 = LayerStreamedState.create_frozen(state["base"],
+                                           str(tmp_path / "f32"))
+    i8 = LayerStreamedState.create_frozen(state["base"], str(tmp_path / "i8"),
+                                          quant="int8")
+    assert i8.base_quant == "int8" and i8.engine.encoded
+    # matrix leaves went int8, vector leaves stayed identity
+    codecs = {r.name: r.codec for r in i8.store.records}
+    assert any(c == "int8" for c in codecs.values())
+    for r in i8.store.records:
+        assert r.codec == ("int8" if len(r.shape) >= 2 else "identity")
+    # on-flash bytes ~4x down, matching the analytic accounting exactly
+    specs = registry.param_specs(cfg)
+    seg8, head8, n_layers = frozen_base_bytes(specs, base_quant="int8")
+    assert i8.store.total_bytes == seg8 * n_layers + head8
+    assert f32.store.total_bytes > 3.5 * i8.store.total_bytes
+    # materialize dequantizes: close to the fp32 base, channel-bounded
+    deq = i8.materialize_params()
+    err = jax.tree.map(lambda a, b: float(np.abs(np.asarray(a)
+                                                - np.asarray(b)).max()),
+                       deq, state["base"])
+    assert max(jax.tree.leaves(err)) < 0.05
+    with pytest.raises(ValueError, match="quantization"):
+        LayerStreamedState.create_frozen(state["base"],
+                                         str(tmp_path / "bad"), quant="nf4")
+    f32.close()
+    i8.close()
+
+
+def test_quantized_resident_bound_and_mode_guard(tmp_path):
+    cfg = configs.get_smoke("gpt2_124m")
+    tcfg = _tcfg(total_steps=2, base_quant="int8")
+    specs = registry.param_specs(cfg)
+    lspecs = lora_specs(specs, tcfg.lora_targets, tcfg.lora_rank)
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    adapter = {"lora": state["lora"], "opt": state["opt"],
+               "step": state["step"]}
+    from repro.param import tree_bytes
+    adapter_b = tree_bytes({"lora": adapter["lora"], "opt": adapter["opt"]})
+    lstate = LayerStreamedState.create_frozen(
+        state["base"], str(tmp_path / "segs"), quant="int8",
+        max_resident=tcfg.offload_resident)
+    step_fn = make_stream_step(cfg, tcfg, lstate, "", adapter=adapter)
+    batch = registry.make_batch(jax.random.PRNGKey(1), cfg,
+                                tcfg.global_batch, tcfg.seq_len)
+    batch["labels"] = batch["tokens"]
+    for step in range(2):
+        step_fn(batch, step)
+    measured = step_fn.stats()["param_peak_resident_bytes"] + adapter_b
+    _, analytic8 = lora_stream_resident_bytes(
+        specs, lspecs, window=tcfg.offload_resident, base_quant="int8")
+    _, analytic32 = lora_stream_resident_bytes(
+        specs, lspecs, window=tcfg.offload_resident)
+    assert measured <= analytic8 < analytic32
+    assert step_fn.stats()["param_bytes_written"] == 0
+    step_fn.close()
+    lstate.close()
+    # feeding a quantized store to a program built without --base-quant
+    # (or vice versa) must fail loudly, not shapes-deep inside jax
+    re = LayerStreamedState.open(str(tmp_path / "segs"), state["base"])
+    with pytest.raises(ValueError, match="base-quant"):
+        make_stream_step(cfg, _tcfg(), re, "", adapter=adapter)
+    re.close()
+    # and --base-quant without LoRA is rejected outright
+    from repro.models.lm import make_layer_program
+    with pytest.raises(ValueError, match="base-quant"):
+        make_layer_program(cfg, _tcfg(lora_rank=0, base_quant="int8"))
+
+
+# ---------------------------------------------------------------------------
+# streamed int8-LoRA training (acceptance: tracks fp32 base over 10 steps)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,targets", [
+    ("gpt2_124m", ("wq", "wk", "wv", "wo")),
+    ("mamba2_130m", ("w_x", "w_out")),
+], ids=["dense", "ssm"])
+def test_int8_lora_loss_tracks_fp32_base(arch, targets, tmp_path):
+    cfg = configs.get_smoke(arch)
+    base = dict(global_batch=4, seq_len=32, learning_rate=1e-3,
+                total_steps=10, warmup_steps=1, compute_dtype="float32",
+                lora_rank=4, lora_alpha=16.0, lora_targets=targets,
+                offload_stream_params=True)
+    _, o32 = train_loop(cfg, TrainConfig(**base,
+                                         offload_dir=str(tmp_path / "f32")),
+                        out_dir=None, print_fn=None)
+    _, o8 = train_loop(cfg, TrainConfig(**base, base_quant="int8",
+                                        offload_dir=str(tmp_path / "i8")),
+                       out_dir=None, print_fn=None)
+    l32 = [r["loss"] for r in o32.rows]
+    l8 = [r["loss"] for r in o8.rows]
+    assert len(l8) == 10
+    np.testing.assert_allclose(l32, l8, atol=INT8_LOSS_ATOL)
+
+
+def test_int8_adapter_resume_deterministic_and_guarded(tmp_path):
+    cfg = configs.get_smoke("gpt2_124m")
+    base = dict(global_batch=2, seq_len=16, learning_rate=1e-3,
+                schedule="constant", warmup_steps=1, compute_dtype="float32",
+                lora_rank=4, lora_alpha=16.0, offload_stream_params=True,
+                base_quant="int8")
+    tA = TrainConfig(**base, total_steps=6)
+    _, oA = train_loop(cfg, tA, out_dir=str(tmp_path / "a"), print_fn=None)
+    out = str(tmp_path / "run")
+    tB1 = TrainConfig(**base, total_steps=3, checkpoint_every=3)
+    _, oB1 = train_loop(cfg, tB1, out_dir=out, print_fn=None)
+    # resuming against a different base codec must hard-error: the adapter
+    # learned around the int8 quantization error
+    fp32 = {**base, "base_quant": "", "total_steps": 6,
+            "checkpoint_every": 3}
+    with pytest.raises(ValueError, match="base_quant|base_tag"):
+        train_loop(cfg, TrainConfig(**fp32), out_dir=out, print_fn=None)
+    # matching codec resumes bit-deterministically
+    tB2 = TrainConfig(**base, total_steps=6, checkpoint_every=3)
+    _, oB2 = train_loop(cfg, tB2, out_dir=out, print_fn=None)
+    assert oB2.rows[0]["step"] == 3
+    lossesA = [r["loss"] for r in oA.rows]
+    lossesB = ([r["loss"] for r in oB1.rows] + [r["loss"] for r in oB2.rows])
+    np.testing.assert_allclose(lossesA, lossesB, atol=1e-6)
+
+
+def test_bf16_moment_equivalence_through_codec_layer(tmp_path):
+    """The bf16 moment path now runs through the codec layer: storage bytes
+    halve and the numerics match the pre-codec cast behavior (fp32 math,
+    bf16-rounded storage each step)."""
+    from repro.offload import OffloadedTrainState
+    import jax.numpy as jnp
+    cfg = configs.get_smoke("gpt2_124m")
+    state = init_state(jax.random.PRNGKey(0), cfg, _tcfg(lora_rank=0))
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(state["params"]))
+    ost = OffloadedTrainState.create(state, str(tmp_path / "b"), 4,
+                                     moment_dtype="bfloat16")
+    assert ost.state_bytes == n * 8            # fp32 p + bf16 m + v
+    assert all(r.codec == ("bf16" if r.name.startswith(("m.", "v."))
+                           else "identity") for r in ost.store.records)
+    grads = jax.tree.map(lambda p: jnp.full_like(p, 1e-3), state["params"])
+    ost.apply_update(grads, lr=1e-3)
+    ost.flush()
+    # window precision equals on-flash precision: a fresh reopen sees the
+    # very values the resident window holds
+    fresh = OffloadedTrainState.open(ost.store.directory, state["params"])
+    for seg in range(ost.store.num_segments):
+        want = ost.engine.acquire(seg)
+        got = fresh.engine.acquire(seg)
+        for k in want:
+            np.testing.assert_array_equal(np.asarray(want[k]),
+                                          np.asarray(got[k]))
+    ost.close()
+    fresh.close()

@@ -1,14 +1,11 @@
 """Paper-feature unit/property tests: C2 grad accumulation, C5 energy
 governor, C6 LoRA, optimizer, schedules."""
-import dataclasses
 
-from conftest import hypothesis_or_stub
-
-hypothesis, st = hypothesis_or_stub()
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import hypothesis_or_stub
 
 from repro import configs
 from repro.config import TrainConfig
@@ -21,6 +18,8 @@ from repro.optim import adamw_init, adamw_update, clip_by_global_norm
 from repro.optim.schedule import lr_schedule
 from repro.param import init_params
 
+hypothesis, st = hypothesis_or_stub()
+
 
 # ---------------------------------------------------------------------------
 # C2: gradient accumulation == full batch (paper Tab 7 invariant)
@@ -32,7 +31,8 @@ def test_grad_accum_equals_full_batch(n_micro):
                        attention_impl="streaming", attn_chunk=4)
     params = init_params(jax.random.PRNGKey(0), registry.param_specs(cfg))
     batch = registry.make_batch(jax.random.PRNGKey(1), cfg, 8, 8)
-    loss_fn = lambda p, b: registry.loss_fn(cfg)(p, b, cfg, tcfg)
+    def loss_fn(p, b):
+        return registry.loss_fn(cfg)(p, b, cfg, tcfg)
 
     l1, _, g1 = value_and_grad_accumulated(loss_fn, params, batch, 1)
     lk, _, gk = value_and_grad_accumulated(loss_fn, params, batch, n_micro)
@@ -47,7 +47,8 @@ def test_grad_compression_dtype():
     tcfg = TrainConfig(global_batch=4, seq_len=8, compute_dtype="float32")
     params = init_params(jax.random.PRNGKey(0), registry.param_specs(cfg))
     batch = registry.make_batch(jax.random.PRNGKey(1), cfg, 4, 8)
-    loss_fn = lambda p, b: registry.loss_fn(cfg)(p, b, cfg, tcfg)
+    def loss_fn(p, b):
+        return registry.loss_fn(cfg)(p, b, cfg, tcfg)
     _, _, g = value_and_grad_accumulated(loss_fn, params, batch, 2,
                                          reduce_dtype=jnp.bfloat16)
     assert all(x.dtype == jnp.bfloat16 for x in jax.tree.leaves(g))

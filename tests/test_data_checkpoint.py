@@ -1,13 +1,10 @@
 """Data pipeline + checkpoint/fault-tolerance tests."""
 import os
 
-from conftest import hypothesis_or_stub
-
-hypothesis, st = hypothesis_or_stub()
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
+from conftest import hypothesis_or_stub
 
 from repro.checkpoint import (latest_step, load_safetensors, restore, save,
                               save_safetensors)
@@ -15,6 +12,8 @@ from repro.checkpoint.store import CheckpointStore
 from repro.data.corpus import CHQA_CATEGORIES, chqa_pairs, synthetic_wikitext
 from repro.data.dataset import IGNORE, LMDataset, QADataset, packed_batches
 from repro.data.tokenizer import ByteTokenizer
+
+hypothesis, st = hypothesis_or_stub()
 
 
 # ---------------------------------------------------------------------------

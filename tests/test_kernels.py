@@ -1,5 +1,4 @@
 """Per-kernel allclose sweeps (interpret mode) against the pure-jnp oracles."""
-import itertools
 
 import jax
 import jax.numpy as jnp

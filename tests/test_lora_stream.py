@@ -16,7 +16,7 @@ import pytest
 from repro import configs
 from repro.config import TrainConfig
 from repro.core.lora import lora_specs, merge_lora
-from repro.core.step import init_state, make_stream_step, make_train_step
+from repro.core.step import init_state, make_stream_step
 from repro.core.zero import lora_stream_resident_bytes, stream_resident_bytes
 from repro.launch.train import train_loop
 from repro.models import registry

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro import configs
-from repro.config import ModelConfig, TrainConfig
+from repro.config import TrainConfig
 from repro.core.step import init_state, make_train_step
 from repro.models import registry
 from repro.param import init_params
@@ -130,7 +130,6 @@ def test_moe_routing_properties():
     """Every token gets k experts; gates renormalized; aux loss near 1."""
     from repro.models.moe import apply_moe
     cfg = configs.get_smoke("dbrx_132b")
-    from repro.models import lm
     params = init_params(jax.random.PRNGKey(0), registry.param_specs(cfg))
     p = jax.tree.map(lambda a: a[0], params["blocks"]["moe"])
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))

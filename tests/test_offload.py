@@ -5,8 +5,6 @@ write-back, double-buffered prefetch, copy-on-write snapshots (zero-copy
 checkpointing), segment-wise AdamW equivalence, and the smoke-train
 equivalence of `--offload-segments` against the in-memory baseline.
 """
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,7 +14,6 @@ from repro import configs
 from repro.checkpoint.store import (is_offload_checkpoint, latest_step,
                                     restore_offload, save_offload)
 from repro.config import TrainConfig
-from repro.core.step import init_state
 from repro.core.zero import offload_resident_bytes
 from repro.models import registry
 from repro.offload import (OffloadEngine, OffloadedTrainState, SegmentStore,

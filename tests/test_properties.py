@@ -1,12 +1,12 @@
 """Extra hypothesis property tests on system invariants."""
-from conftest import hypothesis_or_stub
-
-hypothesis, st = hypothesis_or_stub()
 import jax
 import jax.numpy as jnp
 import numpy as np
+from conftest import hypothesis_or_stub
 
 from repro.models import layers as L
+
+hypothesis, st = hypothesis_or_stub()
 
 
 @hypothesis.settings(max_examples=25, deadline=None)
@@ -49,7 +49,6 @@ def test_mrope_equals_rope_for_text_positions():
 @hypothesis.settings(max_examples=20, deadline=None)
 @hypothesis.given(v=st.integers(8, 64), pad=st.integers(0, 32))
 def test_padded_vocab_logits_never_win(v, pad):
-    logits = jax.random.normal(jax.random.PRNGKey(0), (4, v + pad)) * 10
     p = {"tok": jnp.eye(v + pad, 8)}
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
     out = L.unembed(p, x, tie=True, true_vocab=v)

@@ -4,7 +4,6 @@ import json
 import os
 import subprocess
 import sys
-import textwrap
 
 import numpy as np
 import pytest

@@ -2,7 +2,6 @@
 training loop with observer + governor + checkpoints, LoRA case-study
 pipeline, batched serving, dry-run unit pieces."""
 import dataclasses
-import json
 import os
 
 import jax
