@@ -202,9 +202,12 @@ def stream_rows(fast: bool = False, window: int = 2):
     specs = registry.param_specs(configs.get(arch))
     full, res = stream_resident_bytes(specs, window)
     _, res_b16 = stream_resident_bytes(specs, window, moment_bytes=4)
+    _, res_async = stream_resident_bytes(specs, window,
+                                         write_queue=2 * window)
     row("stream_resident_analytic_124m", 0.0,
         f"state {full/1e6:.0f}MB -> resident {res/1e6:.0f}MB "
-        f"(window {window}; {res_b16/1e6:.0f}MB with bf16 moments)")
+        f"(window {window}; {res_b16/1e6:.0f}MB with bf16 moments; "
+        f"{res_async/1e6:.0f}MB with the async write queue)")
 
 
 def stream_lora_rows(fast: bool = False, window: int = 2, rank: int = 8):

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows per the harness convention.
 
   bench_correctness  Fig 9 (Full-FT trajectory) + Tab 4 (LoRA vs Full-FT)
   bench_memchain     Fig 10 + Tab 6 (optimization-chain peak memory)
+  bench_stream_throughput  streamed-trainer wall-clock + overlap breakdown
   bench_accum        Tab 7 (gradient-accumulation ablation)
   bench_attention    Tab 8 / §4.1.4 (ME attention vs naive)
   bench_energy       Fig 11 (energy-aware scheduling trace)
@@ -19,11 +20,13 @@ import traceback
 
 from benchmarks import (bench_accum, bench_attention, bench_correctness,
                         bench_energy, bench_kernels, bench_memchain,
-                        bench_roofline, bench_serving)
+                        bench_roofline, bench_serving,
+                        bench_stream_throughput)
 
 ALL = [
     ("correctness", bench_correctness),
     ("memchain", bench_memchain),
+    ("stream_throughput", bench_stream_throughput),
     ("accum", bench_accum),
     ("attention", bench_attention),
     ("energy", bench_energy),

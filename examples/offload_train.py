@@ -56,6 +56,13 @@ def main():
     print(f"\n[layer-streamed] final loss {obs.rows[-1]['loss']:.4f} | "
           f"state on disk {s['store_bytes']/1e6:.2f} MB | peak resident "
           f"param window {s['peak_resident_bytes']/1e6:.2f} MB")
+    # the streamed step is an overlap pipeline by default: dirty segments
+    # write back on a background thread (flush/snapshots stay barriers) and
+    # block i+1 stages onto the device while block i computes.  Disable to
+    # compare:  offload_async_writeback=False, offload_staging=False
+    print(f"  async write-back blocked only "
+          f"{s['t_write_block_s']*1e3:.0f} ms total "
+          f"(background writer busy {s['writeback_busy_s']*1e3:.0f} ms)")
 
     # PEFT variant: LoRA over the streamed engine — the frozen base pages
     # through read-only param-only segments (no m/v, no write-back) while

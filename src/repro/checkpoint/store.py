@@ -119,6 +119,11 @@ def restore(directory: str, like_state, step: Optional[int] = None,
 # a checkpoint is just a hardlink snapshot of those files (zero-copy: no byte
 # of state is staged through RAM).  The engine flips to copy-on-write, so
 # later training steps never mutate the snapshot's inodes.
+#
+# ``ostate.snapshot`` runs behind the engine's flush barrier: with async
+# write-back enabled, every dirty segment still in the background write
+# queue lands on flash *before* the hardlinks are taken — a snapshot can
+# never capture a segment file whose write-back is mid-flight.
 
 def save_offload(ostate, directory: str, step: int, keep: int = 3) -> str:
     """Snapshot an ``OffloadedTrainState`` into ``<dir>/step_<n>/segments``.
@@ -186,7 +191,7 @@ def offload_checkpoint_layout(directory: str, step: int) -> str:
 
 def restore_offload(directory: str, work_dir: str, like_params,
                     step: Optional[int] = None, *, max_resident: int = 2,
-                    prefetch: bool = True):
+                    prefetch: bool = True, async_writeback: bool = True):
     """Reattach to an offload checkpoint by hardlinking its segment files
     into ``work_dir`` (copy-on-write).  Dispatches on the stored segment
     layout: layer-aligned checkpoints come back as ``LayerStreamedState``,
@@ -203,7 +208,7 @@ def restore_offload(directory: str, work_dir: str, like_params,
            else OffloadedTrainState)
     ostate = cls.from_checkpoint(
         seg_dir, work_dir, like_params, max_resident=max_resident,
-        prefetch=prefetch)
+        prefetch=prefetch, async_writeback=async_writeback)
     return ostate, step
 
 

@@ -179,6 +179,13 @@ class TrainConfig:
                                        # compute, not just the optimizer update
     offload_moment_dtype: str = "float32"  # float32 | bfloat16 (halves m/v segment
                                        # bytes; bf16 segment codec, fp32 math)
+    offload_async_writeback: bool = True  # bounded background dirty-segment
+                                       # writer: eviction no longer blocks on
+                                       # encode+msync (flush/snapshot barrier)
+    offload_staging: bool = True       # double-buffered host->device staging:
+                                       # block i+1 converts to device arrays
+                                       # while block i computes; loss/grad-norm
+                                       # syncs defer to the end of the step
     base_quant: str = ""               # "" | int8: quantize the *frozen* base
                                        # segments of streamed LoRA per channel
                                        # (QLoRA-style; ~4x less flash + window)

@@ -45,11 +45,34 @@ segments are per-channel quantized (repro/offload/codecs.py) and the window
 keeps them *encoded* — ``layer_params``/``head_params`` hand the program
 (codes, scales) tree pairs and the jitted entry points dequantize per
 block, so fp32 base weights only ever exist as XLA transients.
+
+The step is an *overlap pipeline*, not just a memory bound
+(``tcfg.offload_staging``, default on):
+
+- **Device staging**: block ``i+1``'s window leaves convert to device
+  arrays right after block ``i``'s compute is dispatched (JAX dispatch is
+  asynchronous), so the flash read *and* the host->device transfer of the
+  next block hide behind the current block's compute — classic double
+  buffering, at most two staged blocks alive.  The head tree is staged
+  once per step (once per run for a frozen base) and the per-layer
+  attention-window constants are device-resident from construction.
+- **Deferred syncs**: ``loss``, ``aux_sum`` and the grad-norm square-sum
+  stay device scalars until the end of the step — one ``float()`` sync per
+  step instead of one per block boundary; per-segment square-sums come
+  from one fused jitted reduction.
+- **Async write-back** (``tcfg.offload_async_writeback``): dirty segment
+  eviction hands bytes to the engine's background writer instead of
+  encode+msync on the critical path (repro/offload/engine.py).
+
+``pipeline_stats()`` reports the overlap breakdown (time blocked on reads
+/ writes / host->device staging) that the stream-throughput benchmark
+turns into a compute/IO overlap fraction.
 """
 from __future__ import annotations
 
 import math
 import os
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -116,6 +139,20 @@ class StreamedTrainStep:
         ensure_base_quant_match(lstate, tcfg.base_quant)
         self.program = make_layer_program(cfg, tcfg)
         self.windows = np.asarray(T.layer_windows(cfg))
+        # per-layer attention-window constants live on device from day one
+        # — re-uploading an identical scalar per block per sweep was pure
+        # critical-path transfer
+        self._windows_dev = [jnp.asarray(w) for w in self.windows]
+        self.staging = bool(getattr(tcfg, "offload_staging", True))
+        self._staged: "Dict[int, Any]" = {}   # block idx -> device tree
+        self._head_dev = None                 # staged head tree (per step)
+        self._pos_cache: Dict[Any, Any] = {}  # (b, s) -> device positions
+        # one fused reduction per segment instead of a host square+sum per
+        # leaf; returns a device scalar so the grad-norm sync defers to the
+        # end of the step (two cache entries: block tree, head tree)
+        self._sumsq = jax.jit(
+            lambda gs, inv: sum(jnp.sum(jnp.square(g * inv)) for g in gs))
+        self.t_h2d_s = 0.0                    # host->device staging time
         self.grad_engine: Optional[OffloadEngine] = None
         if self.lora_mode:
             if adapter is None:
@@ -139,7 +176,9 @@ class StreamedTrainStep:
             self.grad_engine = OffloadEngine(
                 make_grad_store(lstate, grad_dir),
                 max_resident=max(1, tcfg.offload_resident),
-                prefetch=tcfg.offload_prefetch)
+                prefetch=tcfg.offload_prefetch,
+                async_writeback=getattr(tcfg, "offload_async_writeback",
+                                        True))
 
     # ------------------------------------------------------------------
     # adapter plumbing (PEFT mode)
@@ -162,51 +201,119 @@ class StreamedTrainStep:
         return jax.tree.map(lambda a: a[i], lblocks)
 
     # ------------------------------------------------------------------
+    # device staging (double-buffered host->device pipeline)
+    # ------------------------------------------------------------------
+    def _timed_pull(self, fn):
+        """Run a window pull + device conversion, billing only the
+        *conversion* share to ``t_h2d_s`` — the engine already bills its
+        own acquire wait to ``t_read_block_s``/``t_write_block_s``, and
+        the breakdown's components must not double-count."""
+        eng = self.lstate.engine
+        t0 = time.perf_counter()
+        b0 = eng.t_read_block_s + eng.t_write_block_s
+        out = fn()
+        blocked = (eng.t_read_block_s + eng.t_write_block_s) - b0
+        self.t_h2d_s += max(0.0, (time.perf_counter() - t0) - blocked)
+        return out
+
+    def _stage_layer(self, i: int):
+        """Convert block ``i``'s window leaves to device arrays *now* —
+        called right after the previous block's compute is dispatched, so
+        the window pull + host->device copy overlap that compute.  Bounded
+        to two staged blocks (the one consumed next and this one)."""
+        if not self.staging or not (0 <= i < self.lstate.n_layers):
+            return
+        if i in self._staged:
+            return
+        self._staged[i] = self._timed_pull(
+            lambda: self.lstate.layer_params(i))
+        while len(self._staged) > 2:
+            self._staged.pop(next(iter(self._staged)))
+
+    def _block_params(self, i: int):
+        """Block ``i``'s device param tree: the staged copy when the
+        pipeline ran ahead, else a synchronous pull + convert."""
+        bp = self._staged.pop(i, None)
+        if bp is not None:
+            return bp
+        return self._timed_pull(lambda: self.lstate.layer_params(i))
+
+    def _head_params(self):
+        """The head device tree, staged once per step (once per run for a
+        frozen base — its bytes never change): re-converting embed/ln_f per
+        micro-batch was repeated host->device traffic.  Full-FT mode drops
+        the cache after each update sweep (the head segment mutates)."""
+        if not self.staging:
+            return self.lstate.head_params()
+        if self._head_dev is None:
+            self._head_dev = self._timed_pull(self.lstate.head_params)
+        return self._head_dev
+
+    def _positions(self, b: int, s: int):
+        if (b, s) not in self._pos_cache:
+            self._pos_cache[(b, s)] = self.program.positions(b, s)
+        return self._pos_cache[(b, s)]
+
+    # ------------------------------------------------------------------
     def _sink(self, seg: int, names: List[str], grads: List[Any],
-              first: bool, last: bool, n_micro: int) -> float:
+              first: bool, last: bool, n_micro: int):
         """Accumulate one segment's gradient leaves into the scratch store;
         on the last micro-batch return this segment's contribution to
-        ||g/n||^2 (the averaged-gradient global norm)."""
+        ||g/n||^2 (the averaged-gradient global norm) as a *device scalar*
+        — the sync defers to the end of the step."""
         gdata = self.grad_engine.acquire(seg)
-        sq = 0.0
         for n, g in zip(names, grads):
             g = np.asarray(g, np.float32)
             if first:
                 gdata[n][...] = g
             else:
                 gdata[n] += g
-            if last:
-                avg = gdata[n] / n_micro if n_micro > 1 else gdata[n]
-                sq += float(np.sum(np.square(avg, dtype=np.float32),
-                                   dtype=np.float32))
         self.grad_engine.mark_dirty(seg)
-        return sq
+        if not last:
+            return 0.0
+        if n_micro == 1:
+            # the device gradients ARE the average: reduce them where they
+            # already live, no host round trip
+            return self._sumsq(list(grads), jnp.float32(1.0))
+        return self._sumsq([gdata[n] for n in names],
+                           jnp.float32(1.0 / n_micro))
 
     def _forward_sweep(self, mb, keep_acts: bool):
-        """Stream the blocks forward, prefetching ``i+1`` while ``i``
-        computes.  Returns (head, acts, aux_sum, positions); ``acts`` holds
-        the L+1 layer-boundary activations when ``keep_acts`` (for the
-        backward sweep), else just the final one."""
+        """Stream the blocks forward as a three-deep pipeline: while block
+        ``i`` computes (dispatch is asynchronous), block ``i+1`` converts
+        host->device and block ``i+2`` pages in from flash.  Returns
+        (head, acts, aux_sum, positions); ``acts`` holds the L+1
+        layer-boundary activations when ``keep_acts`` (for the backward
+        sweep), else just the final one."""
         prog, lstate = self.program, self.lstate
-        head = lstate.head_params()
+        head = self._head_params()
         if self.lora_mode:
             lblocks, lhead = self._lora_split()
             x = prog.embed(head, lhead, mb)
         else:
             x = prog.embed(head, mb)
-        positions = prog.positions(x.shape[0], x.shape[1])
+        positions = self._positions(x.shape[0], x.shape[1])
         acts = [x]
         aux_sum = jnp.zeros((), jnp.float32)
         lstate.prefetch_layer(0)
         for i in range(lstate.n_layers):
-            lstate.prefetch_layer(i + 1)   # i+1 pages in while i computes
-            bp = lstate.layer_params(i)
-            win = jnp.asarray(self.windows[i])
+            if i + 1 < lstate.n_layers:
+                lstate.prefetch_layer(i + 1)   # pages in while i computes
+            elif not self.staging:
+                # pre-staging path re-acquires the head every micro-batch,
+                # so warm it; the staged path holds the head device tree for
+                # the whole step and never re-acquires — prefetching it
+                # would strand an unclaimed buffer in the pipeline
+                lstate.prefetch_layer(lstate.head_segment)
+            bp = self._block_params(i)
+            win = self._windows_dev[i]
             if self.lora_mode:
                 x, aux = prog.block(bp, self._block_lora(lblocks, i), x, win,
                                     positions)
             else:
                 x, aux = prog.block(bp, x, win, positions)
+            # block i's compute is in flight: stage i+1's device copy now
+            self._stage_layer(i + 1)
             if keep_acts:
                 acts.append(x)
             else:
@@ -236,20 +343,21 @@ class StreamedTrainStep:
             lstate.prefetch_layer(i - 1)
             self.grad_engine.prefetch(
                 i - 1 if i > 0 else lstate.head_segment)
-            bp = lstate.layer_params(i)
-            dp, dx = prog.block_vjp(bp, acts[i],
-                                    jnp.asarray(self.windows[i]), positions,
-                                    dx, daux)
+            bp = self._block_params(i)
+            dp, dx = prog.block_vjp(bp, acts[i], self._windows_dev[i],
+                                    positions, dx, daux)
+            # the VJP is in flight: stage block i-1 while it computes
+            self._stage_layer(i - 1)
             acts[i + 1] = None             # free the boundary activation
             names = [f"blocks.{i}.{n}" for n in lstate.block_names]
-            sq += self._sink(i, names, jax.tree.leaves(dp), first, last,
-                             n_micro)
+            sq = sq + self._sink(i, names, jax.tree.leaves(dp), first, last,
+                                 n_micro)
 
         # embed's contribution lands on the same head tree as the unembed's
         dhead_e = prog.embed_vjp(head, mb, dx)
         dhead = jax.tree.map(jnp.add, dhead, dhead_e)
-        sq += self._sink(lstate.head_segment, lstate.head_names,
-                         jax.tree.leaves(dhead), first, last, n_micro)
+        sq = sq + self._sink(lstate.head_segment, lstate.head_names,
+                             jax.tree.leaves(dhead), first, last, n_micro)
         return loss, metrics, sq
 
     def _two_sweeps_lora(self, mb, first: bool, last: bool, n_micro: int):
@@ -271,10 +379,11 @@ class StreamedTrainStep:
         lstate.prefetch_layer(L - 1)
         for i in reversed(range(L)):
             lstate.prefetch_layer(i - 1)
-            bp = lstate.layer_params(i)
+            bp = self._block_params(i)
             dlp, dx = prog.block_vjp(bp, self._block_lora(lblocks, i),
-                                     acts[i], jnp.asarray(self.windows[i]),
+                                     acts[i], self._windows_dev[i],
                                      positions, dx, daux)
+            self._stage_layer(i - 1)       # overlap the VJP in flight
             acts[i + 1] = None             # free the boundary activation
             block_grads[i] = dlp
 
@@ -292,20 +401,26 @@ class StreamedTrainStep:
 
         sq = 0.0
         if last:
-            for leaf in jax.tree.leaves(self._acc):
-                avg = np.asarray(leaf, np.float32)
-                if n_micro > 1:
-                    avg = avg / n_micro
-                sq += float(np.sum(np.square(avg, dtype=np.float32),
-                                   dtype=np.float32))
+            # device-side reduction; the only sync is the end-of-step float
+            sq = self._sumsq(jax.tree.leaves(self._acc),
+                             jnp.float32(1.0 / n_micro))
         return loss, metrics, sq
 
     def _update_sweep(self, lr, clip_scale: float, n_micro: int):
-        """Stream (p, m, v) + grad segments and AdamW each in place."""
+        """Stream (p, m, v) + grad segments and AdamW each in place.  The
+        sweep is software-pipelined one segment deep (window permitting):
+        segment ``i``'s dispatched AdamW computes while segment ``i+1``'s
+        (p, m, v) + grads pull in and convert, and only then is ``i``
+        forced and stored back — the same overlap discipline as the
+        forward/backward sweeps."""
         lstate, tcfg = self.lstate, self.tcfg
         count = jnp.asarray(lstate.count, jnp.int32)
+        # the pending segment must still be resident when its results are
+        # stored, so pipelining needs two window slots
+        pipelined = lstate.engine.max_resident >= 2
         lstate.engine.prefetch(0)
         self.grad_engine.prefetch(0)
+        pending = None
         for seg in range(lstate.store.num_segments):
             lstate.engine.prefetch(seg + 1)
             self.grad_engine.prefetch(seg + 1)
@@ -316,11 +431,23 @@ class StreamedTrainStep:
                 if n_micro > 1:
                     g = g / n_micro
                 gnamed[n] = g * clip_scale
-            lstate._update_segment(seg, gnamed, count, lr=lr,
-                                   beta1=tcfg.beta1, beta2=tcfg.beta2,
-                                   eps=tcfg.eps,
-                                   weight_decay=tcfg.weight_decay)
+            nxt = lstate._update_segment_dispatch(
+                seg, gnamed, count, lr=lr, beta1=tcfg.beta1,
+                beta2=tcfg.beta2, eps=tcfg.eps,
+                weight_decay=tcfg.weight_decay)
+            if pending is not None:
+                lstate._update_segment_store(pending)
+            if pipelined:
+                pending = nxt
+            else:
+                lstate._update_segment_store(nxt)
+        if pending is not None:
+            lstate._update_segment_store(pending)
         lstate.finish_step()
+        # every param segment just mutated: staged device copies (and the
+        # head tree) are one step stale now
+        self._staged.clear()
+        self._head_dev = None
 
     def _update_adapter(self, lr, clip_scale: float, n_micro: int):
         """One in-memory AdamW over the accumulated adapter gradients —
@@ -347,9 +474,10 @@ class StreamedTrainStep:
         for j in range(n):
             mb = (jax.tree.map(lambda a: a[j], micros) if n > 1 else batch)
             loss, metrics, s = self._two_sweeps(mb, j == 0, j == n - 1, n)
-            loss_sum += float(loss)
-            sq += s
-        gnorm = math.sqrt(sq)
+            loss_sum = loss_sum + loss     # device scalar until step end
+            sq = sq + s
+        # the one host sync of the step: clipping needs the global norm
+        gnorm = math.sqrt(float(sq))
         if tcfg.grad_clip > 0:
             clip_scale = min(1.0, tcfg.grad_clip / max(gnorm, 1e-9))
         else:
@@ -363,7 +491,7 @@ class StreamedTrainStep:
         else:
             self._update_sweep(lr, clip_scale, n)
         metrics = dict(metrics)
-        metrics["loss"] = loss_sum / n
+        metrics["loss"] = float(loss_sum) / n
         metrics["grad_norm"] = gnorm
         metrics["lr"] = lr
         return metrics["loss"], metrics
@@ -384,7 +512,29 @@ class StreamedTrainStep:
         if self.grad_engine is not None:
             s.update({"grad_" + k: v
                       for k, v in self.grad_engine.stats().items()})
+        s["stage_h2d_s"] = self.t_h2d_s
         return s
+
+    def pipeline_stats(self) -> Dict[str, float]:
+        """The overlap breakdown the throughput benchmark reports: seconds
+        spent *blocked* on segment reads / write-backs plus the staging
+        (host->device) time — everything else is compute the pipeline
+        successfully hid I/O behind."""
+        s = self.stats()
+        out = {
+            "read_block_s": float(s.get("param_t_read_block_s", 0.0))
+            + float(s.get("grad_t_read_block_s", 0.0)),
+            "write_block_s": float(s.get("param_t_write_block_s", 0.0))
+            + float(s.get("grad_t_write_block_s", 0.0)),
+            "stage_h2d_s": float(self.t_h2d_s),
+            "writeback_busy_s": float(s.get("param_writeback_busy_s", 0.0))
+            + float(s.get("grad_writeback_busy_s", 0.0)),
+        }
+        hits = s.get("param_prefetch_hits", 0)
+        loads = s.get("param_sync_loads", 0)
+        out["prefetch_hit_rate"] = (hits / (hits + loads)
+                                    if (hits + loads) else 1.0)
+        return out
 
     def close(self):
         if self.grad_engine is not None:

@@ -68,19 +68,25 @@ def _stream_geometry(specs):
 
 
 def stream_resident_bytes(specs, window: int = 2, param_bytes: int = 4,
-                          moment_bytes: int = 8):
+                          moment_bytes: int = 8, write_queue: int = 0):
     """Analytic peak resident state bytes of the *layer-streamed* path
     (repro/core/stream.py): fwd/bwd pulls layer-aligned (p, m, v) segments
     through the offload window, so compute holds the head segment (embed /
     ln_f / wpe / meta) plus at most ``window + 1`` block segments (the LRU
     window and the jnp working copy / prefetch slot) — independent of
-    ``n_layers``.  Returns (full_state, resident) bytes like
+    ``n_layers``.  ``write_queue`` adds the async pipeline's share
+    (``offload_async_writeback``): up to ``window - 1`` evicted dirty
+    segments queued plus one mid-write, plus the prefetcher's bounded
+    recycle pool (up to ``window`` free buffer sets) — pass
+    ``write_queue=2*window`` to bound the fully pipelined engine honestly
+    (deferring a write defers its memory too, and pooled free buffers are
+    still resident bytes).  Returns (full_state, resident) bytes like
     ``offload_resident_bytes``; ``moment_bytes=4`` models bf16 moments."""
     per_leaf = param_bytes + moment_bytes
     block_n, head_n, n_layers = _stream_geometry(specs)
     layer_seg = block_n // max(n_layers, 1) * per_leaf
     full_state = (block_n + head_n) * per_leaf
-    resident = head_n * per_leaf + (window + 1) * layer_seg
+    resident = head_n * per_leaf + (window + 1 + write_queue) * layer_seg
     return full_state, int(resident)
 
 

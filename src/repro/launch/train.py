@@ -143,7 +143,8 @@ def offload_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
         ostate, start = restore_offload(
             rt.ckdir, work_dir, like_params, last,
             max_resident=tcfg.offload_resident,
-            prefetch=tcfg.offload_prefetch)
+            prefetch=tcfg.offload_prefetch,
+            async_writeback=tcfg.offload_async_writeback)
         rt.guard_segment_layout(ostate)
         rt.log(f"[resume] offload checkpoint step {start}")
     if ostate is None:
@@ -152,7 +153,8 @@ def offload_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
             state, work_dir, tcfg.offload_segments,
             max_resident=tcfg.offload_resident,
             prefetch=tcfg.offload_prefetch,
-            moment_dtype=tcfg.offload_moment_dtype)
+            moment_dtype=tcfg.offload_moment_dtype,
+            async_writeback=tcfg.offload_async_writeback)
         del state  # from here on the segment files own the optimizer state
 
     rt.install_sigterm(lambda: rt.store.save_offload(ostate, ostate.step),
@@ -213,7 +215,8 @@ def stream_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
         lstate, start = restore_offload(
             rt.ckdir, work_dir, like_params, last,
             max_resident=tcfg.offload_resident,
-            prefetch=tcfg.offload_prefetch)
+            prefetch=tcfg.offload_prefetch,
+            async_writeback=tcfg.offload_async_writeback)
         rt.guard_segment_layout(lstate)
         rt.log(f"[resume] layer-streamed checkpoint step {start}")
     if lstate is None:
@@ -221,7 +224,8 @@ def stream_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
         lstate = LayerStreamedState.create(
             state, work_dir, max_resident=tcfg.offload_resident,
             prefetch=tcfg.offload_prefetch,
-            moment_dtype=tcfg.offload_moment_dtype)
+            moment_dtype=tcfg.offload_moment_dtype,
+            async_writeback=tcfg.offload_async_writeback)
         del state  # the segment files own params AND optimizer state now
 
     rt.install_sigterm(lambda: rt.store.save_offload(lstate, lstate.step),
@@ -236,11 +240,16 @@ def stream_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
     if rt.store:
         rt.store.save_offload(lstate, lstate.step)
     s = step_fn.stats()
+    ps = step_fn.pipeline_stats()
     rt.log(f"[stream] {lstate.n_layers} layer segments + head | state "
            f"{s['param_store_bytes']/1e6:.1f} MB | peak param window "
            f"{s['param_peak_resident_bytes']/1e6:.1f} MB | prefetch hit "
            f"{s['param_prefetch_hits']}"
            f"/{s['param_prefetch_hits']+s['param_sync_loads']}")
+    rt.log(f"[stream] pipeline: read-blocked {ps['read_block_s']:.2f}s | "
+           f"write-blocked {ps['write_block_s']:.2f}s | h2d staging "
+           f"{ps['stage_h2d_s']:.2f}s | background write "
+           f"{ps['writeback_busy_s']:.2f}s")
     params = lstate.materialize_params()
     step_fn.close()
     lstate.close()
@@ -363,6 +372,10 @@ def stream_lora_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
            f" adapter state {adapter_mb:.2f} MB resident | prefetch hit "
            f"{s['param_prefetch_hits']}"
            f"/{s['param_prefetch_hits']+s['param_sync_loads']}")
+    ps = step_fn.pipeline_stats()
+    rt.log(f"[stream+lora] pipeline: read-blocked {ps['read_block_s']:.2f}s"
+           f" | h2d staging {ps['stage_h2d_s']:.2f}s | prefetch hit rate "
+           f"{ps['prefetch_hit_rate']:.2f}")
     if out_dir:
         save_adapter(os.path.join(out_dir, "adapter.safetensors"),
                      adapter["lora"], rank=tcfg.lora_rank,
@@ -423,6 +436,16 @@ def main():
                     help="storage dtype of the AdamW m/v segments "
                          "(bfloat16 halves their bytes; update math stays "
                          "fp32 via the bf16 segment codec)")
+    ap.add_argument("--offload-async-writeback",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="bounded background dirty-segment writer: eviction "
+                         "no longer blocks on encode+msync (flush and "
+                         "snapshots stay barriers)")
+    ap.add_argument("--offload-staging",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="double-buffered host->device staging of block "
+                         "i+1 while block i computes, plus deferred "
+                         "loss/grad-norm syncs (one per step)")
     ap.add_argument("--base-quant", default="", choices=("", "int8"),
                     help="quantize the frozen base segments of streamed "
                          "LoRA (requires --lora-rank and "
@@ -474,6 +497,8 @@ def main():
         offload_resident=args.offload_resident,
         offload_prefetch=args.offload_prefetch,
         offload_moment_dtype=args.offload_moment_dtype,
+        offload_async_writeback=args.offload_async_writeback,
+        offload_staging=args.offload_staging,
         base_quant=args.base_quant)
     governor = None
     if args.energy:

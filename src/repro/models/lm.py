@@ -14,6 +14,7 @@ donated cache pytree whose content depends on the family (kv and/or ssm).
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, NamedTuple
 
 import jax
@@ -305,7 +306,11 @@ def make_layer_program(cfg: ModelConfig, tcfg: TrainConfig) -> LayerProgram:
                                       alpha=alpha),
                            x, batch, aux_sum)
 
-        @jax.jit
+        # dy is each block's incoming activation cotangent — produced by the
+        # previous VJP and never read again, so its buffer is donated to the
+        # call (the backward sweep recycles one cotangent-sized buffer
+        # instead of allocating L of them)
+        @functools.partial(jax.jit, donate_argnums=(5,))
         def lora_block_vjp(bp, blp, x, window, positions, dy, daux):
             _, f_vjp = jax.vjp(
                 lambda lp, xx: lora_block_fn(bp, lp, xx, window, positions),
@@ -336,7 +341,10 @@ def make_layer_program(cfg: ModelConfig, tcfg: TrainConfig) -> LayerProgram:
                             head_loss=jax.jit(lora_head_fn),
                             positions=positions, lora=True)
 
-    @jax.jit
+    # dy (the incoming activation cotangent) is consumed exactly once per
+    # block — donate its buffer so the backward sweep reuses one
+    # cotangent-sized allocation across all L blocks
+    @functools.partial(jax.jit, donate_argnums=(4,))
     def block_vjp(bp, x, window, positions, dy, daux):
         _, f_vjp = jax.vjp(
             lambda p, xx: block_fn(p, xx, window, positions), bp, x)

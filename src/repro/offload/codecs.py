@@ -96,6 +96,19 @@ class SegmentCodec:
         consumer casts to fp32 at use and re-rounds on store)."""
         return self.decode(buf, shape, dtype)
 
+    def storage_view(self, buf: np.ndarray, shape: Tuple[int, ...],
+                     dtype: str):
+        """Zero-copy storage-typed view of one leaf's bytes, or None when
+        the codec has no flat array storage form (int8's packed
+        codes+scales).  The allocation-free read path copies this view into
+        a reusable destination buffer instead of allocating."""
+        return buf.view(np_dtype(dtype)).reshape(shape)
+
+    def window_np_dtype(self, dtype: str) -> np.dtype:
+        """Numpy dtype of the *window* representation (what ``window``
+        returns) — the dtype a reusable window buffer must carry."""
+        return np_dtype(dtype)
+
     def storage_roundtrip(self, arr: np.ndarray) -> np.ndarray:
         """decode(encode(arr)) without touching bytes: what a value becomes
         after one trip through storage.  The state layer applies this when
@@ -123,6 +136,12 @@ class Bf16Codec(SegmentCodec):
         # resident form stays bfloat16: decoding moments to fp32 here would
         # silently hand back the halved window bytes this codec exists for
         return np.array(buf.view(np_dtype("bfloat16")).reshape(shape))
+
+    def storage_view(self, buf, shape, dtype):
+        return buf.view(np_dtype("bfloat16")).reshape(shape)
+
+    def window_np_dtype(self, dtype):
+        return np_dtype("bfloat16")
 
     def storage_roundtrip(self, arr):
         a = np.asarray(arr)
@@ -165,6 +184,9 @@ class Int8Codec(SegmentCodec):
         codes = np.array(buf[:n].view(np.int8)).reshape(shape)
         scales = np.array(buf[n:].view(np.float32))
         return QuantLeaf(codes, scales)
+
+    def storage_view(self, buf, shape, dtype):
+        return None     # packed [codes | scales]: no flat array view
 
     def storage_roundtrip(self, arr):
         a = np.asarray(arr)

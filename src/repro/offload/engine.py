@@ -3,23 +3,67 @@
 ``OffloadEngine`` keeps at most ``max_resident`` segments in RAM in an LRU
 window.  A background ``Prefetcher`` thread double-buffers reads: while
 segment ``i`` is being consumed by the optimizer, segment ``i+1`` streams in
-from its mmap file, hiding the page-in latency behind compute.  Evicted
-segments that were marked dirty are written back to their segment files
-before leaving the window.
+from its mmap file, hiding the page-in latency behind compute.
 
-The engine tracks the statistics the mem-chain benchmark reports:
-window hits/misses, prefetch hit rate, bytes read/written, and the peak
-resident segment bytes (the number the paper's C1 drives down).
+Write-back is pipelined too (``async_writeback=True``): eviction hands a
+dirty segment to a bounded background ``AsyncWriter`` instead of blocking
+``acquire`` on encode + msync — the flash write hides behind the next
+block's compute.  ``flush()``/``close()`` (and therefore every hardlink
+snapshot) are barriers that fence the write queue, and re-acquiring a
+segment still in the queue hands its bytes straight back to the window
+(a *write hit* — no flash round trip, no staleness).  The queue's bytes
+count toward ``peak_resident_bytes``: deferring a write must not hide its
+memory.
+
+The engine tracks the statistics the benchmarks report: window hits/misses,
+prefetch hit rate, bytes read/written, peak resident segment bytes (the
+number the paper's C1 drives down), and the overlap timers (wall-clock spent
+*blocked* on reads / writes vs. total) that the stream-throughput benchmark
+turns into a compute/IO overlap breakdown.
 """
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.offload.segments import SegmentStore
+
+
+def _data_nbytes(data) -> int:
+    # actual bytes held, not storage bytes: a decoded bf16 leaf sits in
+    # the window as fp32, an encoded int8 leaf as its codes + scales
+    return int(sum(v.nbytes for v in data.values()))
+
+
+_HOST_COPIES: Optional[bool] = None
+
+
+def _host_to_device_copies() -> bool:
+    """True when the jit boundary *copies* host numpy buffers at every
+    size probed.  Some CPU backends zero-copy large (page-aligned) host
+    arrays — a recycled window buffer would then be overwritten underneath
+    a live device array, silently corrupting in-flight compute — so the
+    reuse pool only turns on when mutation of the source is invisible
+    through the converted array for both a small and a weight-sized
+    buffer.  (H2D backends always copy; this gates the CPU case.)"""
+    global _HOST_COPIES
+    if _HOST_COPIES is None:
+        try:
+            import jax.numpy as jnp
+            copies = True
+            for n in (16384, 1 << 20):      # 64 KB and 4 MB fp32 buffers
+                probe = np.zeros((n,), np.float32)
+                dev = jnp.asarray(probe)
+                probe[0] = 1.0
+                copies = copies and float(dev[0]) == 0.0
+            _HOST_COPIES = copies
+        except Exception:
+            _HOST_COPIES = False
+    return _HOST_COPIES
 
 
 class Prefetcher:
@@ -29,6 +73,21 @@ class Prefetcher:
     bounded buffer (``depth`` slots — 2 = classic double buffering).
     ``take(i)`` hands the buffered copy over (or loads synchronously on a
     miss).  The buffer is consume-once: ownership moves to the caller.
+
+    The reader thread never loads past the buffer bound, so a completed
+    read can never silently drop a segment another consumer scheduled and
+    is about to ``take`` (``forced_drops`` in ``stats()`` counts the
+    defensive fallback, which should stay 0).  ``invalidate(i)`` poisons
+    *in-flight* reads as well as buffered copies: a read racing a
+    write-back of the same segment may return torn/stale bytes, so its
+    result is discarded on completion and the consumer falls back to a
+    fresh synchronous load.
+
+    Evicted window buffers come back through ``recycle`` and are reused
+    for later reads of geometry-identical segments (layer-aligned stores:
+    every block segment), so steady-state streaming stops allocating a
+    fresh segment-sized array per pull (``repro.offload.segments
+    .read_segment``'s ``out=`` path).
     """
 
     def __init__(self, store: SegmentStore, depth: int = 2,
@@ -36,33 +95,89 @@ class Prefetcher:
         self._store = store
         self._depth = max(1, depth)
         self._encoded = encoded
-        # window-form reads: leaves stay at their codec's resident
-        # representation (bf16 moments bf16, int8 QuantLeafs when encoded)
-        self._read = (
-            (lambda seg: store.read_segment(seg, copy=True, encoded=True))
-            if encoded else
-            (lambda seg: store.read_segment(seg, copy=True, window=True)))
         self._lock = threading.Condition()
         self._queue: list = []
         self._buffers: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()
         self._inflight: set = set()
+        self._stale: set = set()
+        # reuse pool: only when the jit boundary copies host buffers (else
+        # an overwritten recycled buffer could mutate a live device array)
+        self._pooling = not encoded and _host_to_device_copies()
+        self._pool: "OrderedDict[Tuple, list]" = OrderedDict()
+        self._pool_sets = 0      # total buffer sets across all signatures
         self._closed = False
         self.prefetch_hits = 0
         self.sync_loads = 0
+        self.forced_drops = 0
+        self.buffer_reuses = 0
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
+    # ------------------------------------------------------------------
+    def _read(self, seg: int) -> Dict[str, np.ndarray]:
+        """One segment in window form, reusing pooled buffers when a set
+        with this segment's geometry is free."""
+        bufs = None
+        if self._pooling:
+            sig = self._store.segment_signature(seg)
+            with self._lock:
+                free = self._pool.get(sig)
+                if free:
+                    bufs = free.pop()
+                    self._pool_sets -= 1
+        data = self._store.read_segment(
+            seg, copy=True, encoded=self._encoded,
+            window=not self._encoded, out=bufs)
+        if bufs is not None:
+            self.buffer_reuses += 1
+        return data
+
+    def recycle(self, seg: int, data: Optional[Dict[str, np.ndarray]]):
+        """Return a consumed window buffer set to the reuse pool.  Only
+        plain-array (non-encoded) sets are pooled; callers guarantee no
+        live reference remains (the window's acquire contract: consumers
+        copy at the jit boundary before the next acquire).  The pool is
+        bounded *globally* (not per signature), so a byte-balanced layout
+        whose segments all differ can never accumulate a whole model of
+        'free' buffers; pooled bytes are visible via ``buffer_bytes`` and
+        therefore count toward ``peak_resident_bytes``."""
+        if not self._pooling or not data:
+            return
+        arrs = list(data.values())
+        if not all(isinstance(a, np.ndarray) for a in arrs):
+            return
+        sig = self._store.segment_signature(seg)
+        with self._lock:
+            while self._pool_sets >= self._depth + 1:   # global bound
+                old_sig, free = next(iter(self._pool.items()))
+                free.pop()
+                self._pool_sets -= 1
+                if not free:
+                    del self._pool[old_sig]
+            self._pool.setdefault(sig, []).append(arrs)
+            self._pool.move_to_end(sig)
+            self._pool_sets += 1
+
+    # ------------------------------------------------------------------
     def _run(self):
         while True:
             with self._lock:
-                while not self._queue and not self._closed:
+                seg = None
+                while True:
+                    if self._closed:
+                        return
+                    # read only when a buffer slot is free: completing a
+                    # read must never force out a segment that was
+                    # scheduled and is about to be take()n
+                    if len(self._buffers) < self._depth:
+                        seg = next((s for s in self._queue
+                                    if s not in self._inflight
+                                    and s not in self._buffers), None)
+                        if seg is not None:
+                            self._queue.remove(seg)
+                            self._inflight.add(seg)
+                            break
                     self._lock.wait()
-                if self._closed:
-                    return
-                seg = self._queue.pop(0)
-                if seg in self._buffers or seg in self._inflight:
-                    continue
-                self._inflight.add(seg)
             try:
                 data = self._read(seg)
             except Exception:
@@ -71,40 +186,91 @@ class Prefetcher:
                 # real I/O error on the main thread
                 with self._lock:
                     self._inflight.discard(seg)
+                    self._stale.discard(seg)
                     self._lock.notify_all()
                 continue
             with self._lock:
                 self._inflight.discard(seg)
-                self._buffers[seg] = data
-                while len(self._buffers) > self._depth:
-                    self._buffers.popitem(last=False)  # drop oldest
+                if seg in self._stale:
+                    # invalidated mid-read (a write-back raced this read):
+                    # the bytes may be torn or stale — discard them; a
+                    # waiting take() falls back to a fresh sync load
+                    self._stale.discard(seg)
+                    self.recycle(seg, data)
+                else:
+                    self._buffers[seg] = data
+                    while len(self._buffers) > self._depth:  # defensive
+                        self.forced_drops += 1
+                        old, old_data = self._buffers.popitem(last=False)
+                        self.recycle(old, old_data)
                 self._lock.notify_all()
 
     def schedule(self, seg: int):
         if seg < 0 or seg >= self._store.num_segments:
             return
         with self._lock:
-            if (seg not in self._buffers and seg not in self._inflight
-                    and seg not in self._queue):
-                self._queue.append(seg)
-                self._lock.notify_all()
+            if seg in self._buffers or seg in self._queue:
+                return
+            if seg in self._inflight and seg not in self._stale:
+                return  # already being read (and the read is still good)
+            self._queue.append(seg)
+            self._lock.notify_all()
 
     def take(self, seg: int) -> Dict[str, np.ndarray]:
         with self._lock:
-            while seg in self._inflight or seg in self._queue:
-                self._lock.wait()
-            if seg in self._buffers:
-                self.prefetch_hits += 1
-                return self._buffers.pop(seg)
+            while not self._closed:
+                if seg in self._buffers:
+                    self.prefetch_hits += 1
+                    data = self._buffers.pop(seg)
+                    self._lock.notify_all()      # a buffer slot freed
+                    return data
+                if seg in self._inflight:
+                    self._lock.wait()
+                elif seg in self._queue:
+                    if len(self._buffers) >= self._depth:
+                        # every slot is full of segments nobody has taken
+                        # yet, and the consumer is here asking for a
+                        # *different* one: the oldest buffered entry is a
+                        # stranded prefetch — drop it so the reader can get
+                        # to the segment actually being waited on
+                        self.forced_drops += 1
+                        old, old_data = self._buffers.popitem(last=False)
+                        self.recycle(old, old_data)
+                        self._lock.notify_all()   # wake the reader: a slot
+                        #                           just freed
+                    self._lock.wait()
+                else:
+                    break
+            if seg in self._queue:
+                self._queue.remove(seg)   # closed mid-wait: load inline
         self.sync_loads += 1
         return self._read(seg)
 
     def invalidate(self, seg: int):
-        """Drop any buffered copy (stale after a write-back)."""
+        """Drop buffered/queued copies AND poison any in-flight read of
+        ``seg`` (stale after a write-back: a read racing the write may
+        return torn bytes — its result is discarded on completion)."""
+        dropped = None
         with self._lock:
-            self._buffers.pop(seg, None)
+            dropped = self._buffers.pop(seg, None)
             if seg in self._queue:
                 self._queue.remove(seg)
+            if seg in self._inflight:
+                self._stale.add(seg)
+            self._lock.notify_all()
+        if dropped is not None:
+            self.recycle(seg, dropped)
+
+    def buffer_bytes(self) -> int:
+        """Bytes held outside the window: completed prefetch buffers plus
+        the (globally bounded) reuse pool — both count toward the engine's
+        honest peak accounting."""
+        with self._lock:
+            bufs = list(self._buffers.values())
+            pooled = [a for free in self._pool.values()
+                      for arrs in free for a in arrs]
+        return int(sum(_data_nbytes(d) for d in bufs)
+                   + sum(a.nbytes for a in pooled))
 
     def close(self):
         with self._lock:
@@ -113,12 +279,147 @@ class Prefetcher:
         self._thread.join(timeout=5.0)
 
 
+class AsyncWriter:
+    """Bounded background dirty-segment writer — the write-back half of the
+    overlap pipeline.  Eviction ``submit``s (seg, data) instead of encoding
+    + msync-ing on the critical path; ``barrier()`` is the flush/snapshot
+    fence.  ``steal`` hands a still-queued segment straight back to the
+    window (a write hit): re-acquiring a just-evicted segment never round
+    trips through flash, and a queued steal returns *dirty* (its bytes
+    never landed).  Background I/O errors surface on the next
+    submit/steal/barrier rather than disappearing with the thread."""
+
+    def __init__(self, store: SegmentStore, max_pending: int = 2,
+                 recycle=None):
+        self._store = store
+        self._max = max(1, max_pending)
+        self._recycle = recycle
+        self._lock = threading.Condition()
+        self._pending: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()
+        self._writing: Optional[int] = None
+        self._writing_data: Optional[Dict[str, np.ndarray]] = None
+        self._stolen = False
+        self._closed = False
+        self._error: Optional[BaseException] = None
+        # background writes land in the page cache only (memcpy-cheap and
+        # immediately visible to reads); segments touched since the last
+        # barrier are fsynced there — durability exactly at the fence
+        self._unsynced: set = set()
+        self.writes = 0
+        self.busy_s = 0.0
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _raise_pending_error(self):   # call holding the lock
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async segment write-back failed") from err
+
+    def submit(self, seg: int, data: Dict[str, np.ndarray]):
+        """Queue one dirty segment (blocks while the bounded queue is
+        full — that wait is the engine's ``t_write_block_s``)."""
+        with self._lock:
+            self._raise_pending_error()
+            while len(self._pending) >= self._max and not self._closed:
+                self._lock.wait()
+            self._pending[seg] = data
+            self._pending.move_to_end(seg)
+            self._lock.notify_all()
+
+    def steal(self, seg: int):
+        """(data, dirty) if the writer still holds ``seg``, else None.  A
+        queued segment comes back dirty; one mid-write is waited out and
+        comes back clean (its bytes just landed)."""
+        with self._lock:
+            if seg in self._pending:
+                data = self._pending.pop(seg)
+                self._lock.notify_all()
+                return data, True
+            if self._writing == seg:
+                self._stolen = True       # the thread must not recycle it
+                data = self._writing_data
+                while self._writing == seg and self._error is None:
+                    self._lock.wait()
+                self._raise_pending_error()
+                return data, False
+        return None
+
+    def holds(self, seg: int) -> bool:
+        """True while ``seg`` is queued or being written — prefetching it
+        would race the write and read stale flash bytes."""
+        with self._lock:
+            return seg in self._pending or self._writing == seg
+
+    def pending_bytes(self) -> int:
+        with self._lock:
+            n = sum(_data_nbytes(d) for d in self._pending.values())
+            if self._writing_data is not None:
+                n += _data_nbytes(self._writing_data)
+        return int(n)
+
+    def barrier(self):
+        """Block until every submitted write has landed durably — the
+        fence ``flush()`` (and therefore every hardlink snapshot) runs
+        behind.  Background writes defer their msync, so the barrier
+        settles it: one fsync per segment file touched since the last
+        fence."""
+        with self._lock:
+            while ((self._pending or self._writing is not None)
+                   and self._error is None):
+                self._lock.wait()
+            self._raise_pending_error()
+            unsynced, self._unsynced = self._unsynced, set()
+        for seg in unsynced:
+            self._store.sync_segment(seg)
+
+    def close(self):
+        try:
+            self.barrier()
+        finally:
+            with self._lock:
+                self._closed = True
+                self._lock.notify_all()
+            self._thread.join(timeout=5.0)
+
+    def _run(self):
+        while True:
+            with self._lock:
+                while not self._pending and not self._closed:
+                    self._lock.wait()
+                if not self._pending:
+                    return                       # closed and drained
+                seg, data = self._pending.popitem(last=False)
+                self._writing, self._writing_data = seg, data
+                self._stolen = False
+                self._lock.notify_all()          # a queue slot freed
+            t0 = time.perf_counter()
+            err = None
+            try:
+                # pwrite path: the kernel copy runs GIL-released, so this
+                # thread's I/O genuinely overlaps main-thread dispatch
+                self._store.pwrite_segment(seg, data)
+            except BaseException as e:           # surfaced on next barrier
+                err = e
+            self.busy_s += time.perf_counter() - t0
+            with self._lock:
+                stolen = self._stolen
+                self._writing = self._writing_data = None
+                if err is not None:
+                    self._error = err
+                else:
+                    self.writes += 1
+                    self._unsynced.add(seg)
+                self._lock.notify_all()
+            if err is None and not stolen and self._recycle is not None:
+                self._recycle(seg, data)
+
+
 class OffloadEngine:
     """LRU-resident window + prefetch + dirty write-back over segments."""
 
     def __init__(self, store: SegmentStore, max_resident: int = 2,
                  prefetch: bool = True, read_only: bool = False,
-                 encoded: bool = False):
+                 encoded: bool = False, async_writeback: bool = False):
         assert max_resident >= 1
         self.store = store
         self.max_resident = max_resident
@@ -140,59 +441,84 @@ class OffloadEngine:
             Prefetcher(store, depth=max(1, max_resident - 1),
                        encoded=encoded)
             if prefetch else None)
+        # a read-only window has nothing to write back — no writer thread
+        self._writer: Optional[AsyncWriter] = (
+            AsyncWriter(store, max_pending=max(1, max_resident - 1),
+                        recycle=(self._prefetcher.recycle
+                                 if self._prefetcher else None))
+            if (async_writeback and not read_only) else None)
         # --- statistics ---
         self.hits = 0
         self.misses = 0
+        self.write_hits = 0
         self.bytes_read = 0
         self.bytes_written = 0
         self.peak_resident_bytes = 0
+        self.t_read_block_s = 0.0     # acquire blocked waiting for bytes
+        self.t_write_block_s = 0.0    # blocked on write-back (queue full /
+        #                               inline write / barrier)
 
     # ------------------------------------------------------------------
-    @staticmethod
-    def _data_bytes(data: Dict[str, np.ndarray]) -> int:
-        # actual bytes held, not storage bytes: a decoded bf16 leaf sits in
-        # the window as fp32, an encoded int8 leaf as its codes + scales
-        return int(sum(v.nbytes for v in data.values()))
-
     def _resident_bytes(self) -> int:
-        return int(sum(self._data_bytes(d) for d in self._resident.values()))
+        return int(sum(_data_nbytes(d) for d in self._resident.values()))
 
     def prefetch(self, seg: int):
-        if self._prefetcher is not None and seg not in self._resident:
-            self._prefetcher.schedule(seg)
+        if self._prefetcher is None or seg in self._resident:
+            return
+        if self._writer is not None and self._writer.holds(seg):
+            return   # acquire will steal it back; a read now races the write
+        self._prefetcher.schedule(seg)
 
     def acquire(self, seg: int) -> Dict[str, np.ndarray]:
         """Make segment ``seg`` resident (evicting + writing back LRU
         segments as needed) and return its leaf dict.  The dict is owned by
-        the window: mutate in place and ``mark_dirty`` to persist."""
+        the window: mutate in place and ``mark_dirty`` to persist; hold the
+        reference only until the next ``acquire`` (evicted buffers are
+        recycled for later reads)."""
         if seg in self._resident:
             self.hits += 1
             self._resident.move_to_end(seg)
             return self._resident[seg]
         self.misses += 1
-        if self._prefetcher is not None:
-            data = self._prefetcher.take(seg)
-        else:
-            data = self.store.read_segment(
-                seg, copy=True, encoded=self.encoded,
-                window=not self.encoded)
-        self.bytes_read += self.store.seg_nbytes[seg]
+        data = dirty = None
+        if self._writer is not None:
+            t0 = time.perf_counter()
+            hit = self._writer.steal(seg)
+            if hit is not None:
+                self.t_write_block_s += time.perf_counter() - t0
+                data, dirty = hit
+                self.write_hits += 1
+                if self._prefetcher is not None:
+                    # a prefetch issued before the eviction could still be
+                    # racing the (now resolved) write — poison it
+                    self._prefetcher.invalidate(seg)
+        if data is None:
+            t0 = time.perf_counter()
+            if self._prefetcher is not None:
+                data = self._prefetcher.take(seg)
+            else:
+                data = self.store.read_segment(
+                    seg, copy=True, encoded=self.encoded,
+                    window=not self.encoded)
+            self.t_read_block_s += time.perf_counter() - t0
+            self.bytes_read += self.store.seg_nbytes[seg]
+            dirty = False
         self._resident[seg] = data
         self._resident.move_to_end(seg)
+        if dirty:
+            self._dirty.add(seg)   # stolen bytes never reached flash
         while len(self._resident) > self.max_resident:
             old, old_data = self._resident.popitem(last=False)
             self._writeback(old, old_data)
-        self.peak_resident_bytes = max(self.peak_resident_bytes,
-                                       self._resident_bytes()
-                                       + self._prefetch_buffer_bytes())
+        self.peak_resident_bytes = max(
+            self.peak_resident_bytes,
+            self._resident_bytes() + self._prefetch_buffer_bytes()
+            + (self._writer.pending_bytes() if self._writer else 0))
         return data
 
     def _prefetch_buffer_bytes(self) -> int:
-        if self._prefetcher is None:
-            return 0
-        with self._prefetcher._lock:
-            bufs = list(self._prefetcher._buffers.values())
-        return int(sum(self._data_bytes(d) for d in bufs))
+        return (self._prefetcher.buffer_bytes()
+                if self._prefetcher is not None else 0)
 
     def mark_dirty(self, seg: int):
         if self.read_only:
@@ -203,12 +529,24 @@ class OffloadEngine:
         self._dirty.add(seg)
 
     def _writeback(self, seg: int, data: Dict[str, np.ndarray]):
-        if seg in self._dirty:
-            self.store.write_segment(seg, data)
-            self.bytes_written += self.store.seg_nbytes[seg]
-            self._dirty.discard(seg)
+        """Persist one evicted segment (async when a writer is attached;
+        clean evictions just recycle their buffers)."""
+        if seg not in self._dirty:
             if self._prefetcher is not None:
-                self._prefetcher.invalidate(seg)
+                self._prefetcher.recycle(seg, data)
+            return
+        self._dirty.discard(seg)
+        if self._prefetcher is not None:
+            # before the bytes change: in-flight reads of this segment
+            # must not land stale data in the buffer
+            self._prefetcher.invalidate(seg)
+        t0 = time.perf_counter()
+        if self._writer is not None:
+            self._writer.submit(seg, data)
+        else:
+            self.store.write_segment(seg, data)
+        self.t_write_block_s += time.perf_counter() - t0
+        self.bytes_written += self.store.seg_nbytes[seg]
 
     def release(self, seg: int):
         """Drop a segment from the window (writing back if dirty)."""
@@ -217,9 +555,27 @@ class OffloadEngine:
             self._writeback(seg, data)
 
     def flush(self):
-        """Write back every dirty resident segment (window stays resident)."""
+        """Write back every dirty resident segment and fence the background
+        write queue (the window stays resident).  This is the barrier every
+        hardlink snapshot runs behind — after ``flush`` returns, the
+        segment files hold the current state."""
         for seg in list(self._resident):
-            self._writeback(seg, self._resident[seg])
+            if seg not in self._dirty:
+                continue
+            self._dirty.discard(seg)
+            if self._prefetcher is not None:
+                self._prefetcher.invalidate(seg)
+            t0 = time.perf_counter()
+            # resident segments write inline even in async mode: the window
+            # still owns (and may mutate) these arrays, so they must not
+            # enter the writer's recycle path
+            self.store.write_segment(seg, self._resident[seg])
+            self.t_write_block_s += time.perf_counter() - t0
+            self.bytes_written += self.store.seg_nbytes[seg]
+        if self._writer is not None:
+            t0 = time.perf_counter()
+            self._writer.barrier()
+            self.t_write_block_s += time.perf_counter() - t0
 
     def drop_all(self):
         for seg in list(self._resident):
@@ -227,6 +583,8 @@ class OffloadEngine:
 
     def close(self):
         self.flush()
+        if self._writer is not None:
+            self._writer.close()
         if self._prefetcher is not None:
             self._prefetcher.close()
 
@@ -234,10 +592,17 @@ class OffloadEngine:
         pf = self._prefetcher
         return {
             "hits": self.hits, "misses": self.misses,
+            "write_hits": self.write_hits,
             "prefetch_hits": pf.prefetch_hits if pf else 0,
             "sync_loads": pf.sync_loads if pf else self.misses,
+            "forced_drops": pf.forced_drops if pf else 0,
+            "buffer_reuses": pf.buffer_reuses if pf else 0,
             "bytes_read": self.bytes_read,
             "bytes_written": self.bytes_written,
             "peak_resident_bytes": self.peak_resident_bytes,
             "store_bytes": self.store.total_bytes,
+            "t_read_block_s": self.t_read_block_s,
+            "t_write_block_s": self.t_write_block_s,
+            "writeback_busy_s": self._writer.busy_s if self._writer else 0.0,
+            "async_writeback": 1 if self._writer is not None else 0,
         }

@@ -33,7 +33,7 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.offload.codecs import get_codec
+from repro.offload.codecs import get_codec, np_dtype
 
 TABLE_VERSION = 2
 
@@ -258,12 +258,22 @@ class SegmentStore:
     def segment_names(self, seg: int) -> List[str]:
         return [r.name for r in self._seg_leaves[seg]]
 
+    def segment_signature(self, seg: int) -> Tuple:
+        """Geometry signature of one segment: the (shape, dtype, codec)
+        tuple of every leaf, in order.  Two segments with equal signatures
+        hold interchangeable buffer sets (layer-aligned stores: every block
+        segment) — the prefetcher keys its reusable-buffer pool on this."""
+        return tuple((r.shape, r.dtype, r.codec)
+                     for r in self._seg_leaves[seg])
+
     # ------------------------------------------------------------------
     # I/O
     # ------------------------------------------------------------------
     def read_segment(self, seg: int, copy: bool = True,
                      encoded: bool = False,
-                     window: bool = False) -> Dict[str, np.ndarray]:
+                     window: bool = False,
+                     out: Optional[List[np.ndarray]] = None
+                     ) -> Dict[str, np.ndarray]:
         """All leaves of one segment, decoded through each leaf's codec.
 
         ``copy=True`` returns private arrays safe to mutate; the memory map
@@ -287,41 +297,114 @@ class SegmentStore:
         a ``QuantLeaf`` (codes in the logical shape + per-channel scales;
         empty scales for passthrough codecs) — the quantized-frozen-base
         window keeps segments int8-resident and defers dequantization to
-        the jitted per-block program."""
+        the jitted per-block program.
+
+        ``out`` (readinto-style, allocation-free reads) is an optional list
+        of reusable destination arrays, positionally aligned with this
+        segment's leaves: a leaf whose entry matches its decoded/window
+        representation (shape + dtype) is copied *into* that array instead
+        of allocating a fresh one — the prefetcher recycles evicted window
+        buffers through this path so steady-state streaming stops paying a
+        segment-sized allocation per pull.  Mismatched (or None) entries
+        fall back to allocation; incompatible with ``copy=False``."""
+        leaves = self._seg_leaves[seg]
+        if out is not None and (not copy or encoded
+                                or len(out) != len(leaves)):
+            out = None
         mm = np.memmap(self.segment_path(seg), dtype=np.uint8, mode="r")
         try:
-            out = {}
-            for r in self._seg_leaves[seg]:
+            named = {}
+            for i, r in enumerate(leaves):
                 buf = mm[r.offset:r.offset + r.nbytes]
                 codec = get_codec(r.codec)
                 if encoded:
-                    out[r.name] = codec.decode_encoded(buf, r.shape, r.dtype)
-                elif window:
-                    out[r.name] = codec.window(buf, r.shape, r.dtype)
+                    named[r.name] = codec.decode_encoded(buf, r.shape,
+                                                         r.dtype)
+                    continue
+                dst = out[i] if out is not None else None
+                if dst is not None:
+                    want = (codec.window_np_dtype(r.dtype) if window
+                            else np_dtype(r.dtype))
+                    view = (codec.storage_view(buf, r.shape, r.dtype)
+                            if (isinstance(dst, np.ndarray)
+                                and dst.shape == tuple(r.shape)
+                                and dst.dtype == want) else None)
+                    if view is not None:
+                        np.copyto(dst, view)   # in-place; casts bf16->fp32
+                        named[r.name] = dst
+                        continue
+                if window:
+                    named[r.name] = codec.window(buf, r.shape, r.dtype)
                 else:
-                    out[r.name] = codec.decode(buf, r.shape, r.dtype,
-                                               copy=copy)
-            return out
+                    named[r.name] = codec.decode(buf, r.shape, r.dtype,
+                                                 copy=copy)
+            return named
         finally:
             if copy or encoded or window:
                 mm._mmap.close()   # release the fd now, not at GC time
 
-    def write_segment(self, seg: int, named: Dict[str, np.ndarray]):
+    def write_segment(self, seg: int, named: Dict[str, np.ndarray],
+                      sync: bool = True):
         """Encode (a subset of) one segment's leaves back through their
         codecs and flush.  Breaks any snapshot hardlink first
-        (copy-on-write)."""
+        (copy-on-write).
+
+        ``sync=False`` skips the msync: bytes land in the page cache (fully
+        visible to every later read) but durability is deferred — the async
+        write-back path uses this so background writes are memcpy-cheap,
+        then settles durability with one ``sync_segment`` per touched file
+        at the flush/snapshot barrier."""
         self._break_cow(seg)
         mm = np.memmap(self.segment_path(seg), dtype=np.uint8, mode="r+")
         try:
-            for name, value in named.items():
-                r = self._by_name[name]
-                assert r.segment == seg, (name, r.segment, seg)
-                enc = get_codec(r.codec).encode(np.asarray(value), r.dtype)
-                assert enc.nbytes == r.nbytes, (name, enc.nbytes, r.nbytes)
+            for r, enc in self._encoded_leaves(seg, named):
                 mm[r.offset:r.offset + r.nbytes] = enc
-            mm.flush()
+            if sync:
+                mm.flush()
         finally:
             mm._mmap.close()       # no views escape this scope
+
+    def _encoded_leaves(self, seg: int, named: Dict[str, np.ndarray]):
+        """(record, encoded uint8 bytes) per leaf — the one encode loop
+        both write paths share, so the sync (memmap) and async (pwrite)
+        writers can never drift in what bytes they persist."""
+        for name, value in named.items():
+            r = self._by_name[name]
+            assert r.segment == seg, (name, r.segment, seg)
+            enc = get_codec(r.codec).encode(np.asarray(value), r.dtype)
+            assert enc.nbytes == r.nbytes, (name, enc.nbytes, r.nbytes)
+            yield r, enc
+
+    def pwrite_segment(self, seg: int, named: Dict[str, np.ndarray],
+                       sync: bool = False):
+        """``write_segment`` via positional ``pwrite(2)`` on a plain fd —
+        no memory map, and the kernel's copy into the page cache runs with
+        the GIL *released*, so the async writer's background writes truly
+        overlap main-thread work (a memmap slice-assign holds the GIL for
+        the whole copy).  Identity-codec leaves encode as zero-copy views,
+        making the background write almost pure syscall time.  Reads via
+        mmap see these bytes immediately (one unified page cache)."""
+        self._break_cow(seg)
+        fd = os.open(self.segment_path(seg), os.O_WRONLY)
+        try:
+            for r, enc in self._encoded_leaves(seg, named):
+                mv, off = memoryview(enc), r.offset
+                while len(mv):                 # pwrite may write short
+                    n = os.pwrite(fd, mv, off)
+                    mv, off = mv[n:], off + n
+            if sync:
+                os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    def sync_segment(self, seg: int):
+        """fsync one segment file — settles the durability a
+        ``write_segment(..., sync=False)``/``pwrite_segment`` deferred."""
+        fd = os.open(self.segment_path(seg), os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
 
     def _break_cow(self, seg: int):
         if not self._cow[seg]:

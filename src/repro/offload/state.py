@@ -74,7 +74,8 @@ class OffloadedTrainState:
     """Full-FT state {params, opt, step} paged to segment files."""
 
     def __init__(self, store: SegmentStore, *, treedef, names: List[str],
-                 max_resident: int = 2, prefetch: bool = True):
+                 max_resident: int = 2, prefetch: bool = True,
+                 async_writeback: bool = True):
         self.store = store
         # frozen layout (PEFT base): p-segments only, no m/v, and the window
         # is read-only — the base is never updated, so nothing is ever
@@ -88,7 +89,8 @@ class OffloadedTrainState:
         self.engine = OffloadEngine(store, max_resident=max(1, max_resident),
                                     prefetch=prefetch,
                                     read_only=self.frozen,
-                                    encoded=bool(self.base_quant))
+                                    encoded=bool(self.base_quant),
+                                    async_writeback=async_writeback)
         self.treedef = treedef
         self.names = names
         self.count = int(store.meta.get("count", 0))
@@ -105,7 +107,8 @@ class OffloadedTrainState:
     @classmethod
     def create(cls, state: Dict[str, Any], directory: str, num_segments: int,
                *, max_resident: int = 2, prefetch: bool = True,
-               moment_dtype: str = "float32") -> "OffloadedTrainState":
+               moment_dtype: str = "float32",
+               async_writeback: bool = True) -> "OffloadedTrainState":
         """Page an in-memory ``init_state`` tree {params, opt, step} out to
         ``directory``.  Each group is one tensor's (p, m, v) triple so the
         planner never splits a triple across segments."""
@@ -126,28 +129,33 @@ class OffloadedTrainState:
                                     meta=meta)
         return cls(store, treedef=jax.tree.structure(params),
                    names=[n for n, _ in named_p],
-                   max_resident=max_resident, prefetch=prefetch)
+                   max_resident=max_resident, prefetch=prefetch,
+                   async_writeback=async_writeback)
 
     @classmethod
     def open(cls, directory: str, like_params, *, max_resident: int = 2,
-             prefetch: bool = True) -> "OffloadedTrainState":
+             prefetch: bool = True,
+             async_writeback: bool = True) -> "OffloadedTrainState":
         """Reattach to existing segment files; ``like_params`` supplies the
         pytree structure (values ignored)."""
         store = SegmentStore.open(directory)
         return cls(store, treedef=jax.tree.structure(like_params),
                    names=[n for n, _ in flatten_names(like_params)],
-                   max_resident=max_resident, prefetch=prefetch)
+                   max_resident=max_resident, prefetch=prefetch,
+                   async_writeback=async_writeback)
 
     @classmethod
     def from_checkpoint(cls, ckpt_dir: str, work_dir: str, like_params, *,
-                        max_resident: int = 2, prefetch: bool = True
+                        max_resident: int = 2, prefetch: bool = True,
+                        async_writeback: bool = True
                         ) -> "OffloadedTrainState":
         """Zero-copy restore: hardlink the checkpoint's segment files into
         ``work_dir`` (copy-on-write), no byte of state staged through RAM."""
         store = SegmentStore.link_clone(ckpt_dir, work_dir)
         return cls(store, treedef=jax.tree.structure(like_params),
                    names=[n for n, _ in flatten_names(like_params)],
-                   max_resident=max_resident, prefetch=prefetch)
+                   max_resident=max_resident, prefetch=prefetch,
+                   async_writeback=async_writeback)
 
     # ------------------------------------------------------------------
     # use
@@ -169,15 +177,18 @@ class OffloadedTrainState:
         return jax.tree.unflatten(self.treedef,
                                   [named[n] for n in self.names])
 
-    def _update_segment(self, seg: int, gnamed: Dict[str, Any], count,
-                        *, lr, beta1, beta2, eps, weight_decay):
-        """AdamW one segment in place (window owns the arrays; marked dirty).
-        ``gnamed`` maps this segment's plain param names to gradients.  The
-        window holds each leaf's codec *window* form — storage precision,
-        so bf16 moments stay half-sized while resident; the fp32 math
-        round-trips here (cast on load, cast back on the in-place store),
-        which also keeps in-window precision equal to on-flash precision.
-        Returns the new param arrays (name -> jnp)."""
+    def _update_segment_dispatch(self, seg: int, gnamed: Dict[str, Any],
+                                 count, *, lr, beta1, beta2, eps,
+                                 weight_decay):
+        """First half of a (possibly pipelined) segment update: pull the
+        segment and *dispatch* the jitted AdamW — JAX dispatch is
+        asynchronous, so the caller can overlap the next segment's pull
+        with this one's compute before forcing the store.  Returns the
+        pending tuple ``_update_segment_store`` consumes.
+
+        Pipelined callers must keep the store within one later acquire
+        (window >= 2): the pending segment has to still be resident when
+        its results land (``repro.core.stream._update_sweep``)."""
         if self.frozen:
             raise RuntimeError(
                 "frozen (param-only) layout holds no optimizer state — the "
@@ -192,6 +203,13 @@ class OffloadedTrainState:
         new_p, new_opt = self._upd(sub_g, opt, sub_p, lr=lr, beta1=beta1,
                                    beta2=beta2, eps=eps,
                                    weight_decay=weight_decay)
+        return seg, data, pnames, new_p, new_opt
+
+    def _update_segment_store(self, pending):
+        """Second half: force the dispatched results and store them into
+        the (still resident) window arrays, marking the segment dirty.
+        Returns the new param arrays (name -> jnp)."""
+        seg, data, pnames, new_p, new_opt = pending
         out = {}
         for n in pnames:               # in-place: window owns the arrays
             data[P + n][...] = np.asarray(new_p[n])
@@ -202,6 +220,19 @@ class OffloadedTrainState:
             out[n] = new_p[n]
         self.engine.mark_dirty(seg)
         return out
+
+    def _update_segment(self, seg: int, gnamed: Dict[str, Any], count,
+                        *, lr, beta1, beta2, eps, weight_decay):
+        """AdamW one segment in place (window owns the arrays; marked dirty).
+        ``gnamed`` maps this segment's plain param names to gradients.  The
+        window holds each leaf's codec *window* form — storage precision,
+        so bf16 moments stay half-sized while resident; the fp32 math
+        round-trips here (cast on load, cast back on the in-place store),
+        which also keeps in-window precision equal to on-flash precision.
+        Returns the new param arrays (name -> jnp)."""
+        return self._update_segment_store(self._update_segment_dispatch(
+            seg, gnamed, count, lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+            weight_decay=weight_decay))
 
     def apply_update(self, grads, *, lr, beta1=0.9, beta2=0.999, eps=1e-8,
                      weight_decay=0.01):
@@ -271,11 +302,13 @@ class LayerStreamedState(OffloadedTrainState):
     """
 
     def __init__(self, store: SegmentStore, *, like_params,
-                 max_resident: int = 2, prefetch: bool = True):
+                 max_resident: int = 2, prefetch: bool = True,
+                 async_writeback: bool = True):
         super().__init__(
             store, treedef=jax.tree.structure(like_params),
             names=[n for n, _ in flatten_names(like_params)],
-            max_resident=max_resident, prefetch=prefetch)
+            max_resident=max_resident, prefetch=prefetch,
+            async_writeback=async_writeback)
         assert store.meta.get("layout") == LAYER_LAYOUT, store.meta
         self.n_layers = int(store.meta["n_layers"])
         blocks = like_params["blocks"]
@@ -318,7 +351,8 @@ class LayerStreamedState(OffloadedTrainState):
     @classmethod
     def create(cls, state: Dict[str, Any], directory: str, *,
                max_resident: int = 2, prefetch: bool = True,
-               moment_dtype: str = "float32") -> "LayerStreamedState":
+               moment_dtype: str = "float32",
+               async_writeback: bool = True) -> "LayerStreamedState":
         """Page a stacked ``init_state`` tree out layer-aligned: the stacked
         block leaves are split on their leading ``layers`` dim into one group
         per block, plus a trailing head group."""
@@ -348,7 +382,7 @@ class LayerStreamedState(OffloadedTrainState):
         store = SegmentStore.create(directory, groups, len(groups),
                                     meta=meta, group_labels=labels)
         return cls(store, like_params=params, max_resident=max_resident,
-                   prefetch=prefetch)
+                   prefetch=prefetch, async_writeback=async_writeback)
 
     @classmethod
     def create_frozen(cls, params, directory: str, *, max_resident: int = 2,
@@ -413,17 +447,21 @@ class LayerStreamedState(OffloadedTrainState):
 
     @classmethod
     def open(cls, directory: str, like_params, *, max_resident: int = 2,
-             prefetch: bool = True) -> "LayerStreamedState":
+             prefetch: bool = True,
+             async_writeback: bool = True) -> "LayerStreamedState":
         return cls(SegmentStore.open(directory), like_params=like_params,
-                   max_resident=max_resident, prefetch=prefetch)
+                   max_resident=max_resident, prefetch=prefetch,
+                   async_writeback=async_writeback)
 
     @classmethod
     def from_checkpoint(cls, ckpt_dir: str, work_dir: str, like_params, *,
-                        max_resident: int = 2, prefetch: bool = True
+                        max_resident: int = 2, prefetch: bool = True,
+                        async_writeback: bool = True
                         ) -> "LayerStreamedState":
         store = SegmentStore.link_clone(ckpt_dir, work_dir)
         return cls(store, like_params=like_params,
-                   max_resident=max_resident, prefetch=prefetch)
+                   max_resident=max_resident, prefetch=prefetch,
+                   async_writeback=async_writeback)
 
     # ------------------------------------------------------------------
     # layer access (the streamed driver's working set)

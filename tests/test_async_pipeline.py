@@ -1,0 +1,341 @@
+"""Async overlap pipeline for the streamed trainer (PR 5).
+
+Covers: the Prefetcher stale-read race (an in-flight read racing a
+write-back must be discarded, not buffered), no-silent-drop of scheduled
+prefetches (bounded reader + forced_drops accounting), the allocation-free
+reusable-buffer read path, async write-back value transparency (write hits
+via steal, flush-barrier-before-hardlink-snapshot), bit-determinism of
+async vs synchronous write-back (dense + ssm) including checkpoint resume,
+and staging-mode loss equivalence against the pre-pipeline streamed path.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.config import TrainConfig
+from repro.launch.train import train_loop
+from repro.offload.engine import OffloadEngine, Prefetcher
+from repro.offload.segments import SegmentStore
+from repro.offload.state import OffloadedTrainState
+from repro.optim.adamw import adamw_init
+
+
+def _groups(seed=0, n=5, shape=(7, 3)):
+    rng = np.random.RandomState(seed)
+    return [[(f"p.l{i}", rng.randn(*shape).astype(np.float32)),
+             (f"m.l{i}", rng.randn(*shape).astype(np.float32)),
+             (f"v.l{i}", np.abs(rng.randn(*shape)).astype(np.float32))]
+            for i in range(n)]
+
+
+class _GatedReads:
+    """SegmentStore proxy whose reads of ``gate_seg`` capture their bytes,
+    then park until released — a deterministic handle on the in-flight
+    window where the stale-read race lives."""
+
+    def __init__(self, store, gate_seg):
+        self._store = store
+        self._gate_seg = gate_seg
+        self.read_started = threading.Event()
+        self.release = threading.Event()
+        self._armed = True
+
+    def __getattr__(self, name):
+        return getattr(self._store, name)
+
+    def read_segment(self, seg, **kw):
+        data = self._store.read_segment(seg, **kw)   # bytes from *before*
+        if seg == self._gate_seg and self._armed:
+            self._armed = False
+            self.read_started.set()
+            assert self.release.wait(timeout=10.0)
+        return data
+
+
+# ---------------------------------------------------------------------------
+# satellite: stale-read race — invalidate() must poison in-flight reads
+# ---------------------------------------------------------------------------
+def test_inflight_read_discarded_after_invalidate(tmp_path):
+    store = SegmentStore.create(str(tmp_path / "s"), _groups(), 3)
+    gated = _GatedReads(store, gate_seg=0)
+    pf = Prefetcher(gated, depth=2)
+    try:
+        pf.schedule(0)
+        assert gated.read_started.wait(timeout=10.0)  # read is in flight
+        # a write-back lands new bytes while the read is parked mid-flight
+        name = store.segment_names(0)[0]
+        new = np.full(store.record(name).shape, 42.0, np.float32)
+        pf.invalidate(0)                   # what the engine does on write
+        store.write_segment(0, {name: new})
+        gated.release.set()                # stale read completes now
+        data = pf.take(0)                  # must NOT see the stale copy
+        np.testing.assert_array_equal(data[name], new)
+        assert pf.prefetch_hits == 0       # stale buffer was discarded...
+        assert pf.sync_loads == 1          # ...and a fresh load served it
+    finally:
+        gated.release.set()
+        pf.close()
+
+
+def test_invalidated_then_rescheduled_read_is_fresh(tmp_path):
+    """A segment re-scheduled while its poisoned read is still in flight
+    must come back with the post-write bytes."""
+    store = SegmentStore.create(str(tmp_path / "s"), _groups(), 3)
+    gated = _GatedReads(store, gate_seg=1)
+    pf = Prefetcher(gated, depth=2)
+    try:
+        pf.schedule(1)
+        assert gated.read_started.wait(timeout=10.0)
+        name = store.segment_names(1)[0]
+        new = np.full(store.record(name).shape, -7.0, np.float32)
+        pf.invalidate(1)
+        store.write_segment(1, {name: new})
+        pf.schedule(1)                     # re-request while still in flight
+        gated.release.set()
+        np.testing.assert_array_equal(pf.take(1)[name], new)
+    finally:
+        gated.release.set()
+        pf.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: no silent drop of scheduled-not-yet-taken prefetches
+# ---------------------------------------------------------------------------
+def test_overscheduled_prefetches_all_survive(tmp_path):
+    """Scheduling more segments than the buffer holds must not lose any:
+    the reader waits for slots instead of dropping completed reads."""
+    store = SegmentStore.create(str(tmp_path / "s"), _groups(n=6), 6)
+    pf = Prefetcher(store, depth=1)
+    try:
+        for seg in range(6):
+            pf.schedule(seg)
+        for seg in range(6):               # in-order consumption: no drops
+            data = pf.take(seg)
+            for name, arr in data.items():
+                np.testing.assert_array_equal(arr, store.read_segment(
+                    seg, window=True)[name])
+        assert pf.forced_drops == 0
+        assert pf.prefetch_hits + pf.sync_loads == 6
+    finally:
+        pf.close()
+
+
+def test_stranded_buffer_recovers_via_forced_drop(tmp_path):
+    store = SegmentStore.create(str(tmp_path / "s"), _groups(n=4), 4)
+    pf = Prefetcher(store, depth=1)
+    try:
+        pf.schedule(0)                     # buffered, never taken (stranded)
+        deadline = time.time() + 10.0
+        with pf._lock:
+            while 0 not in pf._buffers and time.time() < deadline:
+                pf._lock.wait(timeout=0.1)
+        pf.schedule(1)
+        data = pf.take(1)                  # must not hang behind seg 0
+        np.testing.assert_array_equal(
+            data[store.segment_names(1)[0]],
+            store.read_segment(1)[store.segment_names(1)[0]])
+        assert pf.forced_drops >= 1        # the stranded copy was evicted
+    finally:
+        pf.close()
+
+
+# ---------------------------------------------------------------------------
+# allocation-free reads: reusable-buffer path + engine recycling
+# ---------------------------------------------------------------------------
+def test_read_segment_into_reused_buffers(tmp_path):
+    store = SegmentStore.create(str(tmp_path / "s"), _groups(n=4), 2)
+    first = store.read_segment(0, window=True)
+    bufs = list(first.values())
+    again = store.read_segment(1, window=True, out=bufs)
+    for name, arr in again.items():
+        assert any(arr is b for b in bufs)     # filled in place, not fresh
+        np.testing.assert_array_equal(arr, store.read_segment(1)[name])
+    # mismatched buffers fall back to allocation, never corrupt
+    bad = [np.zeros((1,), np.float32)] * len(bufs)
+    ok = store.read_segment(0, window=True, out=bad)
+    for name, arr in ok.items():
+        np.testing.assert_array_equal(arr, store.read_segment(0)[name])
+
+
+def test_engine_recycles_evicted_buffers(tmp_path):
+    from repro.offload.engine import _host_to_device_copies
+    if not _host_to_device_copies():
+        pytest.skip("backend zero-copies host buffers; pool disables itself")
+    store = SegmentStore.create(str(tmp_path / "s"), _groups(n=8), 8)
+    eng = OffloadEngine(store, max_resident=2, prefetch=True)
+    eng.prefetch(0)
+    for seg in range(8):
+        eng.prefetch(seg + 1)
+        data = eng.acquire(seg)
+        for name, arr in data.items():
+            np.testing.assert_array_equal(arr, store.read_segment(
+                seg, window=True)[name])
+    s = eng.stats()
+    eng.close()
+    assert s["buffer_reuses"] > 0          # steady state stopped allocating
+    assert s["forced_drops"] == 0
+
+
+# ---------------------------------------------------------------------------
+# tentpole: async write-back value transparency
+# ---------------------------------------------------------------------------
+def test_async_writeback_eviction_and_steal(tmp_path):
+    store = SegmentStore.create(str(tmp_path / "s"), _groups(), 3)
+    eng = OffloadEngine(store, max_resident=1, prefetch=False,
+                        async_writeback=True)
+    d0 = eng.acquire(0)
+    name = next(iter(d0))
+    d0[name][...] = 7.5
+    eng.mark_dirty(0)
+    eng.acquire(1)                 # evicts 0 into the background writer
+    # re-acquiring immediately must hand the bytes back (write hit), never
+    # a stale flash read
+    d0b = eng.acquire(0)
+    np.testing.assert_array_equal(
+        d0b[name], np.full(d0b[name].shape, 7.5, np.float32))
+    eng.acquire(2)                 # evict again; let it land via close()
+    eng.close()
+    assert eng.stats()["write_hits"] >= 1
+    fresh = SegmentStore.open(store.directory).read_segment(0)
+    np.testing.assert_array_equal(
+        fresh[name], np.full(fresh[name].shape, 7.5, np.float32))
+
+
+class _SlowWrites:
+    """SegmentStore proxy that delays background writes — widens the race
+    a missing flush barrier would lose."""
+
+    def __init__(self, store, delay=0.2):
+        self._store = store
+        self._delay = delay
+
+    def __getattr__(self, name):
+        return getattr(self._store, name)
+
+    def pwrite_segment(self, seg, named, sync=False):
+        time.sleep(self._delay)
+        return self._store.pwrite_segment(seg, named, sync=sync)
+
+
+def test_flush_barrier_fences_writes_before_snapshot(tmp_path):
+    store = SegmentStore.create(str(tmp_path / "s"), _groups(), 3)
+    slow = _SlowWrites(store)
+    eng = OffloadEngine(slow, max_resident=1, prefetch=False,
+                        async_writeback=True)
+    name0 = store.segment_names(0)[0]
+    d0 = eng.acquire(0)
+    d0[name0][...] = 3.25
+    eng.mark_dirty(0)
+    eng.acquire(1)                 # eviction queues a *slow* background write
+    eng.flush()                    # barrier: must wait for it to land
+    snap = store.snapshot(str(tmp_path / "snap"))
+    got = SegmentStore.open(snap).read_segment(0)[name0]
+    np.testing.assert_array_equal(got, np.full(got.shape, 3.25, np.float32))
+    eng.close()
+
+
+def test_offload_state_snapshot_with_async_writer(tmp_path):
+    params = {"w1": jax.random.normal(jax.random.PRNGKey(0), (16, 8)),
+              "b": jnp.zeros((8,))}
+    state = {"params": params, "opt": adamw_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    ost = OffloadedTrainState.create(state, str(tmp_path / "o"), 3,
+                                     max_resident=1, async_writeback=True)
+    grads = jax.tree.map(jnp.ones_like, params)
+    p1 = ost.apply_update(grads, lr=1e-2)
+    snap = ost.snapshot(str(tmp_path / "snap"))      # flush barrier inside
+    re = OffloadedTrainState.open(snap, params)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 jax.device_get(p1), jax.device_get(re.materialize_params()))
+    re.close()
+    ost.close()
+
+
+# ---------------------------------------------------------------------------
+# tentpole: async pipeline bit-determinism + equivalence (dense + ssm)
+# ---------------------------------------------------------------------------
+def _base(steps):
+    return dict(global_batch=2, seq_len=16, learning_rate=1e-4,
+                schedule="constant", warmup_steps=1,
+                compute_dtype="float32", total_steps=steps)
+
+
+@pytest.mark.parametrize("arch", ["gpt2_124m", "mamba2_130m"])
+def test_async_writeback_bit_matches_sync(arch, tmp_path):
+    """Deferring writes must not change a single bit of the training
+    trajectory: the window stays authoritative and steals hand queued
+    bytes straight back."""
+    cfg = configs.get_smoke(arch)
+    losses = {}
+    for mode, async_wb in (("sync", False), ("async", True)):
+        t = TrainConfig(**_base(6), offload_stream_params=True,
+                        offload_async_writeback=async_wb,
+                        offload_dir=str(tmp_path / mode))
+        _, obs = train_loop(cfg, t, out_dir=None, print_fn=None)
+        losses[mode] = [r["loss"] for r in obs.rows]
+    np.testing.assert_array_equal(losses["sync"], losses["async"])
+
+
+@pytest.mark.parametrize("arch", ["gpt2_124m", "mamba2_130m"])
+def test_async_resume_bit_deterministic(arch, tmp_path):
+    """Interrupt + resume under async write-back replays the exact straight
+    run (checkpoints hardlink behind the flush barrier)."""
+    cfg = configs.get_smoke(arch)
+    t_straight = TrainConfig(**_base(6), offload_stream_params=True,
+                             offload_dir=str(tmp_path / "a"))
+    _, oA = train_loop(cfg, t_straight, out_dir=None, print_fn=None)
+    out = str(tmp_path / "run")
+    tB1 = TrainConfig(**_base(3), offload_stream_params=True,
+                      checkpoint_every=3)
+    _, oB1 = train_loop(cfg, tB1, out_dir=out, print_fn=None)
+    tB2 = TrainConfig(**_base(6), offload_stream_params=True,
+                      checkpoint_every=3)
+    _, oB2 = train_loop(cfg, tB2, out_dir=out, print_fn=None)
+    assert oB2.rows[0]["step"] == 3
+    np.testing.assert_array_equal(
+        [r["loss"] for r in oA.rows],
+        [r["loss"] for r in oB1.rows] + [r["loss"] for r in oB2.rows])
+
+
+def test_staging_loss_matches_pre_pipeline_streamed_path(tmp_path):
+    """The staged/deferred-sync step must track the pre-pipeline streamed
+    path <= 1e-5 over 10 steps (the only numeric difference is the fused
+    device-side grad-norm reduction's fp32 re-association)."""
+    cfg = configs.get_smoke("gpt2_124m")
+    base = dict(global_batch=4, seq_len=32, learning_rate=1e-4,
+                total_steps=10, warmup_steps=1, compute_dtype="float32")
+    _, obs_pre = train_loop(
+        cfg, TrainConfig(**base, offload_stream_params=True,
+                         offload_staging=False,
+                         offload_async_writeback=False,
+                         offload_dir=str(tmp_path / "pre")),
+        out_dir=None, print_fn=None)
+    _, obs_pipe = train_loop(
+        cfg, TrainConfig(**base, offload_stream_params=True,
+                         offload_dir=str(tmp_path / "pipe")),
+        out_dir=None, print_fn=None)
+    np.testing.assert_allclose([r["loss"] for r in obs_pre.rows],
+                               [r["loss"] for r in obs_pipe.rows], atol=1e-5)
+
+
+def test_staging_lora_loss_matches_unstaged(tmp_path):
+    cfg = configs.get_smoke("gpt2_124m")
+    base = dict(global_batch=4, seq_len=32, learning_rate=1e-4,
+                total_steps=6, warmup_steps=1, compute_dtype="float32",
+                lora_rank=4)
+    _, obs_pre = train_loop(
+        cfg, TrainConfig(**base, offload_stream_params=True,
+                         offload_staging=False,
+                         offload_dir=str(tmp_path / "pre")),
+        out_dir=None, print_fn=None)
+    _, obs_pipe = train_loop(
+        cfg, TrainConfig(**base, offload_stream_params=True,
+                         offload_dir=str(tmp_path / "pipe")),
+        out_dir=None, print_fn=None)
+    np.testing.assert_allclose([r["loss"] for r in obs_pre.rows],
+                               [r["loss"] for r in obs_pipe.rows], atol=1e-5)

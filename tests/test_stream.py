@@ -196,8 +196,11 @@ def test_measured_peak_resident_within_analytic_bound(tmp_path):
     for step in range(2):
         step_fn(batch, step)
     measured = step_fn.stats()["param_peak_resident_bytes"]
+    # the async pipeline defers writes and pools recycled buffers, so the
+    # bound includes both shares (up to 2*window segments)
     _, analytic = stream_resident_bytes(registry.param_specs(cfg),
-                                        window=tcfg.offload_resident)
+                                        window=tcfg.offload_resident,
+                                        write_queue=2 * tcfg.offload_resident)
     assert measured <= analytic
     assert measured < lstate.store.total_bytes   # never whole-model resident
     step_fn.close()
