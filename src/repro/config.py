@@ -184,8 +184,8 @@ class TrainConfig:
                                        # encode+msync (flush/snapshot barrier)
     offload_staging: bool = True       # double-buffered host->device staging:
                                        # block i+1 converts to device arrays
-                                       # while block i computes; loss/grad-norm
-                                       # syncs defer to the end of the step
+                                       # while block i computes (the deferred
+                                       # loss/grad-norm syncs are always on)
     base_quant: str = ""               # "" | int8: quantize the *frozen* base
                                        # segments of streamed LoRA per channel
                                        # (QLoRA-style; ~4x less flash + window)

@@ -46,17 +46,18 @@ keeps them *encoded* — ``layer_params``/``head_params`` hand the program
 (codes, scales) tree pairs and the jitted entry points dequantize per
 block, so fp32 base weights only ever exist as XLA transients.
 
-The step is an *overlap pipeline*, not just a memory bound
-(``tcfg.offload_staging``, default on):
+The step is an *overlap pipeline*, not just a memory bound:
 
-- **Device staging**: block ``i+1``'s window leaves convert to device
+- **Device staging** (``tcfg.offload_staging``, default on): block
+  ``i+1``'s window leaves convert to device
   arrays right after block ``i``'s compute is dispatched (JAX dispatch is
   asynchronous), so the flash read *and* the host->device transfer of the
   next block hide behind the current block's compute — classic double
   buffering, at most two staged blocks alive.  The head tree is staged
   once per step (once per run for a frozen base) and the per-layer
   attention-window constants are device-resident from construction.
-- **Deferred syncs**: ``loss``, ``aux_sum`` and the grad-norm square-sum
+- **Deferred syncs** (always on — not gated by any flag): ``loss``,
+  ``aux_sum`` and the grad-norm square-sum
   stay device scalars until the end of the step — one ``float()`` sync per
   step instead of one per block boundary; per-segment square-sums come
   from one fused jitted reduction.

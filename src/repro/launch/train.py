@@ -444,8 +444,8 @@ def main():
     ap.add_argument("--offload-staging",
                     action=argparse.BooleanOptionalAction, default=True,
                     help="double-buffered host->device staging of block "
-                         "i+1 while block i computes, plus deferred "
-                         "loss/grad-norm syncs (one per step)")
+                         "i+1 while block i computes (deferred loss/"
+                         "grad-norm syncs are unconditional)")
     ap.add_argument("--base-quant", default="", choices=("", "int8"),
                     help="quantize the frozen base segments of streamed "
                          "LoRA (requires --lora-rank and "

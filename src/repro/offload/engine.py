@@ -23,6 +23,7 @@ turns into a compute/IO overlap breakdown.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from collections import OrderedDict
@@ -39,31 +40,68 @@ def _data_nbytes(data) -> int:
     return int(sum(v.nbytes for v in data.values()))
 
 
-_HOST_COPIES: Optional[bool] = None
+_HOST_COPIES: Dict[Tuple, bool] = {}
 
 
-def _host_to_device_copies() -> bool:
-    """True when the jit boundary *copies* host numpy buffers at every
-    size probed.  Some CPU backends zero-copy large (page-aligned) host
-    arrays — a recycled window buffer would then be overwritten underneath
-    a live device array, silently corrupting in-flight compute — so the
-    reuse pool only turns on when mutation of the source is invisible
-    through the converted array for both a small and a weight-sized
-    buffer.  (H2D backends always copy; this gates the CPU case.)"""
-    global _HOST_COPIES
-    if _HOST_COPIES is None:
+def _probe_copies(shape: Tuple, dtype) -> bool:
+    """True when ``jnp.asarray`` *copies* a host numpy buffer of exactly
+    this geometry: a mutation of the source must be invisible through the
+    converted array.  Cached per (shape, dtype) for the process."""
+    key = (tuple(shape), np.dtype(dtype).str)
+    cached = _HOST_COPIES.get(key)
+    if cached is None:
         try:
             import jax.numpy as jnp
-            copies = True
-            for n in (16384, 1 << 20):      # 64 KB and 4 MB fp32 buffers
-                probe = np.zeros((n,), np.float32)
+            probe = np.zeros(shape, dtype)
+            if probe.size == 0:
+                cached = True
+            else:
                 dev = jnp.asarray(probe)
-                probe[0] = 1.0
-                copies = copies and float(dev[0]) == 0.0
-            _HOST_COPIES = copies
+                before = float(dev.reshape(-1)[0])
+                probe.reshape(-1)[0] = 1
+                cached = float(dev.reshape(-1)[0]) == before
         except Exception:
-            _HOST_COPIES = False
-    return _HOST_COPIES
+            cached = False
+        _HOST_COPIES[key] = cached
+    return cached
+
+
+def _host_to_device_copies(store: Optional[SegmentStore] = None) -> bool:
+    """True when the jit boundary copies host numpy buffers at every size
+    probed.  Some CPU backends zero-copy large (page-aligned) host arrays —
+    a recycled window buffer would then be overwritten underneath a live
+    device array, silently corrupting in-flight compute — so the reuse
+    pool only turns on when the probes see copies.  (H2D backends always
+    copy; this gates the CPU case.)
+
+    With a ``store``, the probes run at the store's *actual* window leaf
+    geometries (deduped shape+dtype) rather than generic sizes, so a
+    backend whose zero-copy threshold sits between the generic probes and
+    a real weight buffer cannot slip the pool on.  The environment
+    variable ``REPRO_OFFLOAD_BUFFER_POOL`` (``0``/``1``) overrides the
+    heuristic entirely."""
+    env = os.environ.get("REPRO_OFFLOAD_BUFFER_POOL")
+    if env is not None:
+        return env.strip().lower() not in ("", "0", "false", "no")
+    # generic small + weight-sized fp32 probes (the pre-store fast gate)
+    if not all(_probe_copies((n,), np.float32) for n in (16384, 1 << 20)):
+        return False
+    if store is None:
+        return True
+    try:
+        from repro.offload.codecs import get_codec
+        seen = set()
+        for r in store.records:
+            key = (tuple(r.shape),
+                   np.dtype(get_codec(r.codec).window_np_dtype(r.dtype)).str)
+            if key in seen:
+                continue
+            seen.add(key)
+            if not _probe_copies(*key):
+                return False
+    except Exception:
+        return False
+    return True
 
 
 class Prefetcher:
@@ -100,9 +138,10 @@ class Prefetcher:
         self._buffers: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()
         self._inflight: set = set()
         self._stale: set = set()
-        # reuse pool: only when the jit boundary copies host buffers (else
-        # an overwritten recycled buffer could mutate a live device array)
-        self._pooling = not encoded and _host_to_device_copies()
+        # reuse pool: only when the jit boundary copies host buffers at
+        # this store's actual leaf geometries (else an overwritten recycled
+        # buffer could mutate a live device array)
+        self._pooling = not encoded and _host_to_device_copies(store)
         self._pool: "OrderedDict[Tuple, list]" = OrderedDict()
         self._pool_sets = 0      # total buffer sets across all signatures
         self._closed = False
@@ -125,6 +164,8 @@ class Prefetcher:
                 if free:
                     bufs = free.pop()
                     self._pool_sets -= 1
+                    if not free:
+                        del self._pool[sig]   # never leave an empty list
         data = self._store.read_segment(
             seg, copy=True, encoded=self._encoded,
             window=not self._encoded, out=bufs)
@@ -148,8 +189,11 @@ class Prefetcher:
             return
         sig = self._store.segment_signature(seg)
         with self._lock:
-            while self._pool_sets >= self._depth + 1:   # global bound
-                old_sig, free = next(iter(self._pool.items()))
+            while self._pool_sets >= self._depth + 1 and self._pool:
+                old_sig, free = next(iter(self._pool.items()))  # global bound
+                if not free:        # defensive: an emptied signature must
+                    del self._pool[old_sig]   # never crash the evictor
+                    continue
                 free.pop()
                 self._pool_sets -= 1
                 if not free:
@@ -217,6 +261,7 @@ class Prefetcher:
             self._lock.notify_all()
 
     def take(self, seg: int) -> Dict[str, np.ndarray]:
+        forced = False
         with self._lock:
             while not self._closed:
                 if seg in self._buffers:
@@ -227,12 +272,22 @@ class Prefetcher:
                 if seg in self._inflight:
                     self._lock.wait()
                 elif seg in self._queue:
-                    if len(self._buffers) >= self._depth:
+                    # front-run the queue: the next free slot must go to
+                    # the segment the consumer is actually blocked on, not
+                    # whatever happened to be scheduled first
+                    if self._queue[0] != seg:
+                        self._queue.remove(seg)
+                        self._queue.insert(0, seg)
+                        self._lock.notify_all()
+                    if len(self._buffers) >= self._depth and not forced:
                         # every slot is full of segments nobody has taken
-                        # yet, and the consumer is here asking for a
-                        # *different* one: the oldest buffered entry is a
-                        # stranded prefetch — drop it so the reader can get
-                        # to the segment actually being waited on
+                        # yet: the oldest buffered entry is a stranded
+                        # prefetch — drop it so the reader can get to this
+                        # one.  At most one drop per take(): spurious
+                        # wakeups (every state change notify_all()s) must
+                        # not bleed still-useful prefetched segments back
+                        # to flash re-reads
+                        forced = True
                         self.forced_drops += 1
                         old, old_data = self._buffers.popitem(last=False)
                         self.recycle(old, old_data)
@@ -306,6 +361,8 @@ class AsyncWriter:
         # barrier are fsynced there — durability exactly at the fence
         self._unsynced: set = set()
         self.writes = 0
+        self.bytes_landed = 0    # bytes that actually reached flash — a
+        #                          stolen-back segment never counts
         self.busy_s = 0.0
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
@@ -408,10 +465,20 @@ class AsyncWriter:
                     self._error = err
                 else:
                     self.writes += 1
+                    self.bytes_landed += self._store.seg_nbytes[seg]
                     self._unsynced.add(seg)
                 self._lock.notify_all()
             if err is None and not stolen and self._recycle is not None:
-                self._recycle(seg, data)
+                # a recycle failure must surface like a write failure: an
+                # unhandled exception here would kill the thread silently,
+                # after which submit() blocks forever on a full queue and
+                # barrier() hangs with _pending nonempty
+                try:
+                    self._recycle(seg, data)
+                except BaseException as e:
+                    with self._lock:
+                        self._error = e
+                        self._lock.notify_all()
 
 
 class OffloadEngine:
@@ -535,18 +602,29 @@ class OffloadEngine:
             if self._prefetcher is not None:
                 self._prefetcher.recycle(seg, data)
             return
+        self._write_dirty(seg, data, inline=False)
+
+    def _write_dirty(self, seg: int, data: Dict[str, np.ndarray],
+                     inline: bool):
+        """The one dirty-write protocol both eviction and ``flush`` run:
+        un-dirty, poison racing prefetches, write, account the blocked
+        time.  ``inline=True`` bypasses the background writer (flush of a
+        still-resident segment: the window still owns — and may mutate —
+        these arrays, so they must not enter the writer's recycle path)."""
         self._dirty.discard(seg)
         if self._prefetcher is not None:
             # before the bytes change: in-flight reads of this segment
             # must not land stale data in the buffer
             self._prefetcher.invalidate(seg)
         t0 = time.perf_counter()
-        if self._writer is not None:
+        if self._writer is not None and not inline:
+            # bytes count when they land (writer.bytes_landed): a segment
+            # stolen back out of the queue was never written
             self._writer.submit(seg, data)
         else:
             self.store.write_segment(seg, data)
+            self.bytes_written += self.store.seg_nbytes[seg]
         self.t_write_block_s += time.perf_counter() - t0
-        self.bytes_written += self.store.seg_nbytes[seg]
 
     def release(self, seg: int):
         """Drop a segment from the window (writing back if dirty)."""
@@ -560,18 +638,8 @@ class OffloadEngine:
         hardlink snapshot runs behind — after ``flush`` returns, the
         segment files hold the current state."""
         for seg in list(self._resident):
-            if seg not in self._dirty:
-                continue
-            self._dirty.discard(seg)
-            if self._prefetcher is not None:
-                self._prefetcher.invalidate(seg)
-            t0 = time.perf_counter()
-            # resident segments write inline even in async mode: the window
-            # still owns (and may mutate) these arrays, so they must not
-            # enter the writer's recycle path
-            self.store.write_segment(seg, self._resident[seg])
-            self.t_write_block_s += time.perf_counter() - t0
-            self.bytes_written += self.store.seg_nbytes[seg]
+            if seg in self._dirty:
+                self._write_dirty(seg, self._resident[seg], inline=True)
         if self._writer is not None:
             t0 = time.perf_counter()
             self._writer.barrier()
@@ -598,7 +666,8 @@ class OffloadEngine:
             "forced_drops": pf.forced_drops if pf else 0,
             "buffer_reuses": pf.buffer_reuses if pf else 0,
             "bytes_read": self.bytes_read,
-            "bytes_written": self.bytes_written,
+            "bytes_written": self.bytes_written + (
+                self._writer.bytes_landed if self._writer else 0),
             "peak_resident_bytes": self.peak_resident_bytes,
             "store_bytes": self.store.total_bytes,
             "t_read_block_s": self.t_read_block_s,
