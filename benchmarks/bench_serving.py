@@ -1,19 +1,55 @@
-"""Serving-path benchmark (paper §3.3 inference support): batched greedy
-decode throughput per family + decode == teacher-forcing exactness."""
+"""Serving-path benchmark (paper §3.3 inference support).
+
+Two sections:
+
+1. Per-family decode-step latency — batched greedy decode throughput of the
+   raw jitted serve step across model families (the original rows).
+2. Multi-adapter continuous-batching throughput — ``repro.serve.ServeEngine``
+   tok/s as the number of *concurrent adapters* grows (1/4/16 requests, each
+   with its own LoRA adapter, all in flight at once), for both bases:
+
+     fp32_inmem    shared fp32 base held in memory
+     int8_stream   frozen int8 base streamed through the read-only offload
+                   window (the phone-sized deployment: base on flash,
+                   adapters hot-swapped per user)
+
+   Full runs write the grid to ``BENCH_serving.json`` (committed artifact).
+   ``--quick`` is the CI smoke gate: both bases with 3 concurrent adapters,
+   asserting tok/s > 0 and that batched multi-adapter decode is
+   token-for-token identical to serving each request alone — a correctness
+   gate on the continuous-batching path, not just a speed probe.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--quick] [--json F]
+"""
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import row, time_call
 from repro import configs
 from repro.config import TrainConfig
+from repro.core.lora import lora_specs
 from repro.core.step import make_serve_step
+from repro.checkpoint.safetensors import save_adapter
 from repro.models import registry
+from repro.offload.state import LayerStreamedState
 from repro.param import init_params
+from repro.serve import AdapterCache, Request, ServeEngine, StreamedBase
+
+_COMMITTED_JSON = "BENCH_serving.json"
+RANK, ALPHA, TARGETS = 4, 16.0, ("wq", "wv")
 
 
-def main(fast: bool = False):
+def _decode_step_rows(fast: bool):
+    """Section 1: raw serve-step latency per family (original bench)."""
     archs = ("qwen15_05b", "mamba2_130m") if fast else (
         "qwen15_05b", "mamba2_130m", "hymba_15b", "whisper_large_v3",
         "dbrx_132b")
@@ -33,5 +69,146 @@ def main(fast: bool = False):
             f"batch {b}; {b / (us/1e6):.0f} tok/s (smoke cfg, CPU)")
 
 
+def _write_adapters(cfg, workdir: str, n: int, base_quant: str,
+                    base_tag: str):
+    """n distinct adapter.safetensors files, exercising the real on-disk
+    load + validation path the engine serves from."""
+    os.makedirs(workdir, exist_ok=True)
+    specs = lora_specs(registry.param_specs(cfg), TARGETS, RANK)
+    paths = []
+    for i in range(n):
+        lt = init_params(jax.random.PRNGKey(1000 + i), specs)
+        lt = jax.tree.map(lambda a, i=i: a + 0.01 * (i + 1), lt)
+        p = os.path.join(workdir, f"adapter_{i}.safetensors")
+        save_adapter(p, lt, rank=RANK, alpha=ALPHA, targets=TARGETS,
+                     base_quant=base_quant, base_tag=base_tag)
+        paths.append(p)
+    return paths
+
+
+def _requests(paths, prompt_len: int, max_new: int):
+    rng = np.random.default_rng(7)
+    return [Request(rid=i,
+                    tokens=rng.integers(3, 200, prompt_len).tolist(),
+                    max_new=max_new, adapter=p)
+            for i, p in enumerate(paths)]
+
+
+def _run_engine(cfg, tcfg, base, paths, reqs, *, slots, max_len, chunk):
+    """(wall_s over run(), outputs, stats) — engine built fresh so compile
+    happens inside, then timed over a fully warmed second run."""
+    def build():
+        ac = AdapterCache(cfg, rank=RANK, alpha=ALPHA, targets=TARGETS,
+                          base_quant=base.base_quant
+                          if hasattr(base, "base_quant") else "",
+                          capacity=max(2, len(paths)))
+        return ServeEngine(cfg, tcfg, base, slots=slots, max_len=max_len,
+                           chunk=chunk, adapters=ac)
+    eng = build()
+    for r in reqs:                           # warm: compiles + loads adapters
+        eng.submit(Request(**vars(r)))
+    eng.run()
+    eng2 = build()
+    for r in reqs:
+        eng2.submit(Request(**vars(r)))
+    t0 = time.perf_counter()
+    out = eng2.run()
+    wall = time.perf_counter() - t0
+    return wall, out, eng2.stats()
+
+
+def _engine_grid(fast: bool, results: dict):
+    """Section 2: ServeEngine tok/s vs concurrent adapters, both bases."""
+    arch = "qwen15_05b"
+    cfg = configs.get_smoke(arch)
+    tcfg = TrainConfig(compute_dtype="float32", attention_impl="streaming",
+                       attn_chunk=64)
+    params = init_params(jax.random.PRNGKey(0), registry.param_specs(cfg))
+    prompt_len, max_new, chunk = (8, 6, 8) if fast else (16, 16, 8)
+    counts = (3,) if fast else (1, 4, 16)
+    max_len = prompt_len + max_new + 1
+    results.update({"arch": arch, "prompt_len": prompt_len,
+                    "max_new": max_new, "adapter_rank": RANK, "grid": []})
+
+    with tempfile.TemporaryDirectory() as d:
+        n_stores = [0]
+
+        def int8_base():
+            # each StreamedBase owns (and closes) its own frozen store
+            n_stores[0] += 1
+            return StreamedBase(LayerStreamedState.create_frozen(
+                params, os.path.join(d, f"int8_base_{n_stores[0]}"),
+                max_resident=2, quant="int8", base_tag="bench"))
+
+        bases = {"fp32_inmem": (lambda: params, ""),
+                 "int8_stream": (int8_base, "int8")}
+        for bname, (mk, quant) in bases.items():
+            apaths = _write_adapters(cfg, os.path.join(d, f"ad_{bname}"),
+                                     max(counts), quant, "")
+            for n in counts:
+                reqs = _requests(apaths[:n], prompt_len, max_new)
+                base = mk()
+                wall, out, st = _run_engine(
+                    cfg, tcfg, base, apaths[:n], reqs,
+                    slots=n, max_len=max_len, chunk=chunk)
+                if hasattr(base, "close"):
+                    base.close()
+                toks = sum(len(v) for v in out.values())
+                tps = toks / max(wall, 1e-9)
+                results["grid"].append(
+                    {"base": bname, "adapters": n, "wall_s": wall,
+                     "new_tokens": toks, "tokens_per_s": tps,
+                     "decode_steps": st["decode_steps"],
+                     "prefill_chunks": st["prefill_chunks"]})
+                row(f"serve_engine_{bname}_a{n}", wall * 1e6,
+                    f"{n} adapters in flight; {tps:.0f} tok/s (smoke cfg)")
+                if fast:
+                    # CI gate: batched multi-adapter == each request alone
+                    assert tps > 0, f"{bname}: no serving throughput"
+                    for r in reqs:
+                        solo_base = mk()
+                        s_eng = ServeEngine(
+                            cfg, tcfg, solo_base, slots=1, max_len=max_len,
+                            chunk=chunk,
+                            adapters=AdapterCache(
+                                cfg, rank=RANK, alpha=ALPHA, targets=TARGETS,
+                                base_quant=quant, capacity=2))
+                        s_eng.submit(Request(**vars(r)))
+                        ref = s_eng.run()[r.rid]
+                        s_eng.close()
+                        assert np.array_equal(out[r.rid], ref), (
+                            f"{bname}: batched decode diverged from the "
+                            f"isolated run for request {r.rid}")
+                    row(f"serve_gate_{bname}", 0.0,
+                        f"ok: batched == isolated for all {n} adapters, "
+                        f"{tps:.0f} tok/s > 0")
+
+
+def main(fast: bool = False, out_json: str = _COMMITTED_JSON):
+    _decode_step_rows(fast)
+    results: dict = {}
+    _engine_grid(fast, results)
+    if fast and out_json == _COMMITTED_JSON:
+        # quick-mode numbers must never clobber the committed artifact
+        out_json = None
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(results, f, indent=1)
+        row("serving_json", 0.0, out_json)
+
+
+def main_cli():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", "--fast", action="store_true", dest="quick",
+                    help="CI smoke: both bases, 3 concurrent adapters, "
+                         "batched == isolated correctness gate")
+    ap.add_argument("--json", default=_COMMITTED_JSON,
+                    help="results JSON path (--quick skips the default so "
+                         "the committed artifact is never clobbered)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(fast=args.quick, out_json=args.json)
+
+
 if __name__ == "__main__":
-    main()
+    main_cli()

@@ -204,11 +204,29 @@ def main(fast: bool = False, out_json: str = _COMMITTED_JSON):
         assert hr >= 0.9, (
             f"streamed prefetch hit rate {hr:.2f} < 0.9 — the read pipeline "
             "is no longer running ahead of compute")
-        assert ov > 0.0, (
-            f"compute/IO overlap fraction {ov:.2f} — the step is fully "
-            "blocked on I/O; the overlap pipeline is broken")
+        # regression gate against the committed artifact: the async
+        # pipeline's overlap fraction may drift with machine noise, but a
+        # drop of more than 0.1 below the committed measurement means the
+        # pipeline stopped hiding I/O behind compute
+        floor = 0.0
+        committed = os.path.join(os.path.dirname(__file__), "..",
+                                 _COMMITTED_JSON)
+        if os.path.exists(committed):
+            with open(committed) as f:
+                ref = json.load(f)
+            floor = max(floor, ref["rows"]["stream_async"]["breakdown"]
+                        ["overlap_frac"] - 0.1)
+        assert ov > floor, (
+            f"compute/IO overlap fraction {ov:.2f} <= {floor:.2f} "
+            f"(committed {_COMMITTED_JSON} minus 0.1 slack) — the overlap "
+            "pipeline regressed")
+        assert tps_async >= tps_sync, (
+            f"async pipeline {tps_async:.0f} tok/s is SLOWER than the "
+            f"synchronous path {tps_sync:.0f} tok/s — the overlap pipeline "
+            "is costing more than it hides")
         row("stream_pipeline_gate", 0.0,
-            f"ok: hit {hr:.2f} >= 0.9, overlap {ov:.2f} > 0")
+            f"ok: hit {hr:.2f} >= 0.9, overlap {ov:.2f} > {floor:.2f}, "
+            f"async x{speedup:.2f} vs sync")
 
 
 def main_cli():

@@ -53,20 +53,52 @@ def save_safetensors(path: str, tensors: Dict[str, np.ndarray],
 
 
 def save_adapter(path: str, lora_params, *, rank: int, alpha: float,
-                 targets=(), base_quant: str = "") -> str:
+                 targets=(), base_quant: str = "", base_tag: str = "") -> str:
     """Export the bare LoRA adapter: flat ``lora.<leaf>`` tensors plus the
     PEFT hyperparameters in the metadata, so a config is reproducible from
     the file alone.  ``base_quant`` records the frozen-base codec the
     adapter was trained against (an adapter learns around the quantization
-    error, so "int8" vs fp32 matters at apply time).  Pairs with
+    error, so "int8" vs fp32 matters at apply time); ``base_tag`` pins the
+    exact frozen base (arch + seed + dtype + quant) so the serving tier can
+    refuse an adapter trained against a different base.  Pairs with
     ``save_merged`` for deployment."""
     from repro.param import flatten_names
     named = {"lora." + n: np.asarray(v) for n, v in flatten_names(lora_params)}
     save_safetensors(path, named, metadata={
         "format": "lora_adapter", "lora_rank": rank, "lora_alpha": alpha,
         "lora_targets": ",".join(targets),
-        "base_quant": base_quant or "fp32"})
+        "base_quant": base_quant or "fp32", "base_tag": base_tag})
     return path
+
+
+def load_adapter(path: str):
+    """Load an ``adapter.safetensors`` back into the nested LoRA tree that
+    ``merge_lora`` consumes.  Returns (lora_tree, peft_meta) where peft_meta
+    has parsed types: ``rank`` int, ``alpha`` float, ``targets`` tuple,
+    ``base_quant`` normalized ("" = fp32), ``base_tag`` str."""
+    tensors, meta = load_safetensors(path)
+    if meta.get("format") != "lora_adapter":
+        raise ValueError(f"{path} is not a LoRA adapter export "
+                         f"(format={meta.get('format')!r})")
+    lora: Dict[str, object] = {}
+    for name, arr in tensors.items():
+        if not name.startswith("lora."):
+            continue
+        parts = name[len("lora."):].split(".")
+        node = lora
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = np.array(arr)
+    bq = meta.get("base_quant", "fp32")
+    peft_meta = {
+        "rank": int(meta.get("lora_rank", 0)),
+        "alpha": float(meta.get("lora_alpha", 0.0)),
+        "targets": tuple(t for t in meta.get("lora_targets", "").split(",")
+                         if t),
+        "base_quant": "" if bq in ("", "fp32") else bq,
+        "base_tag": meta.get("base_tag", ""),
+    }
+    return lora, peft_meta
 
 
 def save_merged(path: str, base_params, lora_params, *, rank: int,

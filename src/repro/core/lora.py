@@ -84,3 +84,19 @@ def export_merged(base_params, lora_params, *, rank: int, alpha: float):
     """Merged weights for deployment (no stop_gradient)."""
     return merge_lora(base_params, lora_params, rank=rank, alpha=alpha,
                       train=False)
+
+
+def zero_adapter(base_specs, targets: Tuple[str, ...], rank: int):
+    """An all-zero adapter tree matching ``lora_specs``'s structure.  Since
+    ``b`` is zero, W' = W exactly — the serving tier uses this for batch rows
+    with no adapter, so adapterless and adapted requests share one decode
+    program (the zero rows are bitwise base-only)."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32),
+                        lora_specs(base_specs, targets, rank), is_leaf=is_spec)
+
+
+def stack_adapters(adapters):
+    """Stack N same-structure adapter trees on a new leading axis — the
+    per-slot adapter batch the serving decode step vmaps over (rows with
+    different adapters decode together in one dispatch)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *adapters)

@@ -1,8 +1,19 @@
-"""Batched serving driver: prefill (teacher-forced cache fill) + decode loop.
+"""Batched serving driver: chunked prefill + decode loop.
 
-Greedy batched generation against the family-appropriate cache (KV / SSM
-state / enc-dec cross cache).  Used by examples/serve_batch.py and the
-serving smoke tests.
+Greedy/sampled batched generation against the family-appropriate cache
+(KV / SSM state / enc-dec cross cache).  Used by examples/serve_batch.py and
+the serving smoke tests.
+
+Prefill is *chunked*: ``models/lm.py::decode_step`` accepts (B, S) token
+slabs, so the cache fills in ceil(P/chunk) jitted calls instead of P
+token-at-a-time steps, with exactly matching decode numerics (the attention
+mask hides kv positions past the write head; the SSM state path scans the
+slab inside the jit).  ``prefill_stepwise`` keeps the token-at-a-time fill
+as the reference oracle — tests/test_serving.py pins chunked == step-wise.
+
+The serve step is compiled once per ``generate`` call and shared between
+prefill and decode (the previous driver jitted it twice).  For multi-user
+multi-adapter serving see ``repro.serve.ServeEngine``.
 """
 from __future__ import annotations
 
@@ -20,17 +31,48 @@ from repro.models import registry
 from repro.param import init_params
 
 
-def prefill(params, prompts, cfg: ModelConfig, tcfg: TrainConfig,
-            max_len: int):
-    """Fill the cache by running decode steps over the prompt tokens.
+def make_serve_fn(cfg: ModelConfig, tcfg: TrainConfig):
+    """The one shared jitted serve step: (params, cache, tokens, index) ->
+    (logits at last position, new cache), cache donated."""
+    return jax.jit(make_serve_step(cfg, tcfg), donate_argnums=(1,))
 
-    (A fused prefill kernel is the production path; the step-wise fill keeps
-    this driver family-agnostic and exactly matches decode numerics.)
+
+def _init_cache(cfg: ModelConfig, b: int, max_len: int):
+    return init_params(jax.random.PRNGKey(0),
+                       registry.cache_specs(cfg, b, max_len, jnp.float32))
+
+
+def prefill(params, prompts, cfg: ModelConfig, tcfg: TrainConfig,
+            max_len: int, serve=None, chunk: int = 32):
+    """Fill the cache with (B, chunk) slabs of prompt tokens per jitted call.
+
+    encdec (whisper) decodes strictly token-at-a-time, so it falls back to
+    the step-wise oracle below.  ``serve`` shares an already-compiled serve
+    step; the final slab is the remainder (never padded — padding would
+    corrupt the SSM state carried across slabs).
     """
+    if cfg.family == "encdec":
+        return prefill_stepwise(params, prompts, cfg, tcfg, max_len,
+                                serve=serve)
     b, plen = prompts.shape
-    cache = init_params(jax.random.PRNGKey(0),
-                        registry.cache_specs(cfg, b, max_len, jnp.float32))
-    serve = jax.jit(make_serve_step(cfg, tcfg), donate_argnums=(1,))
+    cache = _init_cache(cfg, b, max_len)
+    if serve is None:
+        serve = make_serve_fn(cfg, tcfg)
+    logits = None
+    for start in range(0, plen, chunk):
+        slab = prompts[:, start:start + chunk]
+        logits, cache = serve(params, cache, slab, jnp.int32(start))
+    return logits, cache
+
+
+def prefill_stepwise(params, prompts, cfg: ModelConfig, tcfg: TrainConfig,
+                     max_len: int, serve=None):
+    """Reference oracle: fill the cache one decode step per prompt token.
+    Chunked prefill must reproduce this bit-for-bit on the same backend."""
+    b, plen = prompts.shape
+    cache = _init_cache(cfg, b, max_len)
+    if serve is None:
+        serve = make_serve_fn(cfg, tcfg)
     logits = None
     for i in range(plen):
         logits, cache = serve(params, cache, prompts[:, i:i + 1],
@@ -39,11 +81,18 @@ def prefill(params, prompts, cfg: ModelConfig, tcfg: TrainConfig,
 
 
 def generate(params, prompts, cfg: ModelConfig, tcfg: TrainConfig,
-             n_new: int = 16, greedy: bool = True, rng=None):
+             n_new: int = 16, greedy: bool = True, rng=None,
+             chunk: int = 32, stepwise_prefill: bool = False):
     b, plen = prompts.shape
     max_len = plen + n_new + 1
-    logits, cache = prefill(params, prompts, cfg, tcfg, max_len)
-    serve = jax.jit(make_serve_step(cfg, tcfg), donate_argnums=(1,))
+    if not greedy and rng is None:
+        rng = jax.random.PRNGKey(0)
+    # one compile, shared by prefill and the decode loop
+    serve = make_serve_fn(cfg, tcfg)
+    fill = prefill_stepwise if stepwise_prefill else prefill
+    kw = {} if stepwise_prefill else {"chunk": chunk}
+    logits, cache = fill(params, prompts, cfg, tcfg, max_len, serve=serve,
+                         **kw)
     out = []
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     for i in range(n_new):
@@ -65,6 +114,7 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -75,7 +125,8 @@ def main():
                                  (args.batch, args.prompt_len), 3,
                                  cfg.vocab_size, jnp.int32)
     t0 = time.time()
-    toks = generate(params, prompts, cfg, tcfg, n_new=args.new_tokens)
+    toks = generate(params, prompts, cfg, tcfg, n_new=args.new_tokens,
+                    chunk=args.prefill_chunk)
     dt = time.time() - t0
     print(f"generated {toks.shape} in {dt:.2f}s "
           f"({args.batch*args.new_tokens/dt:.1f} tok/s)")

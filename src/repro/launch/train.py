@@ -380,7 +380,7 @@ def stream_lora_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
         save_adapter(os.path.join(out_dir, "adapter.safetensors"),
                      adapter["lora"], rank=tcfg.lora_rank,
                      alpha=tcfg.lora_alpha, targets=tcfg.lora_targets,
-                     base_quant=tcfg.base_quant)
+                     base_quant=tcfg.base_quant, base_tag=base_tag)
     # a quantized base materializes dequantized, so the merged export folds
     # the adapter into the same weights the adapter actually trained against
     base = lstate.materialize_params()

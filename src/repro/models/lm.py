@@ -386,21 +386,28 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
 
 def decode_step(params, cache, tokens, index, cfg: ModelConfig,
                 tcfg: TrainConfig):
-    """tokens: (B, 1); index: scalar int32 tokens already cached.
-    Returns (logits (B, vocab), new_cache)."""
+    """tokens: (B, S); index: scalar int32 tokens already cached.
+
+    S == 1 is one autoregressive decode step.  S > 1 is the chunked-prefill
+    entry point: one jitted call pushes a slab of S prompt tokens through the
+    cache (the attention mask already hides kv positions past the write head,
+    and the SSM state path scans the slab token-by-token inside the jit), so
+    filling a P-token prompt costs ceil(P/S) dispatches instead of P while
+    matching step-wise decode numerics exactly.
+
+    Returns (logits (B, vocab) at the *last* slab position, new_cache)."""
     cd = dtype_of(tcfg.compute_dtype)
-    b = tokens.shape[0]
+    b, s = tokens.shape
     x = L.embed_tokens(params["embed"], tokens, cd)
     if cfg.pos_variant == "learned":
         x = x + jax.lax.dynamic_slice_in_dim(
             params["wpe"].astype(cd),
-            jnp.minimum(index, cfg.max_seq_len - 1), 1, axis=0)[None]
+            jnp.minimum(index, cfg.max_seq_len - s), s, axis=0)[None]
+    pos = index + jnp.arange(s, dtype=jnp.int32)
     if cfg.pos_variant == "mrope":
-        positions = jnp.broadcast_to(
-            jnp.zeros((1, 3, 1), jnp.int32) + index, (b, 3, 1))
+        positions = jnp.broadcast_to(pos[None, None], (b, 3, s))
     else:
-        positions = jnp.broadcast_to(jnp.zeros((1, 1), jnp.int32) + index,
-                                     (b, 1))
+        positions = jnp.broadcast_to(pos[None], (b, s))
     windows = T.layer_windows(cfg)
     fam = cfg.family
     bspecs = block_specs(cfg)
@@ -454,4 +461,4 @@ def decode_step(params, cache, tokens, index, cfg: ModelConfig,
     logits = L.unembed(params["embed"], x.astype(jnp.float32),
                        cfg.tie_embeddings, cfg.logit_softcap,
                        cfg.vocab_size)
-    return logits[:, 0], new_cache
+    return logits[:, -1], new_cache

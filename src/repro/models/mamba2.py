@@ -150,7 +150,11 @@ def apply_mamba(p, x, cfg: ModelConfig, tcfg: TrainConfig, state=None):
     """Full mamba2 mixer.  x: (B, S, d).
 
     state: None (training) or dict(conv=(B, W-1, C), ssm=(B, nh, hd, ds)) for
-    single-token decode.  Returns (y, new_state).
+    stateful decode.  The stateful path accepts any S >= 1 (chunked prefill):
+    the projections and the causal conv batch over the chunk, while the tiny
+    recurrent state update scans token-by-token *inside* the jit — numerics
+    identical to S single-token decode steps, at one dispatch per chunk.
+    Returns (y, new_state).
     """
     b, s, d = x.shape
     di, ds_, nh, hd = d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg), cfg.ssm_head_dim
@@ -181,27 +185,39 @@ def apply_mamba(p, x, cfg: ModelConfig, tcfg: TrainConfig, state=None):
         y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None]
         new_state = None
     else:
-        # recurrent decode: s == 1
+        # recurrent decode: s >= 1 (conv window carried across calls)
         conv_buf = state["conv"]                          # (B, W-1, C)
-        window = jnp.concatenate([conv_buf, xbc], axis=1)  # (B, W, C)
+        window = jnp.concatenate([conv_buf, xbc], axis=1)  # (B, W-1+s, C)
         conv_w = p["conv_w"].astype(cd)
-        xbc1 = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, conv_w)
-                           + p["conv_b"].astype(cd))[:, None]
-        xi, B_, C_ = xbc1[..., :di], xbc1[..., di:di + ds_], xbc1[..., di + ds_:]
-        xh = xi.reshape(b, 1, nh, hd).astype(jnp.float32)
+        width = conv_w.shape[0]
+        conv_out = jnp.zeros_like(xbc)
+        for i in range(width):
+            conv_out = conv_out + window[:, i:i + s] * conv_w[i]
+        xbc_c = jax.nn.silu(conv_out + p["conv_b"].astype(cd))  # (B, s, C)
+        xi, B_, C_ = xbc_c[..., :di], xbc_c[..., di:di + ds_], xbc_c[..., di + ds_:]
+        xh = xi.reshape(b, s, nh, hd).astype(jnp.float32)
         dtp = jax.nn.softplus(dt.astype(jnp.float32) +
-                              p["dt_bias"].astype(jnp.float32))  # (B,1,nh)
+                              p["dt_bias"].astype(jnp.float32))  # (B,s,nh)
         A = -jnp.exp(p["A_log"].astype(jnp.float32))
-        dec = jnp.exp(dtp[:, 0] * A)                      # (B, nh)
-        ssm = state["ssm"].astype(jnp.float32)            # (B, nh, hd, ds)
-        upd = jnp.einsum("bhp,bh,bs->bhps", xh[:, 0], dtp[:, 0],
-                         B_[:, 0].astype(jnp.float32))
-        ssm = ssm * dec[:, :, None, None] + upd
-        y = jnp.einsum("bhps,bs->bhp", ssm,
-                       C_[:, 0].astype(jnp.float32))[:, None]
+        B32 = B_.astype(jnp.float32)
+        C32 = C_.astype(jnp.float32)
+
+        def step(ssm, inp):
+            xh_t, dt_t, B_t, C_t = inp                    # per-token slices
+            dec = jnp.exp(dt_t * A)                       # (B, nh)
+            upd = jnp.einsum("bhp,bh,bs->bhps", xh_t, dt_t, B_t)
+            ssm = ssm * dec[:, :, None, None] + upd
+            y_t = jnp.einsum("bhps,bs->bhp", ssm, C_t)
+            return ssm, y_t
+
+        ssm_f, ys = jax.lax.scan(
+            step, state["ssm"].astype(jnp.float32),
+            (xh.transpose(1, 0, 2, 3), dtp.transpose(1, 0, 2),
+             B32.transpose(1, 0, 2), C32.transpose(1, 0, 2)))
+        y = ys.transpose(1, 0, 2, 3)                      # (B, s, nh, hd)
         y = y + xh * p["D"].astype(jnp.float32)[:, None]
-        new_state = {"conv": window[:, 1:].astype(conv_buf.dtype),
-                     "ssm": ssm.astype(state["ssm"].dtype)}
+        new_state = {"conv": window[:, s:].astype(conv_buf.dtype),
+                     "ssm": ssm_f.astype(state["ssm"].dtype)}
 
     # gated RMSNorm + out projection
     y = y.reshape(b, s, di)

@@ -504,6 +504,7 @@ class OffloadEngine:
                              "back; encoded=True requires read_only=True")
         self._resident: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()
         self._dirty: set = set()
+        self._pinned: set = set()
         self._prefetcher: Optional[Prefetcher] = (
             Prefetcher(store, depth=max(1, max_resident - 1),
                        encoded=encoded)
@@ -575,8 +576,11 @@ class OffloadEngine:
         if dirty:
             self._dirty.add(seg)   # stolen bytes never reached flash
         while len(self._resident) > self.max_resident:
-            old, old_data = self._resident.popitem(last=False)
-            self._writeback(old, old_data)
+            victim = next((s for s in self._resident
+                           if s not in self._pinned), None)
+            if victim is None:
+                break   # everything resident is pinned: let the window grow
+            self._writeback(victim, self._resident.pop(victim))
         self.peak_resident_bytes = max(
             self.peak_resident_bytes,
             self._resident_bytes() + self._prefetch_buffer_bytes()
@@ -625,6 +629,18 @@ class OffloadEngine:
             self.store.write_segment(seg, data)
             self.bytes_written += self.store.seg_nbytes[seg]
         self.t_write_block_s += time.perf_counter() - t0
+
+    def pin(self, seg: int):
+        """Exempt ``seg`` from LRU eviction while it stays resident.  The
+        serving tier pins the head segment (embed/ln_f), which is touched
+        twice per decode step (input embedding + logits) — without the pin
+        the layer walk evicts it every step and each token pays a head-sized
+        re-read.  Pinned residency counts toward ``peak_resident_bytes``
+        like any other; it is a residency floor, not free memory."""
+        self._pinned.add(seg)
+
+    def unpin(self, seg: int):
+        self._pinned.discard(seg)
 
     def release(self, seg: int):
         """Drop a segment from the window (writing back if dirty)."""

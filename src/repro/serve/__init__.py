@@ -1,0 +1,23 @@
+"""Streamed multi-adapter serving tier (paper end goal: phones that both
+fine-tune and *use* personalized models).
+
+One shared read-only base — in-memory, or streamed through the offload
+window with the int8 codec — serves many concurrent users, each with their
+own tiny ``adapter.safetensors``:
+
+- ``ServeProgram``  per-block jitted decode/prefill entry points, vmapped
+  over batch rows with per-row LoRA adapters (rows with different adapters
+  decode together in one dispatch)
+- ``ServeEngine``   continuous batching over per-request cache slots —
+  requests join/leave mid-flight, chunked prefill interleaves with decode
+- ``AdapterCache``  bounded LRU of loaded adapters with hot-swap, validated
+  against the base (``base_tag``/``peft_meta``)
+- ``InMemoryBase`` / ``StreamedBase``  base-weight providers
+"""
+from repro.serve.adapters import AdapterCache
+from repro.serve.base import InMemoryBase, StreamedBase
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.program import ServeProgram, make_serve_program
+
+__all__ = ["AdapterCache", "InMemoryBase", "StreamedBase", "Request",
+           "ServeEngine", "ServeProgram", "make_serve_program"]

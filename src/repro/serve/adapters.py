@@ -1,0 +1,111 @@
+"""Bounded LRU cache of loaded LoRA adapters, validated against the base.
+
+"Millions of users = one shared base + millions of tiny adapters": the
+serving engine can only hold a handful of adapters hot at once.  This cache
+loads ``adapter.safetensors`` files on demand, keeps at most ``capacity``
+resident (LRU hot-swap — evicting an adapter only drops its few-hundred-KB
+tree; the request re-loads it on the next touch), and refuses any adapter
+that does not match the serving base:
+
+- ``rank`` / ``alpha`` / ``targets``: the decode program is compiled for one
+  merge geometry; a mismatched adapter would need a different program
+- ``base_quant``: an adapter trained against an int8 base learned around the
+  quantization error and is NOT valid against the fp32 base (and vice versa)
+- ``base_tag``: pins the exact frozen base (arch + seed + dtype + quant) —
+  an adapter trained against a different base would merge garbage silently
+- tree structure + leaf shapes must match the ``lora_specs`` template
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.safetensors import load_adapter
+from repro.config import ModelConfig
+from repro.core.lora import lora_specs, zero_adapter
+from repro.models import registry
+from repro.param import flatten_names, is_spec
+
+
+class AdapterCache:
+    def __init__(self, cfg: ModelConfig, *, rank: int, alpha: float,
+                 targets: Tuple[str, ...] = ("wq", "wk", "wv", "wo"),
+                 base_quant: str = "", base_tag: str = "",
+                 capacity: int = 4):
+        assert rank > 0, "AdapterCache needs a positive LoRA rank"
+        self.rank = int(rank)
+        self.alpha = float(alpha)
+        self.targets = tuple(targets)
+        self.base_quant = base_quant or ""
+        self.base_tag = base_tag or ""
+        self.capacity = max(1, int(capacity))
+        self._specs = registry.param_specs(cfg)
+        template = lora_specs(self._specs, self.targets, self.rank)
+        self._shapes = {n: s.shape for n, s in
+                        flatten_names(template, is_leaf=is_spec)}
+        self._zero = None
+        self._cache: "OrderedDict[str, object]" = OrderedDict()
+        self.loads = 0
+        self.hits = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------------
+    def _validate(self, path: str, meta: dict, lora):
+        def fail(what, want, got):
+            raise ValueError(
+                f"adapter {path} does not match the serving base: {what} "
+                f"is {got!r}, engine expects {want!r}")
+        if meta["rank"] != self.rank:
+            fail("lora_rank", self.rank, meta["rank"])
+        if meta["alpha"] != self.alpha:
+            fail("lora_alpha", self.alpha, meta["alpha"])
+        if meta["targets"] and tuple(meta["targets"]) != self.targets:
+            fail("lora_targets", self.targets, meta["targets"])
+        if meta["base_quant"] != self.base_quant:
+            fail("base_quant", self.base_quant or "fp32",
+                 meta["base_quant"] or "fp32")
+        if self.base_tag and meta["base_tag"] and \
+                meta["base_tag"] != self.base_tag:
+            fail("base_tag", self.base_tag, meta["base_tag"])
+        got = {n: tuple(v.shape) for n, v in flatten_names(lora)}
+        want = {n: tuple(s) for n, s in self._shapes.items()}
+        if got != want:
+            raise ValueError(
+                f"adapter {path} tree does not match the engine's "
+                f"lora_specs template (rank {self.rank}, targets "
+                f"{self.targets}); got leaves {sorted(got)} vs expected "
+                f"{sorted(want)}")
+
+    # ------------------------------------------------------------------
+    def get(self, path: str):
+        """The adapter tree for ``path`` (loaded + validated on first touch,
+        then LRU-resident until ``capacity`` newer adapters displace it)."""
+        hit = self._cache.get(path)
+        if hit is not None:
+            self.hits += 1
+            self._cache.move_to_end(path)
+            return hit
+        lora, meta = load_adapter(path)
+        self._validate(path, meta, lora)
+        tree = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), lora)
+        self.loads += 1
+        self._cache[path] = tree
+        while len(self._cache) > self.capacity:
+            self._cache.popitem(last=False)
+            self.evictions += 1
+        return tree
+
+    def zero(self):
+        """The all-zero adapter (b = 0, so W' = W bitwise) — used for batch
+        rows that carry no adapter, keeping one decode program for all."""
+        if self._zero is None:
+            self._zero = zero_adapter(self._specs, self.targets, self.rank)
+        return self._zero
+
+    def stats(self):
+        return {"adapter_loads": self.loads, "adapter_hits": self.hits,
+                "adapter_evictions": self.evictions,
+                "adapters_resident": len(self._cache)}

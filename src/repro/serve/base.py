@@ -1,0 +1,79 @@
+"""Base-weight providers for the serving engine.
+
+The engine walks the model per block (repro/serve/program.py), so all it
+needs from the base is ``block(i)`` / ``head()`` plus a prefetch hint.  Two
+providers share that interface:
+
+- ``InMemoryBase``   an ordinary param pytree, pre-split per block once
+- ``StreamedBase``   a frozen ``LayerStreamedState`` — block segments pull
+  through the read-only offload window (int8-resident when quantized; the
+  program dequantizes inside the jit), ``prefetch`` double-buffers the next
+  block behind the current block's compute, and the head segment is *pinned*
+  in the window: it is touched twice per decode step (input embedding +
+  logits head), and without the pin the layer walk would evict it every
+  step, paying a head-segment re-read per token.
+"""
+from __future__ import annotations
+
+import jax
+
+
+class InMemoryBase:
+    """Shared fp32/bf16 base held fully in memory."""
+
+    base_quant = ""
+
+    def __init__(self, params):
+        blocks = params["blocks"]
+        self.n_layers = int(jax.tree.leaves(blocks)[0].shape[0])
+        self._blocks = [jax.tree.map(lambda a, i=i: a[i], blocks)
+                        for i in range(self.n_layers)]
+        self._head = {k: v for k, v in params.items() if k != "blocks"}
+
+    def block(self, i: int):
+        return self._blocks[i]
+
+    def head(self):
+        return self._head
+
+    def prefetch(self, i: int):
+        pass
+
+    def stats(self):
+        return {}
+
+    def close(self):
+        pass
+
+
+class StreamedBase:
+    """Frozen base streamed from layer-aligned segment files (read-only
+    window, shared by every request).  Owns the ``LayerStreamedState`` it
+    wraps: ``close()`` closes it."""
+
+    def __init__(self, lstate):
+        if not getattr(lstate, "frozen", False):
+            raise ValueError("StreamedBase requires a frozen (read-only) "
+                             "layer-streamed store; got a trainable layout")
+        self.lstate = lstate
+        self.base_quant = lstate.base_quant or ""
+        self.n_layers = int(lstate.n_layers)
+        # the head segment is hot on every step — exempt it from LRU
+        lstate.engine.pin(lstate.head_segment)
+
+    def block(self, i: int):
+        return self.lstate.layer_params(i)
+
+    def head(self):
+        return self.lstate.head_params()
+
+    def prefetch(self, i: int):
+        if 0 <= i < self.n_layers:
+            self.lstate.prefetch_layer(i)
+
+    def stats(self):
+        return self.lstate.stats()
+
+    def close(self):
+        self.lstate.engine.unpin(self.lstate.head_segment)
+        self.lstate.close()

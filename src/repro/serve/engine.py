@@ -1,0 +1,314 @@
+"""Continuous-batching serve engine with per-request cache slots.
+
+A fixed number of ``slots`` share one batched decode program.  Requests
+join and leave mid-flight:
+
+  submit() -> queue -> [admit: slot = prefill] -> chunked prefill, one
+  (1, chunk) slab per engine step, interleaved with everyone else's decode
+  -> [slot = active: joins the batched decode] -> max_new tokens reached
+  -> emit + recycle the slot for the next queued request
+
+Prefill runs at batch 1 through the *same* per-block program as decode
+(exact numerics), against a private single-row cache; on completion the row
+is scattered into the slot's rows of the shared cache (donated jit, so the
+big cache updates in place) and the slot enters the decode batch.  Decode
+runs all active slots in one dispatch — per-row adapters, per-row sequence
+positions — while free/prefilling rows ride along as masked-out lanes
+(their outputs are discarded; their cache rows are fully overwritten by the
+next admit's scatter).
+
+Greedy decoding only, and one merge geometry (rank/alpha/targets) per
+engine — per-request sampling temperatures and mixed adapter ranks are out
+of scope for this tier.
+"""
+from __future__ import annotations
+
+import functools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, TrainConfig
+from repro.core.lora import stack_adapters
+from repro.models import mamba2
+from repro.models import transformer as T
+from repro.serve.adapters import AdapterCache
+from repro.serve.base import InMemoryBase, StreamedBase
+from repro.serve.program import make_serve_program
+
+
+@dataclass
+class Request:
+    rid: Any
+    tokens: Sequence[int]          # prompt token ids
+    max_new: int = 16              # generated tokens (incl. first argmax)
+    adapter: Optional[str] = None  # path to adapter.safetensors, or None
+
+
+@dataclass
+class _Slot:
+    state: str = "free"            # free | prefill | active
+    req: Optional[Request] = None
+    prompt: Optional[np.ndarray] = None
+    filled: int = 0                # tokens currently in this row's cache
+    pcache: Optional[list] = None  # rows=1 per-layer cache during prefill
+    lora: Any = None               # this request's (unstacked) adapter tree
+    row_blocks: Optional[list] = None   # lora pre-split per block, rows=1
+    row_head: Any = None
+    last_tok: int = 0
+    generated: List[int] = field(default_factory=list)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_row(big, row, j):
+    """Write a rows=1 prefill cache leaf into slot row ``j`` of the shared
+    cache leaf (donated: updates in place)."""
+    return jax.lax.dynamic_update_slice(
+        big, row.astype(big.dtype), (j,) + (0,) * (row.ndim - 1))
+
+
+def _layer_cache(cfg: ModelConfig, rows: int, max_len: int):
+    """One layer's cache leaves with a leading slot-row axis."""
+    c: Dict[str, Any] = {}
+    if cfg.family != "ssm":
+        kv = (rows, max_len, cfg.n_kv_heads, cfg.head_dim)
+        c["k"] = jnp.zeros(kv, jnp.float32)
+        c["v"] = jnp.zeros(kv, jnp.float32)
+    if cfg.family in ("ssm", "hybrid"):
+        conv_ch = mamba2.d_inner(cfg) + 2 * cfg.ssm_state
+        c["conv"] = jnp.zeros((rows, cfg.ssm_conv_width - 1, conv_ch),
+                              jnp.float32)
+        c["ssm"] = jnp.zeros((rows, mamba2.n_ssm_heads(cfg),
+                              cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+    return c
+
+
+def _split_adapter(tree, n_layers: int):
+    """Stacked adapter tree -> (per-block trees, head tree).  Block leaves
+    carry (rows, L, ...); the per-block slice is (rows, ...)."""
+    if not isinstance(tree, dict):
+        tree = {}
+    blk = tree.get("blocks", {})
+    head = {k: v for k, v in tree.items() if k != "blocks"}
+    per_block = [jax.tree.map(lambda a, i=i: a[:, i], blk)
+                 for i in range(n_layers)]
+    return per_block, head
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, base, *,
+                 slots: int = 4, max_len: int = 256, chunk: int = 16,
+                 adapters: Optional[AdapterCache] = None):
+        if cfg.family == "encdec":
+            raise ValueError("ServeEngine drives decoder-only families")
+        if isinstance(base, dict):
+            base = InMemoryBase(base)
+        elif not hasattr(base, "block"):
+            base = StreamedBase(base)
+        self.cfg, self.tcfg = cfg, tcfg
+        self.base = base
+        self.adapters = adapters
+        if adapters is not None and \
+                adapters.base_quant != (base.base_quant or ""):
+            raise ValueError(
+                f"AdapterCache expects base_quant "
+                f"{adapters.base_quant or 'fp32'!r} but the serving base is "
+                f"{base.base_quant or 'fp32'!r}")
+        rank = adapters.rank if adapters else 0
+        alpha = adapters.alpha if adapters else 0.0
+        self.program = make_serve_program(cfg, tcfg, rank=rank, alpha=alpha,
+                                          base_quant=base.base_quant)
+        self.n_slots = int(slots)
+        self.max_len = int(max_len)
+        self.chunk = max(1, int(chunk))
+        self.n_layers = base.n_layers
+        self.slots = [_Slot() for _ in range(self.n_slots)]
+        self.cache = [_layer_cache(cfg, self.n_slots, self.max_len)
+                      for _ in range(self.n_layers)]
+        self._windows = [jnp.asarray(w, jnp.int32)
+                         for w in np.asarray(T.layer_windows(cfg))]
+        self._queue: "deque[Request]" = deque()
+        self._zero = adapters.zero() if adapters else {}
+        self._stack_dirty = True
+        self._stack_blocks: Optional[list] = None
+        self._stack_head: Any = None
+        # --- statistics ---
+        self.admitted = 0
+        self.completed = 0
+        self.decode_steps = 0
+        self.decoded_tokens = 0
+        self.prefill_chunks = 0
+        self.peak_active = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        plen = len(req.tokens)
+        if plen < 1 or req.max_new < 1:
+            raise ValueError("a request needs >=1 prompt and >=1 new token")
+        if plen + req.max_new > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {plen} + max_new {req.max_new} "
+                f"exceeds the engine's max_len {self.max_len}")
+        if req.adapter is not None and self.adapters is None:
+            raise ValueError(f"request {req.rid} carries an adapter but the "
+                             "engine was built without an AdapterCache")
+        self._queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _admit(self):
+        for j, slot in enumerate(self.slots):
+            if not self._queue:
+                break
+            if slot.state != "free":
+                continue
+            req = self._queue.popleft()
+            slot.state = "prefill"
+            slot.req = req
+            slot.prompt = np.asarray(req.tokens, np.int32)
+            slot.filled = 0
+            slot.generated = []
+            slot.pcache = [_layer_cache(self.cfg, 1, self.max_len)
+                           for _ in range(self.n_layers)]
+            if self.adapters is not None:
+                slot.lora = (self.adapters.get(req.adapter)
+                             if req.adapter else self.adapters.zero())
+            else:
+                slot.lora = {}
+            # pre-split the rows=1 adapter once; reused for every chunk
+            row = jax.tree.map(lambda a: a[None], slot.lora)
+            slot.row_blocks, slot.row_head = _split_adapter(
+                row, self.n_layers)
+            self.admitted += 1
+            self._stack_dirty = True
+
+    def _prefill_step(self, j: int, slot: _Slot, head_bp):
+        p = slot.prompt
+        cs = min(self.chunk, len(p) - slot.filled)
+        slab = jnp.asarray(p[None, slot.filled:slot.filled + cs], jnp.int32)
+        idx = jnp.full((1,), slot.filled, jnp.int32)
+        self.base.prefetch(0)
+        x = self.program.embed(head_bp, slot.row_head, slab, idx)
+        for i in range(self.n_layers):
+            self.base.prefetch(i + 1)
+            x, slot.pcache[i] = self.program.block(
+                self.base.block(i), slot.row_blocks[i], x, slot.pcache[i],
+                idx, self._windows[i])
+        slot.filled += cs
+        self.prefill_chunks += 1
+        if slot.filled < len(p):
+            return
+        # prefill complete: first generated token + scatter into the slot
+        logits = self.program.head(head_bp, slot.row_head, x)   # (1, vocab)
+        slot.last_tok = int(jnp.argmax(logits[0], -1))
+        slot.generated = [slot.last_tok]
+        jj = jnp.int32(j)
+        for i in range(self.n_layers):
+            self.cache[i] = jax.tree.map(
+                lambda big, row: _scatter_row(big, row, jj),
+                self.cache[i], slot.pcache[i])
+        slot.pcache = None
+        slot.state = "active"
+        slot.row_blocks = slot.row_head = None
+        self._stack_dirty = True
+
+    def _restack(self):
+        trees = [s.lora if s.state != "free" and s.lora is not None
+                 else self._zero for s in self.slots]
+        if self.adapters is None:
+            self._stack_blocks = [{} for _ in range(self.n_layers)]
+            self._stack_head = {}
+        else:
+            stacked = stack_adapters(trees)
+            self._stack_blocks, self._stack_head = _split_adapter(
+                stacked, self.n_layers)
+        self._stack_dirty = False
+
+    def _decode_step(self, active: List[int], head_bp):
+        if self._stack_dirty:
+            self._restack()
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        idxs = np.zeros((self.n_slots,), np.int32)
+        for j in active:
+            toks[j, 0] = self.slots[j].last_tok
+            idxs[j] = self.slots[j].filled
+        toks = jnp.asarray(toks)
+        idxs = jnp.asarray(idxs)
+        self.base.prefetch(0)
+        x = self.program.embed(head_bp, self._stack_head, toks, idxs)
+        for i in range(self.n_layers):
+            self.base.prefetch(i + 1)
+            x, self.cache[i] = self.program.block(
+                self.base.block(i), self._stack_blocks[i], x, self.cache[i],
+                idxs, self._windows[i])
+        logits = self.program.head(head_bp, self._stack_head, x)
+        nxt = np.asarray(jnp.argmax(logits, -1))        # (slots,)
+        self.decode_steps += 1
+        self.decoded_tokens += len(active)
+        for j in active:
+            slot = self.slots[j]
+            slot.filled += 1
+            tok = int(nxt[j])
+            slot.generated.append(tok)
+            slot.last_tok = tok
+
+    def _reap(self, finished: list):
+        for j, slot in enumerate(self.slots):
+            if slot.state == "active" and \
+                    len(slot.generated) >= slot.req.max_new:
+                finished.append({"rid": slot.req.rid,
+                                 "tokens": np.asarray(slot.generated[
+                                     :slot.req.max_new], np.int32)})
+                self.completed += 1
+                self.slots[j] = _Slot()
+                self._stack_dirty = True
+
+    # ------------------------------------------------------------------
+    def step(self) -> list:
+        """One engine iteration: admit from the queue, advance every
+        prefilling slot by one chunk, run one batched decode step over the
+        active slots, emit finished requests.  Returns the finished list."""
+        finished: list = []
+        self._admit()
+        head_bp = self.base.head()
+        for j, slot in enumerate(self.slots):
+            if slot.state == "prefill":
+                self._prefill_step(j, slot, head_bp)
+        self._reap(finished)     # max_new == 1 finishes straight off prefill
+        active = [j for j, s in enumerate(self.slots) if s.state == "active"]
+        self.peak_active = max(self.peak_active, len(active))
+        if active:
+            self._decode_step(active, head_bp)
+            self._reap(finished)
+        return finished
+
+    def run(self, max_steps: int = 100000) -> Dict[Any, np.ndarray]:
+        """Drive ``step()`` until the queue and every slot drain; returns
+        {rid: generated token ids}."""
+        out: Dict[Any, np.ndarray] = {}
+        for _ in range(max_steps):
+            if not self._queue and \
+                    all(s.state == "free" for s in self.slots):
+                return out
+            for r in self.step():
+                out[r["rid"]] = r["tokens"]
+        raise RuntimeError(f"ServeEngine.run did not drain in {max_steps} "
+                           "steps")
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        s = {"admitted": self.admitted, "completed": self.completed,
+             "decode_steps": self.decode_steps,
+             "decoded_tokens": self.decoded_tokens,
+             "prefill_chunks": self.prefill_chunks,
+             "peak_active": self.peak_active}
+        if self.adapters is not None:
+            s.update(self.adapters.stats())
+        s.update({"base_" + k: v for k, v in self.base.stats().items()})
+        return s
+
+    def close(self):
+        self.base.close()

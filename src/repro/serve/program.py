@@ -1,0 +1,137 @@
+"""Per-block multi-adapter serving program.
+
+The in-memory decode path (``models/lm.py::decode_step``) scans the stacked
+block tree — fine for one model, but multi-LoRA serving needs *per-row*
+weights: every batch row may carry a different adapter.  Materializing a
+merged tree per row would cost rows x model bytes, so this module re-expresses
+decode as a per-block program (the serving analogue of
+``lm.make_layer_program``):
+
+  embed(head, head_lora, tokens (R, S), index (R,)) -> x (R, S, d)
+  block(bp, block_lora, x, cache, index (R,), window) -> (x, new_cache)
+  head(head, head_lora, x) -> logits (R, vocab)   [last slab position]
+
+Each entry point is ``jax.vmap``-ed over the row axis with the base tree
+shared (``in_axes=None``) and the adapter/cache/index mapped per row, then
+jitted.  ``merge_lora`` runs *inside* the jit, so per-row merged weights
+exist only as XLA transients one block at a time — the same honesty rule the
+training stack applies to int8 dequantization, which also composes here: with
+``base_quant="int8"`` the base arguments arrive as (codes, scales) pairs
+straight from the encoded offload window and are dequantized as the first op
+of each entry point.
+
+Per-row ``index`` (vs ``decode_step``'s shared scalar) is what lets rows at
+*different* sequence positions decode in one dispatch — the continuous
+batching engine (repro/serve/engine.py) relies on it.  Numerics match
+``decode_step`` exactly: same per-layer ops, same cache masking.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig, dtype_of
+from repro.core.lora import merge_lora
+from repro.models import layers as L
+from repro.models import mamba2, moe as moe_mod
+from repro.models import transformer as T
+from repro.models.hymba import apply_hymba_block
+from repro.offload.codecs import dequant_tree
+
+
+class ServeProgram(NamedTuple):
+    embed: Any
+    block: Any
+    head: Any
+
+
+def make_serve_program(cfg: ModelConfig, tcfg: TrainConfig, *,
+                       rank: int = 0, alpha: float = 0.0,
+                       base_quant: str = "") -> ServeProgram:
+    """Build the jitted per-block serving entry points.
+
+    ``rank <= 0`` builds the adapterless program (the lora arguments are
+    empty pytrees).  All blocks share one compilation per activation shape:
+    the block entry point is jitted once and reused for every layer.
+    """
+    if cfg.family == "encdec":
+        raise ValueError("the serving engine drives decoder-only families; "
+                         "encdec (whisper) keeps the step-wise path")
+    cd = dtype_of(tcfg.compute_dtype)
+    fam = cfg.family
+    base_of = dequant_tree if base_quant else (lambda t: t)
+
+    def merged(bp, lora):
+        bp = base_of(bp)
+        if rank <= 0:
+            return bp
+        return merge_lora(bp, lora, rank=rank, alpha=alpha, train=False)
+
+    def row_positions(idx, s):
+        pos = idx + jnp.arange(s, dtype=jnp.int32)
+        if cfg.pos_variant == "mrope":
+            return jnp.broadcast_to(pos[None, None], (1, 3, s))
+        return pos[None]
+
+    # ------------------------------------------------------------------
+    # per-row entry points (vmapped below; every array here is one row)
+    # ------------------------------------------------------------------
+    def embed_row(head, hlora, tok, idx):
+        hp = merged(head, hlora)
+        s = tok.shape[0]
+        x = L.embed_tokens(hp["embed"], tok[None], cd)[0]       # (S, d)
+        if cfg.pos_variant == "learned":
+            x = x + jax.lax.dynamic_slice_in_dim(
+                hp["wpe"].astype(cd),
+                jnp.minimum(idx, cfg.max_seq_len - s), s, axis=0)
+        return x
+
+    def block_row(bp, blora, x, cache, idx, window):
+        lp = merged(bp, blora)
+        x1 = x[None]                                            # (1, S, d)
+        positions = row_positions(idx, x.shape[0])
+        if fam in ("dense", "vlm", "moe"):
+            kv = (cache["k"][None], cache["v"][None])
+            if fam == "moe":
+                y, (ck, cv), _ = moe_mod.apply_moe_block(
+                    lp, x1, cfg, tcfg, positions=positions, window=window,
+                    kv_cache=kv, cache_index=idx)
+            else:
+                y, (ck, cv) = T.apply_block(
+                    lp, x1, cfg, tcfg, positions=positions, window=window,
+                    kv_cache=kv, cache_index=idx)
+            return y[0], {"k": ck[0], "v": cv[0]}
+        if fam == "ssm":
+            h, st = mamba2.apply_mamba(
+                lp["mamba"], L.apply_norm(lp["ln1"], x1, cfg.norm_variant),
+                cfg, tcfg,
+                state={"conv": cache["conv"][None], "ssm": cache["ssm"][None]})
+            return (x1 + h)[0], {"conv": st["conv"][0], "ssm": st["ssm"][0]}
+        # hybrid
+        y, (ck, cv), st = apply_hymba_block(
+            lp, x1, cfg, tcfg, positions=positions, window=window,
+            kv_cache=(cache["k"][None], cache["v"][None]), cache_index=idx,
+            ssm_state={"conv": cache["conv"][None],
+                       "ssm": cache["ssm"][None]})
+        return y[0], {"k": ck[0], "v": cv[0],
+                      "conv": st["conv"][0], "ssm": st["ssm"][0]}
+
+    def head_row(head, hlora, x):
+        hp = merged(head, hlora)
+        xl = L.apply_norm(hp["ln_f"], x[-1:][None], cfg.norm_variant)
+        logits = L.unembed(hp["embed"], xl.astype(jnp.float32),
+                           cfg.tie_embeddings, cfg.logit_softcap,
+                           cfg.vocab_size)
+        return logits[0, 0]                                     # (vocab,)
+
+    # the cache is consumed exactly once per block call — donate it so the
+    # decode loop updates slot caches in place instead of doubling them
+    return ServeProgram(
+        embed=jax.jit(jax.vmap(embed_row, in_axes=(None, 0, 0, 0))),
+        block=functools.partial(jax.jit, donate_argnums=(3,))(
+            jax.vmap(block_row, in_axes=(None, 0, 0, 0, 0, None))),
+        head=jax.jit(jax.vmap(head_row, in_axes=(None, 0, 0))),
+    )
