@@ -41,11 +41,12 @@ def _rms(x):
 
 def apply_hymba_block(p, x, cfg: ModelConfig, tcfg: TrainConfig, *,
                       positions, window, kv_cache=None, cache_index=None,
-                      ssm_state=None):
+                      ssm_state=None, cache_mode="update"):
     xn = L.apply_norm(p["ln1"], x, cfg.norm_variant)
     a, new_kv = apply_attention(p["attn"], xn, cfg, tcfg, positions=positions,
                                 window=window, kv_cache=kv_cache,
-                                cache_index=cache_index)
+                                cache_index=cache_index,
+                                cache_mode=cache_mode)
     m, new_ssm = mamba2.apply_mamba(p["mamba"], xn, cfg, tcfg, state=ssm_state)
     fused = 0.5 * (_rms(a) * p["attn_gate"].astype(a.dtype)
                    + _rms(m) * p["ssm_gate"].astype(a.dtype))

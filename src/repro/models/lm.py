@@ -384,6 +384,47 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
     return c
 
 
+# ----------------------------------------------------------------------------
+# Paged KV cache primitives (serving tier)
+# ----------------------------------------------------------------------------
+# The serving engine (repro/serve) replaces the dense per-slot
+# (slots, max_len, ...) cache with a shared pool of fixed-size pages plus a
+# per-slot page table (repro/serve/paged.py holds the host-side accounting).
+# These two primitives are the device half, called *inside* the jitted
+# serving block: gather turns one row's table into a contiguous cache view
+# for attention (cache_mode="append" in transformer.apply_attention), and
+# scatter writes the fresh k/v of every row through the tables in one
+# batched indexed update on the (donated) pool.
+
+def paged_gather(pool, table):
+    """Gather one row's pages into a contiguous cache strip.
+
+    pool: (n_pages, page_size, ...); table: (W,) int32 page ids.
+    Returns (W * page_size, ...) — position p of the row lives at strip
+    offset p (page p // page_size, slot p % page_size).  Table entries that
+    point at the sentinel page 0 yield garbage rows; the caller masks them
+    by position.
+    """
+    g = pool[table]                                   # (W, page_size, ...)
+    return g.reshape((g.shape[0] * g.shape[1],) + g.shape[2:])
+
+
+def paged_scatter(pool, tables, index, vals):
+    """Write every row's fresh k/v slab into its pages.
+
+    pool: (n_pages, page_size, ...) (donated by the caller's jit);
+    tables: (R, W) int32; index: (R,) write heads; vals: (R, S, ...).
+    Row r position index[r] + t routes to page tables[r, pos // page_size]
+    offset pos % page_size.  Rows the caller masked out (table row all
+    sentinel) land in page 0, which no request owns.
+    """
+    psz = pool.shape[1]
+    s = vals.shape[1]
+    pos = index[:, None] + jnp.arange(s, dtype=jnp.int32)[None]    # (R, S)
+    pid = jnp.take_along_axis(tables, pos // psz, axis=1)          # (R, S)
+    return pool.at[pid, pos % psz].set(vals.astype(pool.dtype))
+
+
 def decode_step(params, cache, tokens, index, cfg: ModelConfig,
                 tcfg: TrainConfig):
     """tokens: (B, S); index: scalar int32 tokens already cached.

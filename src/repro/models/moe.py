@@ -123,14 +123,14 @@ def _apply_moe_dense(p, x, cfg: ModelConfig, tcfg: TrainConfig):
 
 
 def apply_moe_block(p, x, cfg, tcfg, *, positions, window, kv_cache=None,
-                    cache_index=None):
+                    cache_index=None, cache_mode="update"):
     """Transformer block with MoE FFN; mirrors transformer.apply_block."""
     from repro.models import layers as L
     from repro.models.transformer import apply_attention
     h, cache = apply_attention(
         p["attn"], L.apply_norm(p["ln1"], x, cfg.norm_variant), cfg, tcfg,
         positions=positions, window=window, kv_cache=kv_cache,
-        cache_index=cache_index)
+        cache_index=cache_index, cache_mode=cache_mode)
     x = x + h
     y, aux = apply_moe(p["moe"], L.apply_norm(p["ln2"], x, cfg.norm_variant),
                        cfg, tcfg)

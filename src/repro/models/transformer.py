@@ -97,14 +97,21 @@ def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
 # ----------------------------------------------------------------------------
 def apply_attention(p, x, cfg: ModelConfig, tcfg: TrainConfig, *,
                     positions, window, kv_cache=None, cache_index=None,
-                    kv_positions=None, cross_kv=None):
+                    kv_positions=None, cross_kv=None, cache_mode="update"):
     """x: (B, S, d).  positions: (B, S) (rope/learned) or (B, 3, S) (mrope).
 
     kv_cache: optional (ck, cv) with shape (B, Smax, KVH, D) — decode mode;
     the new k/v are written at ``cache_index`` and attention runs against the
-    full cache.  cross_kv: cross-attention source (whisper): either an
-    encoder-output array (B, S_enc, d) to project k/v from, or a precomputed
-    (k, v) tuple (decode).  Returns (out, new_kv_cache).
+    full cache.  With ``cache_mode="append"`` the cache is instead a
+    *read-only* gathered view (the paged-KV serving path: each row's pages
+    gathered into a contiguous strip): positions at or past ``cache_index``
+    in the view are stale page contents and are masked out, the fresh k/v
+    are appended after the view with their true positions, and
+    ``new_kv_cache`` is just ``(k, v)`` — the caller scatters them into its
+    page pool (the view is never written).  cross_kv: cross-attention source
+    (whisper): either an encoder-output array (B, S_enc, d) to project k/v
+    from, or a precomputed (k, v) tuple (decode).  Returns
+    (out, new_kv_cache).
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -138,7 +145,26 @@ def apply_attention(p, x, cfg: ModelConfig, tcfg: TrainConfig, *,
         q = L.apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
         k = L.apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
 
-    if kv_cache is not None:
+    if kv_cache is not None and cache_mode == "append":
+        ck, cv = kv_cache
+        cap = ck.shape[1]
+        # stale view entries (>= the write head) mask to SENTINEL -> their
+        # scores are NEG_INF -> exactly zero weight in fp32, so garbage in
+        # unwritten page tail bytes can never perturb the output
+        view_pos = jnp.arange(cap, dtype=jnp.int32)[None]
+        view_pos = jnp.where(view_pos < cache_index, view_pos,
+                             attn_mod.SENTINEL)
+        fresh_pos = jnp.arange(s, dtype=jnp.int32)[None] + cache_index
+        kv_pos = jnp.broadcast_to(
+            jnp.concatenate([view_pos, fresh_pos], axis=1), (b, cap + s))
+        q_pos = jnp.broadcast_to(fresh_pos, (b, s))
+        out = attention(q, jnp.concatenate([ck.astype(cd), k], axis=1),
+                        jnp.concatenate([cv.astype(cd), v], axis=1),
+                        q_pos=q_pos, kv_pos=kv_pos, causal=True,
+                        window=window, impl=tcfg.attention_impl,
+                        chunk=tcfg.attn_chunk)
+        new_cache = (k, v)
+    elif kv_cache is not None:
         ck, cv = kv_cache
         ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
                                           (0, cache_index, 0, 0))
@@ -175,11 +201,11 @@ def apply_attention(p, x, cfg: ModelConfig, tcfg: TrainConfig, *,
 
 
 def apply_block(p, x, cfg, tcfg, *, positions, window, kv_cache=None,
-                cache_index=None):
+                cache_index=None, cache_mode="update"):
     h, cache = apply_attention(
         p["attn"], L.apply_norm(p["ln1"], x, cfg.norm_variant), cfg, tcfg,
         positions=positions, window=window, kv_cache=kv_cache,
-        cache_index=cache_index)
+        cache_index=cache_index, cache_mode=cache_mode)
     x = x + h
     x = x + L.apply_mlp(p["mlp"], L.apply_norm(p["ln2"], x, cfg.norm_variant),
                         cfg.mlp_variant)

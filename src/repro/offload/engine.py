@@ -518,6 +518,10 @@ class OffloadEngine:
         # --- statistics ---
         self.hits = 0
         self.misses = 0
+        # per-segment miss counts: lets consumers assert residency
+        # contracts on *specific* segments (e.g. the serving tier's pinned
+        # head segment must miss exactly once per run)
+        self.seg_misses: Dict[int, int] = {}
         self.write_hits = 0
         self.bytes_read = 0
         self.bytes_written = 0
@@ -548,6 +552,7 @@ class OffloadEngine:
             self._resident.move_to_end(seg)
             return self._resident[seg]
         self.misses += 1
+        self.seg_misses[seg] = self.seg_misses.get(seg, 0) + 1
         data = dirty = None
         if self._writer is not None:
             t0 = time.perf_counter()

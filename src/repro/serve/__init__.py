@@ -8,8 +8,10 @@ own tiny ``adapter.safetensors``:
 - ``ServeProgram``  per-block jitted decode/prefill entry points, vmapped
   over batch rows with per-row LoRA adapters (rows with different adapters
   decode together in one dispatch)
-- ``ServeEngine``   continuous batching over per-request cache slots —
+- ``ServeEngine``   continuous batching over paged KV cache slots —
   requests join/leave mid-flight, chunked prefill interleaves with decode
+- ``PagePool``      fixed-size-page KV accounting (per-slot page tables,
+  lifetime reservation at admit, backpressure on exhaustion)
 - ``AdapterCache``  bounded LRU of loaded adapters with hot-swap, validated
   against the base (``base_tag``/``peft_meta``)
 - ``InMemoryBase`` / ``StreamedBase``  base-weight providers
@@ -17,7 +19,8 @@ own tiny ``adapter.safetensors``:
 from repro.serve.adapters import AdapterCache
 from repro.serve.base import InMemoryBase, StreamedBase
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.paged import PagePool
 from repro.serve.program import ServeProgram, make_serve_program
 
-__all__ = ["AdapterCache", "InMemoryBase", "StreamedBase", "Request",
-           "ServeEngine", "ServeProgram", "make_serve_program"]
+__all__ = ["AdapterCache", "InMemoryBase", "StreamedBase", "PagePool",
+           "Request", "ServeEngine", "ServeProgram", "make_serve_program"]

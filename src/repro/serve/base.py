@@ -1,19 +1,38 @@
 """Base-weight providers for the serving engine.
 
 The engine walks the model per block (repro/serve/program.py), so all it
-needs from the base is ``block(i)`` / ``head()`` plus a prefetch hint.  Two
+needs from the base is ``block(i)`` / ``head()`` plus pipeline hints.  Two
 providers share that interface:
 
 - ``InMemoryBase``   an ordinary param pytree, pre-split per block once
 - ``StreamedBase``   a frozen ``LayerStreamedState`` — block segments pull
   through the read-only offload window (int8-resident when quantized; the
-  program dequantizes inside the jit), ``prefetch`` double-buffers the next
-  block behind the current block's compute, and the head segment is *pinned*
+  program dequantizes inside the jit), and the head segment is *pinned*
   in the window: it is touched twice per decode step (input embedding +
   logits head), and without the pin the layer walk would evict it every
   step, paying a head-segment re-read per token.
+
+``StreamedBase`` runs the decode-side half of PR 5's trainer overlap
+pipeline (core/stream.py), three deep and three *threads* deep: the
+prefetcher pages segment ``i+2`` in from flash, a dedicated staging worker
+pulls block ``i+1`` through the window and converts its leaves to device
+arrays, and the main thread dispatches block ``i``'s compute.  ``stage(i)``
+only *submits* the conversion; ``block(i)`` joins the future — so the
+host->device copy genuinely runs on another core while the engine
+dispatches, instead of merely being reordered on the dispatch thread
+(which buys nothing: the conversion serializes either way).  Every window
+``acquire`` is routed through the single staging worker, so the offload
+engine never sees concurrent pulls.  At most two staged blocks are alive,
+and the head device tree is staged **once per run** — the frozen base
+never changes, so re-converting embed/ln_f every step was pure
+host->device traffic.  ``staging=False`` keeps the fully synchronous walk
+(the bench's sync-vs-staged comparison row).
 """
 from __future__ import annotations
+
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict
 
 import jax
 
@@ -39,6 +58,9 @@ class InMemoryBase:
     def prefetch(self, i: int):
         pass
 
+    def stage(self, i: int):
+        pass
+
     def stats(self):
         return {}
 
@@ -51,29 +73,93 @@ class StreamedBase:
     window, shared by every request).  Owns the ``LayerStreamedState`` it
     wraps: ``close()`` closes it."""
 
-    def __init__(self, lstate):
+    def __init__(self, lstate, *, staging: bool = True):
         if not getattr(lstate, "frozen", False):
             raise ValueError("StreamedBase requires a frozen (read-only) "
                              "layer-streamed store; got a trainable layout")
         self.lstate = lstate
         self.base_quant = lstate.base_quant or ""
         self.n_layers = int(lstate.n_layers)
+        self.staging = bool(staging)
+        self._staged: Dict[int, Future] = {}  # block idx -> device-tree fut
+        self._head_dev = None                 # head tree, staged once per run
+        self.t_h2d_s = 0.0                    # host->device conversion time
+        # one worker: window pulls + conversions run off the dispatch
+        # thread, and the offload engine never sees concurrent acquires
+        self._worker = ThreadPoolExecutor(max_workers=1) if self.staging \
+            else None
         # the head segment is hot on every step — exempt it from LRU
         lstate.engine.pin(lstate.head_segment)
 
+    # ------------------------------------------------------------------
+    def _timed_pull(self, fn):
+        """Window pull + device conversion, billing only the *conversion*
+        share to ``t_h2d_s`` — the engine already bills its own acquire
+        wait to ``t_read_block_s``, and the breakdown must not
+        double-count (same discipline as core/stream.py)."""
+        eng = self.lstate.engine
+        t0 = time.perf_counter()
+        b0 = eng.t_read_block_s + eng.t_write_block_s
+        out = fn()
+        blocked = (eng.t_read_block_s + eng.t_write_block_s) - b0
+        self.t_h2d_s += max(0.0, (time.perf_counter() - t0) - blocked)
+        return out
+
+    def _pull_block(self, i: int):
+        return self._timed_pull(lambda: self.lstate.layer_params(i))
+
     def block(self, i: int):
-        return self.lstate.layer_params(i)
+        """Block ``i``'s device param tree: join the staged future when the
+        pipeline ran ahead, else pull + convert (still via the worker, so
+        acquires stay single-threaded)."""
+        fut = self._staged.pop(i, None)
+        if fut is not None:
+            return fut.result()
+        if self._worker is not None:
+            return self._worker.submit(self._pull_block, i).result()
+        return self._pull_block(i)
 
     def head(self):
-        return self.lstate.head_params()
+        if not self.staging:
+            return self.lstate.head_params()
+        if self._head_dev is None:
+            self._head_dev = self._worker.submit(
+                self._timed_pull, self.lstate.head_params).result()
+        return self._head_dev
 
     def prefetch(self, i: int):
         if 0 <= i < self.n_layers:
             self.lstate.prefetch_layer(i)
 
+    def stage(self, i: int):
+        """Queue block ``i``'s window pull + host->device conversion on the
+        staging worker — called right after the previous block's compute is
+        dispatched, so the copy runs on another core while that compute
+        (and the engine's dispatch loop) proceed.  Bounded to two staged
+        blocks (the one consumed next and this one)."""
+        if not self.staging or not (0 <= i < self.n_layers) \
+                or i in self._staged:
+            return
+        self._staged[i] = self._worker.submit(self._pull_block, i)
+        while len(self._staged) > 2:
+            self._staged.pop(next(iter(self._staged)))
+
     def stats(self):
-        return self.lstate.stats()
+        s = dict(self.lstate.stats())
+        s["stage_h2d_s"] = self.t_h2d_s
+        # flash-level reads of the pinned head segment: 1 initial read,
+        # zero re-reads, or the pin is broken (tested under window
+        # pressure in tests/test_paged_serving.py)
+        s["head_reads"] = self.lstate.engine.seg_misses.get(
+            self.lstate.head_segment, 0)
+        return s
 
     def close(self):
+        if self._worker is not None:
+            # drain in-flight conversions before the store goes away
+            self._worker.shutdown(wait=True)
+            self._worker = None
+        self._staged.clear()
+        self._head_dev = None
         self.lstate.engine.unpin(self.lstate.head_segment)
         self.lstate.close()

@@ -1,21 +1,40 @@
-"""Continuous-batching serve engine with per-request cache slots.
+"""Continuous-batching serve engine with paged KV cache slots.
 
 A fixed number of ``slots`` share one batched decode program.  Requests
 join and leave mid-flight:
 
-  submit() -> queue -> [admit: slot = prefill] -> chunked prefill, one
-  (1, chunk) slab per engine step, interleaved with everyone else's decode
-  -> [slot = active: joins the batched decode] -> max_new tokens reached
-  -> emit + recycle the slot for the next queued request
+  submit() -> queue -> [admit: reserve pages, slot = prefill] -> chunked
+  prefill, one (1, chunk) slab per engine step, interleaved with everyone
+  else's decode -> [slot = active: joins the batched decode] -> max_new
+  tokens reached -> emit + release pages + recycle the slot
 
 Prefill runs at batch 1 through the *same* per-block program as decode
-(exact numerics), against a private single-row cache; on completion the row
-is scattered into the slot's rows of the shared cache (donated jit, so the
-big cache updates in place) and the slot enters the decode batch.  Decode
-runs all active slots in one dispatch — per-row adapters, per-row sequence
-positions — while free/prefilling rows ride along as masked-out lanes
-(their outputs are discarded; their cache rows are fully overwritten by the
-next admit's scatter).
+(exact numerics) and writes its k/v **directly into the shared page pools**
+through the slot's page table — no private prefill cache, no per-layer
+scatter pass at completion (only the tiny recurrent ssm state keeps a
+private rows=1 buffer, scattered once when prefill finishes).  Decode runs
+all active slots in one dispatch — per-row adapters, per-row sequence
+positions — while free/prefilling rows ride along as masked-out lanes:
+their page-table rows are masked to the sentinel page, so their garbage
+writes can never land in pages a live request owns.
+
+**Paged KV** (repro/serve/paged.py): instead of a dense worst-case
+``(slots, max_len, ...)`` cache per layer, each layer owns a pool of
+fixed-size pages and each slot a page table.  Admission reserves a
+request's full lifetime of pages up front (``ceil((plen + max_new - 1) /
+page_size)``) — a request that doesn't fit *waits in the queue*
+(backpressure) instead of being rejected, long and short requests share
+one pool, and concurrency scales with pool memory rather than with
+``slots x max_len``.
+
+**Deferred host syncs**: the per-step ``argmax`` stays on device —
+``_last_dev`` is a ``(slots,)`` device vector fed straight back into the
+next decode dispatch, and each step appends the vector to a host-side
+trace.  Tokens materialize in **one** ``np.asarray`` pull at ``_reap``
+(when a request actually finishes), so the decode loop runs dispatch-only:
+with a ``StreamedBase`` the flash read + h2d staging of block ``i+1``
+genuinely overlap block ``i``'s compute instead of serializing on a
+per-token host round trip.
 
 Greedy decoding only, and one merge geometry (rank/alpha/targets) per
 engine — per-request sampling temperatures and mixed adapter ranks are out
@@ -24,6 +43,7 @@ of scope for this tier.
 from __future__ import annotations
 
 import functools
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
@@ -38,6 +58,7 @@ from repro.models import mamba2
 from repro.models import transformer as T
 from repro.serve.adapters import AdapterCache
 from repro.serve.base import InMemoryBase, StreamedBase
+from repro.serve.paged import PagePool
 from repro.serve.program import make_serve_program
 
 
@@ -55,12 +76,13 @@ class _Slot:
     req: Optional[Request] = None
     prompt: Optional[np.ndarray] = None
     filled: int = 0                # tokens currently in this row's cache
-    pcache: Optional[list] = None  # rows=1 per-layer cache during prefill
+    pcache: Optional[list] = None  # rows=1 recurrent (ssm) prefill cache
     lora: Any = None               # this request's (unstacked) adapter tree
     row_blocks: Optional[list] = None   # lora pre-split per block, rows=1
     row_head: Any = None
-    last_tok: int = 0
-    generated: List[int] = field(default_factory=list)
+    n_gen: int = 0                 # tokens generated (incl. first argmax)
+    generated: List[int] = field(default_factory=list)  # host-side, filled
+    #                                                     at trace flushes
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -71,13 +93,24 @@ def _scatter_row(big, row, j):
         big, row.astype(big.dtype), (j,) + (0,) * (row.ndim - 1))
 
 
-def _layer_cache(cfg: ModelConfig, rows: int, max_len: int):
-    """One layer's cache leaves with a leading slot-row axis."""
+@jax.jit
+def _set_first(last, logits, j):
+    """Record slot ``j``'s first generated token (prefill-completion argmax)
+    in the device last-token vector — no host sync."""
+    return last.at[j].set(jnp.argmax(logits[0], -1).astype(last.dtype))
+
+
+@jax.jit
+def _next_toks(last, logits, mask):
+    """One decode step's next-token vector: argmax where the lane is a live
+    request, the previous value elsewhere — stays on device."""
+    return jnp.where(mask, jnp.argmax(logits, -1).astype(last.dtype), last)
+
+
+def _recurrent_cache(cfg: ModelConfig, rows: int):
+    """One layer's per-row recurrent leaves (ssm/hybrid families); the k/v
+    of attention families live in the shared page pools instead."""
     c: Dict[str, Any] = {}
-    if cfg.family != "ssm":
-        kv = (rows, max_len, cfg.n_kv_heads, cfg.head_dim)
-        c["k"] = jnp.zeros(kv, jnp.float32)
-        c["v"] = jnp.zeros(kv, jnp.float32)
     if cfg.family in ("ssm", "hybrid"):
         conv_ch = mamba2.d_inner(cfg) + 2 * cfg.ssm_state
         c["conv"] = jnp.zeros((rows, cfg.ssm_conv_width - 1, conv_ch),
@@ -102,7 +135,9 @@ def _split_adapter(tree, n_layers: int):
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, base, *,
                  slots: int = 4, max_len: int = 256, chunk: int = 16,
-                 adapters: Optional[AdapterCache] = None):
+                 adapters: Optional[AdapterCache] = None,
+                 page_size: int = 16, pool_pages: Optional[int] = None,
+                 defer_tokens: bool = True):
         if cfg.family == "encdec":
             raise ValueError("ServeEngine drives decoder-only families")
         if isinstance(base, dict):
@@ -127,8 +162,27 @@ class ServeEngine:
         self.chunk = max(1, int(chunk))
         self.n_layers = base.n_layers
         self.slots = [_Slot() for _ in range(self.n_slots)]
-        self.cache = [_layer_cache(cfg, self.n_slots, self.max_len)
+        # recurrent (ssm) leaves keep the dense per-row layout — they are
+        # O(1) in sequence length
+        self.cache = [_recurrent_cache(cfg, self.n_slots)
                       for _ in range(self.n_layers)]
+        # paged k/v pools for attention families; pool_pages defaults to
+        # the dense-equivalent capacity slots * ceil(max_len / page_size)
+        self.paged = cfg.family != "ssm"
+        self.pool: Optional[PagePool] = None
+        self.kv_pools: Optional[list] = None
+        if self.paged:
+            psz = max(1, int(page_size))
+            width = -(-self.max_len // psz)
+            usable = int(pool_pages) if pool_pages is not None \
+                else self.n_slots * width
+            self.pool = PagePool(n_pages=usable + 1, page_size=psz,
+                                 slots=self.n_slots, table_width=width)
+            shape = (usable + 1, psz, cfg.n_kv_heads, cfg.head_dim)
+            self.kv_pools = [{"k": jnp.zeros(shape, jnp.float32),
+                              "v": jnp.zeros(shape, jnp.float32)}
+                             for _ in range(self.n_layers)]
+        # per-layer device constants, uploaded once at construction
         self._windows = [jnp.asarray(w, jnp.int32)
                          for w in np.asarray(T.layer_windows(cfg))]
         self._queue: "deque[Request]" = deque()
@@ -136,6 +190,14 @@ class ServeEngine:
         self._stack_dirty = True
         self._stack_blocks: Optional[list] = None
         self._stack_head: Any = None
+        # deferred decode syncs: device last-token vector + host trace of
+        # (device token vector, active slot ids) per step, flushed in one
+        # np.asarray pull when a request finishes.  defer_tokens=False
+        # flushes every step instead — the pre-staging decode discipline
+        # (bench_serving's unstaged row measures what deferral buys)
+        self.defer_tokens = bool(defer_tokens)
+        self._last_dev = jnp.zeros((self.n_slots,), jnp.int32)
+        self._trace: List[tuple] = []
         # --- statistics ---
         self.admitted = 0
         self.completed = 0
@@ -143,8 +205,15 @@ class ServeEngine:
         self.decoded_tokens = 0
         self.prefill_chunks = 0
         self.peak_active = 0
+        self.t_decode_s = 0.0          # decode dispatch + trace-flush wall
+        self.t_prefill_s = 0.0         # prefill dispatch wall
 
     # ------------------------------------------------------------------
+    def _pages_for(self, req: Request) -> int:
+        # cache positions written over the request's lifetime: the prompt
+        # plus every generated token except the last (never fed back)
+        return self.pool.pages_for(len(req.tokens) + req.max_new - 1)
+
     def submit(self, req: Request):
         plen = len(req.tokens)
         if plen < 1 or req.max_new < 1:
@@ -152,7 +221,13 @@ class ServeEngine:
         if plen + req.max_new > self.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt {plen} + max_new {req.max_new} "
-                f"exceeds the engine's max_len {self.max_len}")
+                f"exceeds the per-request cap max_len {self.max_len} "
+                f"(the page-table width)")
+        if self.paged and self._pages_for(req) > self.pool.usable_pages:
+            raise ValueError(
+                f"request {req.rid} needs {self._pages_for(req)} pages but "
+                f"the pool holds {self.pool.usable_pages} — it could never "
+                f"be admitted")
         if req.adapter is not None and self.adapters is None:
             raise ValueError(f"request {req.rid} carries an adapter but the "
                              "engine was built without an AdapterCache")
@@ -165,14 +240,25 @@ class ServeEngine:
                 break
             if slot.state != "free":
                 continue
-            req = self._queue.popleft()
+            req = self._queue[0]
+            if self.paged:
+                need = self._pages_for(req)
+                if not self.pool.can_admit(need):
+                    # admission backpressure: the request waits for pages
+                    # (FIFO — later, smaller requests do not starve it)
+                    self.pool.admission_waits += 1
+                    break
+                self.pool.allocate(j, need)
+            self._queue.popleft()
             slot.state = "prefill"
             slot.req = req
             slot.prompt = np.asarray(req.tokens, np.int32)
             slot.filled = 0
+            slot.n_gen = 0
             slot.generated = []
-            slot.pcache = [_layer_cache(self.cfg, 1, self.max_len)
-                           for _ in range(self.n_layers)]
+            slot.pcache = [_recurrent_cache(self.cfg, 1)
+                           for _ in range(self.n_layers)] \
+                if self.cfg.family in ("ssm", "hybrid") else None
             if self.adapters is not None:
                 slot.lora = (self.adapters.get(req.adapter)
                              if req.adapter else self.adapters.zero())
@@ -185,35 +271,65 @@ class ServeEngine:
             self.admitted += 1
             self._stack_dirty = True
 
+    def _block_call(self, i: int, blora, x, tab, idx, cache):
+        """One per-layer block dispatch, routing the family's cache
+        arguments; returns the new activations (pools/cache updated)."""
+        bp = self.base.block(i)
+        win = self._windows[i]
+        fam = self.cfg.family
+        if fam == "ssm":
+            x, new = self.program.block(bp, blora, x, cache[i], idx, win)
+            cache[i] = new
+            return x
+        pools = self.kv_pools[i]
+        if fam == "hybrid":
+            x, pk, pv, new = self.program.block(
+                bp, blora, x, pools["k"], pools["v"], tab, idx, win,
+                cache[i])
+            cache[i] = new
+        else:
+            x, pk, pv = self.program.block(
+                bp, blora, x, pools["k"], pools["v"], tab, idx, win)
+        pools["k"], pools["v"] = pk, pv
+        return x
+
     def _prefill_step(self, j: int, slot: _Slot, head_bp):
         p = slot.prompt
         cs = min(self.chunk, len(p) - slot.filled)
         slab = jnp.asarray(p[None, slot.filled:slot.filled + cs], jnp.int32)
         idx = jnp.full((1,), slot.filled, jnp.int32)
+        tab = jnp.asarray(self.pool.tables[j:j + 1]) if self.paged else None
         self.base.prefetch(0)
         x = self.program.embed(head_bp, slot.row_head, slab, idx)
+        cache = slot.pcache
         for i in range(self.n_layers):
             self.base.prefetch(i + 1)
-            x, slot.pcache[i] = self.program.block(
-                self.base.block(i), slot.row_blocks[i], x, slot.pcache[i],
-                idx, self._windows[i])
+            x = self._block_call(i, slot.row_blocks[i], x, tab, idx, cache)
+            self.base.stage(i + 1)
         slot.filled += cs
         self.prefill_chunks += 1
         if slot.filled < len(p):
+            self.base.prefetch(0)
+            self.base.stage(0)
             return
-        # prefill complete: first generated token + scatter into the slot
+        # prefill complete: first generated token (deferred — stays a device
+        # value in _last_dev) + scatter the recurrent rows into the slot
         logits = self.program.head(head_bp, slot.row_head, x)   # (1, vocab)
-        slot.last_tok = int(jnp.argmax(logits[0], -1))
-        slot.generated = [slot.last_tok]
-        jj = jnp.int32(j)
-        for i in range(self.n_layers):
-            self.cache[i] = jax.tree.map(
-                lambda big, row: _scatter_row(big, row, jj),
-                self.cache[i], slot.pcache[i])
-        slot.pcache = None
+        self._last_dev = _set_first(self._last_dev, logits, jnp.int32(j))
+        self._trace.append((self._last_dev, (j,)))
+        slot.n_gen = 1
+        if slot.pcache is not None:
+            jj = jnp.int32(j)
+            for i in range(self.n_layers):
+                self.cache[i] = jax.tree.map(
+                    lambda big, row: _scatter_row(big, row, jj),
+                    self.cache[i], slot.pcache[i])
+            slot.pcache = None
         slot.state = "active"
         slot.row_blocks = slot.row_head = None
         self._stack_dirty = True
+        self.base.prefetch(0)
+        self.base.stage(0)
 
     def _restack(self):
         trees = [s.lora if s.state != "free" and s.lora is not None
@@ -230,39 +346,70 @@ class ServeEngine:
     def _decode_step(self, active: List[int], head_bp):
         if self._stack_dirty:
             self._restack()
-        toks = np.zeros((self.n_slots, 1), np.int32)
         idxs = np.zeros((self.n_slots,), np.int32)
+        mask = np.zeros((self.n_slots,), bool)
         for j in active:
-            toks[j, 0] = self.slots[j].last_tok
             idxs[j] = self.slots[j].filled
-        toks = jnp.asarray(toks)
-        idxs = jnp.asarray(idxs)
+            mask[j] = True
+        idx = jnp.asarray(idxs)
+        tab = None
+        if self.paged:
+            # inactive lanes (free / still-prefilling slots riding the
+            # dispatch) write through the sentinel page: zero their table
+            # rows so lane garbage never lands in pages a request owns
+            tab = jnp.asarray(
+                np.where(mask[:, None], self.pool.tables, 0))
+        # the previous step's tokens feed back as a device vector — no
+        # host argmax sync anywhere in the decode loop
+        toks = self._last_dev[:, None]
         self.base.prefetch(0)
-        x = self.program.embed(head_bp, self._stack_head, toks, idxs)
+        x = self.program.embed(head_bp, self._stack_head, toks, idx)
         for i in range(self.n_layers):
             self.base.prefetch(i + 1)
-            x, self.cache[i] = self.program.block(
-                self.base.block(i), self._stack_blocks[i], x, self.cache[i],
-                idxs, self._windows[i])
+            x = self._block_call(i, self._stack_blocks[i], x, tab, idx,
+                                 self.cache)
+            self.base.stage(i + 1)
         logits = self.program.head(head_bp, self._stack_head, x)
-        nxt = np.asarray(jnp.argmax(logits, -1))        # (slots,)
+        self._last_dev = _next_toks(self._last_dev, logits,
+                                    jnp.asarray(mask))
+        self._trace.append((self._last_dev, tuple(active)))
+        self.base.prefetch(0)
+        self.base.stage(0)
         self.decode_steps += 1
         self.decoded_tokens += len(active)
         for j in active:
-            slot = self.slots[j]
-            slot.filled += 1
-            tok = int(nxt[j])
-            slot.generated.append(tok)
-            slot.last_tok = tok
+            self.slots[j].filled += 1
+            self.slots[j].n_gen += 1
+        if not self.defer_tokens:
+            self._materialize()      # per-step host round trip (unstaged)
+
+    def _materialize(self):
+        """Flush the deferred token trace: one host pull for every step
+        since the last flush (satellite of the deferred-argmax tentpole —
+        bookkeeping is batched per *flush*, not per step per slot)."""
+        if not self._trace:
+            return
+        t0 = time.perf_counter()
+        arr = np.asarray(jnp.stack([t for t, _ in self._trace]))
+        for k, (_, act) in enumerate(self._trace):
+            for j in act:
+                self.slots[j].generated.append(int(arr[k, j]))
+        self._trace.clear()
+        self.t_decode_s += time.perf_counter() - t0
 
     def _reap(self, finished: list):
+        if not any(s.state == "active" and s.n_gen >= s.req.max_new
+                   for s in self.slots):
+            return
+        self._materialize()
         for j, slot in enumerate(self.slots):
-            if slot.state == "active" and \
-                    len(slot.generated) >= slot.req.max_new:
+            if slot.state == "active" and slot.n_gen >= slot.req.max_new:
                 finished.append({"rid": slot.req.rid,
                                  "tokens": np.asarray(slot.generated[
                                      :slot.req.max_new], np.int32)})
                 self.completed += 1
+                if self.paged:
+                    self.pool.release(j)
                 self.slots[j] = _Slot()
                 self._stack_dirty = True
 
@@ -273,16 +420,26 @@ class ServeEngine:
         active slots, emit finished requests.  Returns the finished list."""
         finished: list = []
         self._admit()
+        t0 = time.perf_counter()
         head_bp = self.base.head()
+        t_head = time.perf_counter() - t0    # per-step head pull: billed to
+        #   whichever phase this step runs — with staging it is ~free after
+        #   the first step; the sync walk re-converts the segment every step
+        t0 = time.perf_counter()
         for j, slot in enumerate(self.slots):
             if slot.state == "prefill":
                 self._prefill_step(j, slot, head_bp)
+        self.t_prefill_s += time.perf_counter() - t0
         self._reap(finished)     # max_new == 1 finishes straight off prefill
         active = [j for j, s in enumerate(self.slots) if s.state == "active"]
         self.peak_active = max(self.peak_active, len(active))
         if active:
+            t0 = time.perf_counter()
             self._decode_step(active, head_bp)
+            self.t_decode_s += time.perf_counter() - t0 + t_head
             self._reap(finished)
+        else:
+            self.t_prefill_s += t_head
         return finished
 
     def run(self, max_steps: int = 100000) -> Dict[Any, np.ndarray]:
@@ -304,7 +461,11 @@ class ServeEngine:
              "decode_steps": self.decode_steps,
              "decoded_tokens": self.decoded_tokens,
              "prefill_chunks": self.prefill_chunks,
-             "peak_active": self.peak_active}
+             "peak_active": self.peak_active,
+             "decode_wall_s": self.t_decode_s,
+             "prefill_wall_s": self.t_prefill_s}
+        if self.pool is not None:
+            s.update(self.pool.stats())
         if self.adapters is not None:
             s.update(self.adapters.stats())
         s.update({"base_" + k: v for k, v in self.base.stats().items()})

@@ -1,0 +1,111 @@
+"""Paged KV cache: fixed-size pages + per-slot page tables (vLLM-style).
+
+The PR 6 engine gave every slot a dense ``(max_len, kv_heads, head_dim)``
+cache row per layer — worst-case-sized, so slot count scaled with
+``slots x max_len`` whether requests used the length or not.  Here the
+per-layer cache is a shared *pool* of fixed-size pages plus one page table
+per slot: a request owns exactly ``ceil(positions / page_size)`` pages for
+its lifetime, long and short requests share the same pool, and the number
+of concurrently admitted requests scales with *pool memory*, not with the
+per-request cap.
+
+Device side (repro/models/lm.py::paged_gather / paged_scatter, called
+inside the jitted serving block): each row gathers its pages into a
+contiguous (table_width * page_size) view for attention and fresh k/v
+scatter back through the table.  Host side (this module): ``PagePool``
+does the allocation accounting — admission reserves a request's full
+lifetime of pages up front (deadlock-free: every admitted request can
+always finish and release), ``release`` returns them at reap, and a
+request whose pages are not free yet simply waits in the queue
+(*admission backpressure* instead of PR 6's hard ``max_len`` rejection).
+
+Page 0 is a sentinel: unallocated table entries point at it, and the
+batched decode scatter routes masked-out lanes (free / still-prefilling
+slots riding the dispatch) there, so a garbage lane can never write into
+a page another request owns.  Sentinel reads are harmless — attention
+masks positions past each row's write head to exactly zero weight.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+class PagePool:
+    """Host-side page accounting shared by every layer's pool arrays.
+
+    All layers use the same geometry and the same per-slot table (one
+    allocation covers the whole depth), so the pool tracks pages in units
+    of "one page across all layers".
+    """
+
+    def __init__(self, n_pages: int, page_size: int, slots: int,
+                 table_width: int):
+        if n_pages < 2:
+            raise ValueError("PagePool needs >= 2 pages (page 0 is the "
+                             "sentinel page and is never allocated)")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.table_width = int(table_width)
+        # page 0 reserved as the sentinel; allocate low ids first so tests
+        # and traces read naturally
+        self._free: List[int] = list(range(self.n_pages - 1, 0, -1))
+        self.tables = np.zeros((slots, table_width), np.int32)
+        self._owned: List[List[int]] = [[] for _ in range(slots)]
+        self.peak_pages_used = 0
+        self.admission_waits = 0       # admissions deferred on a full pool
+
+    # ------------------------------------------------------------------
+    @property
+    def usable_pages(self) -> int:
+        """Allocatable pages (total minus the sentinel)."""
+        return self.n_pages - 1
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.usable_pages - len(self._free)
+
+    def pages_for(self, positions: int) -> int:
+        """Pages needed to hold ``positions`` cache positions."""
+        return max(1, -(-int(positions) // self.page_size))
+
+    def can_admit(self, n_pages: int) -> bool:
+        return len(self._free) >= n_pages
+
+    def allocate(self, slot: int, n_pages: int):
+        """Reserve ``n_pages`` for ``slot`` and point the head of its table
+        row at them (the tail keeps the sentinel)."""
+        if self._owned[slot]:
+            raise RuntimeError(f"slot {slot} already owns pages")
+        if n_pages > self.table_width:
+            raise ValueError(
+                f"request needs {n_pages} pages but the table holds "
+                f"{self.table_width} (per-request cap)")
+        if len(self._free) < n_pages:
+            raise RuntimeError(
+                f"page pool exhausted: need {n_pages}, free "
+                f"{len(self._free)} — admission must check can_admit first")
+        ids = [self._free.pop() for _ in range(n_pages)]
+        self.tables[slot, :] = 0
+        self.tables[slot, :n_pages] = ids
+        self._owned[slot] = ids
+        self.peak_pages_used = max(self.peak_pages_used, self.used_pages)
+
+    def release(self, slot: int):
+        """Return a reaped slot's pages to the pool (table row back to the
+        sentinel).  Safe to call on a slot that owns nothing."""
+        self._free.extend(self._owned[slot])
+        self._owned[slot] = []
+        self.tables[slot, :] = 0
+
+    def stats(self) -> Dict[str, int]:
+        return {"pool_pages": self.usable_pages,
+                "page_size": self.page_size,
+                "free_pages": self.free_pages,
+                "peak_pages_used": self.peak_pages_used,
+                "admission_waits": self.admission_waits}

@@ -8,7 +8,7 @@ decode as a per-block program (the serving analogue of
 ``lm.make_layer_program``):
 
   embed(head, head_lora, tokens (R, S), index (R,)) -> x (R, S, d)
-  block(bp, block_lora, x, cache, index (R,), window) -> (x, new_cache)
+  block(bp, block_lora, x, <cache args>, index (R,), window) -> (x, ...)
   head(head, head_lora, x) -> logits (R, vocab)   [last slab position]
 
 Each entry point is ``jax.vmap``-ed over the row axis with the base tree
@@ -22,8 +22,18 @@ of each entry point.
 
 Per-row ``index`` (vs ``decode_step``'s shared scalar) is what lets rows at
 *different* sequence positions decode in one dispatch — the continuous
-batching engine (repro/serve/engine.py) relies on it.  Numerics match
-``decode_step`` exactly: same per-layer ops, same cache masking.
+batching engine (repro/serve/engine.py) relies on it.
+
+Attention families run against a **paged KV cache**: the block entry point
+takes the shared per-layer page pools (``pool_k``/``pool_v``, donated) plus
+per-row page tables.  Inside the jit each row gathers its pages into a
+contiguous strip (``lm.paged_gather``) and attends in ``cache_mode="append"``
+(stale strip positions masked, fresh k/v appended with true positions); the
+fresh k/v of *all* rows then scatter into the pools through the tables in
+one batched indexed update (``lm.paged_scatter``) — writes stay outside the
+vmap because vmapped writes to a shared pool have no batched meaning.  SSM
+state is tiny and per-row, so the ssm/hybrid recurrent leaves keep the dense
+per-row cache layout.
 """
 from __future__ import annotations
 
@@ -36,6 +46,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig, TrainConfig, dtype_of
 from repro.core.lora import merge_lora
 from repro.models import layers as L
+from repro.models import lm
 from repro.models import mamba2, moe as moe_mod
 from repro.models import transformer as T
 from repro.models.hymba import apply_hymba_block
@@ -89,35 +100,14 @@ def make_serve_program(cfg: ModelConfig, tcfg: TrainConfig, *,
                 jnp.minimum(idx, cfg.max_seq_len - s), s, axis=0)
         return x
 
-    def block_row(bp, blora, x, cache, idx, window):
+    def ssm_block_row(bp, blora, x, cache, idx, window):
         lp = merged(bp, blora)
         x1 = x[None]                                            # (1, S, d)
-        positions = row_positions(idx, x.shape[0])
-        if fam in ("dense", "vlm", "moe"):
-            kv = (cache["k"][None], cache["v"][None])
-            if fam == "moe":
-                y, (ck, cv), _ = moe_mod.apply_moe_block(
-                    lp, x1, cfg, tcfg, positions=positions, window=window,
-                    kv_cache=kv, cache_index=idx)
-            else:
-                y, (ck, cv) = T.apply_block(
-                    lp, x1, cfg, tcfg, positions=positions, window=window,
-                    kv_cache=kv, cache_index=idx)
-            return y[0], {"k": ck[0], "v": cv[0]}
-        if fam == "ssm":
-            h, st = mamba2.apply_mamba(
-                lp["mamba"], L.apply_norm(lp["ln1"], x1, cfg.norm_variant),
-                cfg, tcfg,
-                state={"conv": cache["conv"][None], "ssm": cache["ssm"][None]})
-            return (x1 + h)[0], {"conv": st["conv"][0], "ssm": st["ssm"][0]}
-        # hybrid
-        y, (ck, cv), st = apply_hymba_block(
-            lp, x1, cfg, tcfg, positions=positions, window=window,
-            kv_cache=(cache["k"][None], cache["v"][None]), cache_index=idx,
-            ssm_state={"conv": cache["conv"][None],
-                       "ssm": cache["ssm"][None]})
-        return y[0], {"k": ck[0], "v": cv[0],
-                      "conv": st["conv"][0], "ssm": st["ssm"][0]}
+        h, st = mamba2.apply_mamba(
+            lp["mamba"], L.apply_norm(lp["ln1"], x1, cfg.norm_variant),
+            cfg, tcfg,
+            state={"conv": cache["conv"][None], "ssm": cache["ssm"][None]})
+        return (x1 + h)[0], {"conv": st["conv"][0], "ssm": st["ssm"][0]}
 
     def head_row(head, hlora, x):
         hp = merged(head, hlora)
@@ -127,11 +117,63 @@ def make_serve_program(cfg: ModelConfig, tcfg: TrainConfig, *,
                            cfg.vocab_size)
         return logits[0, 0]                                     # (vocab,)
 
-    # the cache is consumed exactly once per block call — donate it so the
-    # decode loop updates slot caches in place instead of doubling them
+    # ------------------------------------------------------------------
+    # paged block (attention families): per-row gather + append-mode
+    # attention inside the vmap, one batched pool scatter outside it
+    # ------------------------------------------------------------------
+    def paged_block(bp, blora, x, pool_k, pool_v, tables, idx, window,
+                    cache):
+        def attn_row(bl, x_r, tab_r, idx_r, cache_r):
+            lp = merged(bp, bl)
+            view = (lm.paged_gather(pool_k, tab_r)[None],
+                    lm.paged_gather(pool_v, tab_r)[None])
+            positions = row_positions(idx_r, x_r.shape[0])
+            if fam == "moe":
+                y, (kf, vf), _ = moe_mod.apply_moe_block(
+                    lp, x_r[None], cfg, tcfg, positions=positions,
+                    window=window, kv_cache=view, cache_index=idx_r,
+                    cache_mode="append")
+                return y[0], kf[0], vf[0], cache_r
+            if fam == "hybrid":
+                y, (kf, vf), st = apply_hymba_block(
+                    lp, x_r[None], cfg, tcfg, positions=positions,
+                    window=window, kv_cache=view, cache_index=idx_r,
+                    cache_mode="append",
+                    ssm_state={"conv": cache_r["conv"][None],
+                               "ssm": cache_r["ssm"][None]})
+                return y[0], kf[0], vf[0], {"conv": st["conv"][0],
+                                            "ssm": st["ssm"][0]}
+            y, (kf, vf) = T.apply_block(
+                lp, x_r[None], cfg, tcfg, positions=positions,
+                window=window, kv_cache=view, cache_index=idx_r,
+                cache_mode="append")
+            return y[0], kf[0], vf[0], cache_r
+
+        y, kf, vf, new_cache = jax.vmap(
+            attn_row, in_axes=(0, 0, 0, 0, 0))(blora, x, tables, idx, cache)
+        pool_k = lm.paged_scatter(pool_k, tables, idx, kf)
+        pool_v = lm.paged_scatter(pool_v, tables, idx, vf)
+        if fam == "hybrid":
+            return y, pool_k, pool_v, new_cache
+        return y, pool_k, pool_v
+
+    # the per-row recurrent cache (ssm) and the page pools are each
+    # consumed exactly once per block call — donate them so the decode
+    # loop updates the big buffers in place instead of doubling them
+    if fam == "ssm":
+        block = functools.partial(jax.jit, donate_argnums=(3,))(
+            jax.vmap(ssm_block_row, in_axes=(None, 0, 0, 0, 0, None)))
+    elif fam == "hybrid":
+        block = functools.partial(jax.jit, donate_argnums=(3, 4, 8))(
+            paged_block)
+    else:
+        def dense_block(bp, blora, x, pool_k, pool_v, tables, idx, window):
+            y, pk, pv = paged_block(bp, blora, x, pool_k, pool_v, tables,
+                                    idx, window, {})
+            return y, pk, pv
+        block = functools.partial(jax.jit, donate_argnums=(3, 4))(dense_block)
     return ServeProgram(
         embed=jax.jit(jax.vmap(embed_row, in_axes=(None, 0, 0, 0))),
-        block=functools.partial(jax.jit, donate_argnums=(3,))(
-            jax.vmap(block_row, in_axes=(None, 0, 0, 0, 0, None))),
+        block=block,
         head=jax.jit(jax.vmap(head_row, in_axes=(None, 0, 0))),
     )
