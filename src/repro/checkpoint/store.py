@@ -218,20 +218,37 @@ class CheckpointStore:
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
+        # _thread is owned by the caller thread (save_*/wait are never
+        # called concurrently); _error crosses the writer boundary
         self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self._error: Optional[BaseException] = None  # guarded-by: _lock
 
     def wait(self):
+        """Join the in-flight background write, then surface any exception
+        it stored — a failed async save must fail the *next*
+        synchronization point (mirrors ``AsyncWriter._error``), not vanish
+        with its thread while training keeps overwriting the window."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        with self._lock:
+            err, self._error = self._error, None
+        if err is not None:
+            raise RuntimeError(
+                "async checkpoint write failed") from err
 
     def save_async(self, state, step: int, extra_meta=None):
         self.wait()
         host_state = jax.device_get(state)  # snapshot before returning
 
         def _write():
-            save(host_state, self.directory, step, keep=self.keep,
-                 extra_meta=extra_meta)
+            try:
+                save(host_state, self.directory, step, keep=self.keep,
+                     extra_meta=extra_meta)
+            except BaseException as e:  # surfaced on next wait()/save_*
+                with self._lock:
+                    self._error = e
 
         self._thread = threading.Thread(target=_write, daemon=False)
         self._thread.start()

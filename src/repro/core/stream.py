@@ -256,6 +256,7 @@ class StreamedTrainStep:
         return self._pos_cache[(b, s)]
 
     # ------------------------------------------------------------------
+    # hot-path
     def _sink(self, seg: int, names: List[str], grads: List[Any],
               first: bool, last: bool, n_micro: int):
         """Accumulate one segment's gradient leaves into the scratch store;
@@ -264,7 +265,8 @@ class StreamedTrainStep:
         — the sync defers to the end of the step."""
         gdata = self.grad_engine.acquire(seg)
         for n, g in zip(names, grads):
-            g = np.asarray(g, np.float32)
+            g = np.asarray(g, np.float32)  # sync-point: grads land in the
+            #                                host scratch store by design
             if first:
                 gdata[n][...] = g
             else:
@@ -279,7 +281,7 @@ class StreamedTrainStep:
         return self._sumsq([gdata[n] for n in names],
                            jnp.float32(1.0 / n_micro))
 
-    def _forward_sweep(self, mb, keep_acts: bool):
+    def _forward_sweep(self, mb, keep_acts: bool):  # hot-path
         """Stream the blocks forward as a three-deep pipeline: while block
         ``i`` computes (dispatch is asynchronous), block ``i+1`` converts
         host->device and block ``i+2`` pages in from flash.  Returns
@@ -322,7 +324,7 @@ class StreamedTrainStep:
             aux_sum = aux_sum + aux
         return head, acts, aux_sum, positions
 
-    def _two_sweeps(self, mb, first: bool, last: bool, n_micro: int):
+    def _two_sweeps(self, mb, first: bool, last: bool, n_micro: int):  # hot-path
         """Forward + backward over one micro-batch.  Returns
         (loss, metrics, sq_norm_contribution)."""
         if self.lora_mode:
@@ -361,7 +363,7 @@ class StreamedTrainStep:
                              jax.tree.leaves(dhead), first, last, n_micro)
         return loss, metrics, sq
 
-    def _two_sweeps_lora(self, mb, first: bool, last: bool, n_micro: int):
+    def _two_sweeps_lora(self, mb, first: bool, last: bool, n_micro: int):  # hot-path
         """PEFT variant: base segments are read-only; the backward sweep
         returns adapter cotangents which accumulate in memory (the adapter
         is tiny — no scratch segments needed)."""
@@ -407,7 +409,7 @@ class StreamedTrainStep:
                              jnp.float32(1.0 / n_micro))
         return loss, metrics, sq
 
-    def _update_sweep(self, lr, clip_scale: float, n_micro: int):
+    def _update_sweep(self, lr, clip_scale: float, n_micro: int):  # hot-path
         """Stream (p, m, v) + grad segments and AdamW each in place.  The
         sweep is software-pipelined one segment deep (window permitting):
         segment ``i``'s dispatched AdamW computes while segment ``i+1``'s
@@ -467,7 +469,7 @@ class StreamedTrainStep:
         self._acc = None
 
     # ------------------------------------------------------------------
-    def __call__(self, batch, step: int):
+    def __call__(self, batch, step: int):  # hot-path
         tcfg = self.tcfg
         n = tcfg.microbatches
         micros = split_batch(batch, n) if n > 1 else None
@@ -478,7 +480,7 @@ class StreamedTrainStep:
             loss_sum = loss_sum + loss     # device scalar until step end
             sq = sq + s
         # the one host sync of the step: clipping needs the global norm
-        gnorm = math.sqrt(float(sq))
+        gnorm = math.sqrt(float(sq))  # sync-point: the step's one sync
         if tcfg.grad_clip > 0:
             clip_scale = min(1.0, tcfg.grad_clip / max(gnorm, 1e-9))
         else:
@@ -492,7 +494,8 @@ class StreamedTrainStep:
         else:
             self._update_sweep(lr, clip_scale, n)
         metrics = dict(metrics)
-        metrics["loss"] = float(loss_sum) / n
+        metrics["loss"] = float(loss_sum) / n  # sync-point: post-update,
+        #                                        nothing left to overlap
         metrics["grad_norm"] = gnorm
         metrics["lr"] = lr
         return metrics["loss"], metrics

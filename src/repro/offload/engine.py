@@ -23,6 +23,7 @@ turns into a compute/IO overlap breakdown.
 """
 from __future__ import annotations
 
+import functools
 import os
 import threading
 import time
@@ -134,17 +135,17 @@ class Prefetcher:
         self._depth = max(1, depth)
         self._encoded = encoded
         self._lock = threading.Condition()
-        self._queue: list = []
-        self._buffers: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()
-        self._inflight: set = set()
-        self._stale: set = set()
+        self._queue: list = []                  # guarded-by: _lock
+        self._buffers: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()  # guarded-by: _lock
+        self._inflight: set = set()             # guarded-by: _lock
+        self._stale: set = set()                # guarded-by: _lock
         # reuse pool: only when the jit boundary copies host buffers at
         # this store's actual leaf geometries (else an overwritten recycled
         # buffer could mutate a live device array)
         self._pooling = not encoded and _host_to_device_copies(store)
-        self._pool: "OrderedDict[Tuple, list]" = OrderedDict()
-        self._pool_sets = 0      # total buffer sets across all signatures
-        self._closed = False
+        self._pool: "OrderedDict[Tuple, list]" = OrderedDict()  # guarded-by: _lock
+        self._pool_sets = 0     # guarded-by: _lock (total buffer sets, all signatures)
+        self._closed = False                    # guarded-by: _lock
         self.prefetch_hits = 0
         self.sync_loads = 0
         self.forced_drops = 0
@@ -350,16 +351,16 @@ class AsyncWriter:
         self._max = max(1, max_pending)
         self._recycle = recycle
         self._lock = threading.Condition()
-        self._pending: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()
-        self._writing: Optional[int] = None
-        self._writing_data: Optional[Dict[str, np.ndarray]] = None
-        self._stolen = False
-        self._closed = False
-        self._error: Optional[BaseException] = None
+        self._pending: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()  # guarded-by: _lock
+        self._writing: Optional[int] = None     # guarded-by: _lock
+        self._writing_data: Optional[Dict[str, np.ndarray]] = None  # guarded-by: _lock
+        self._stolen = False                    # guarded-by: _lock
+        self._closed = False                    # guarded-by: _lock
+        self._error: Optional[BaseException] = None  # guarded-by: _lock
         # background writes land in the page cache only (memcpy-cheap and
         # immediately visible to reads); segments touched since the last
         # barrier are fsynced there — durability exactly at the fence
-        self._unsynced: set = set()
+        self._unsynced: set = set()             # guarded-by: _lock
         self.writes = 0
         self.bytes_landed = 0    # bytes that actually reached flash — a
         #                          stolen-back segment never counts
@@ -367,7 +368,7 @@ class AsyncWriter:
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
-    def _raise_pending_error(self):   # call holding the lock
+    def _raise_pending_error(self):   # holds: _lock
         if self._error is not None:
             err, self._error = self._error, None
             raise RuntimeError("async segment write-back failed") from err
@@ -481,6 +482,41 @@ class AsyncWriter:
                         self._lock.notify_all()
 
 
+def _single_owner(fn):
+    """Detect concurrent entry into a window-mutating OffloadEngine call.
+
+    The window state (``_resident``/``_dirty``/``_pinned``) is deliberately
+    unlocked: the engine's contract is single-owner-at-a-time — exactly one
+    thread issues window calls at any moment, though ownership may transfer
+    at quiescent points (e.g. construction on the main thread, then the
+    StreamedBase staging worker for the steady-state walk).  This wrapper
+    records the thread currently inside a window call and raises on overlap.
+    It is a *detector*, not a lock: a true race may slip the check on a
+    given run, but under the schedule-fuzzing harness (which stretches
+    every interleaving window) violations surface deterministically."""
+    name = fn.__name__
+
+    @functools.wraps(fn)
+    def wrapped(self, *args, **kwargs):
+        me = threading.get_ident()
+        owner = self._owner
+        if owner is not None and owner != me:
+            raise RuntimeError(
+                f"concurrent OffloadEngine.{name}(): thread {me} entered "
+                f"while thread {owner} is inside a window call — window "
+                "operations are single-owner-at-a-time (see CONCURRENCY.md); "
+                "route pulls through one thread")
+        self._owner = me
+        self._owner_depth += 1
+        try:
+            return fn(self, *args, **kwargs)
+        finally:
+            self._owner_depth -= 1
+            if self._owner_depth == 0:
+                self._owner = None
+    return wrapped
+
+
 class OffloadEngine:
     """LRU-resident window + prefetch + dirty write-back over segments."""
 
@@ -502,9 +538,15 @@ class OffloadEngine:
         if encoded and not read_only:
             raise ValueError("an encoded (no-decode) window cannot write "
                              "back; encoded=True requires read_only=True")
+        # single-owner window state: no lock by design — every mutating
+        # call is wrapped in @_single_owner, which raises on concurrent
+        # entry from a second thread (ownership transfers only at
+        # quiescent points; ``prefetch`` is the one cross-thread-safe call)
         self._resident: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()
         self._dirty: set = set()
         self._pinned: set = set()
+        self._owner: Optional[int] = None    # thread inside a window call
+        self._owner_depth = 0
         self._prefetcher: Optional[Prefetcher] = (
             Prefetcher(store, depth=max(1, max_resident - 1),
                        encoded=encoded)
@@ -535,12 +577,17 @@ class OffloadEngine:
         return int(sum(_data_nbytes(d) for d in self._resident.values()))
 
     def prefetch(self, seg: int):
+        # cross-thread-safe by design (NOT @_single_owner): the serving
+        # main thread prefetches ahead while the staging worker acquires —
+        # it only reads _resident opportunistically and hands off to the
+        # (internally locked) Prefetcher/AsyncWriter
         if self._prefetcher is None or seg in self._resident:
             return
         if self._writer is not None and self._writer.holds(seg):
             return   # acquire will steal it back; a read now races the write
         self._prefetcher.schedule(seg)
 
+    @_single_owner
     def acquire(self, seg: int) -> Dict[str, np.ndarray]:
         """Make segment ``seg`` resident (evicting + writing back LRU
         segments as needed) and return its leaf dict.  The dict is owned by
@@ -596,6 +643,7 @@ class OffloadEngine:
         return (self._prefetcher.buffer_bytes()
                 if self._prefetcher is not None else 0)
 
+    @_single_owner
     def mark_dirty(self, seg: int):
         if self.read_only:
             raise RuntimeError(
@@ -635,6 +683,7 @@ class OffloadEngine:
             self.bytes_written += self.store.seg_nbytes[seg]
         self.t_write_block_s += time.perf_counter() - t0
 
+    @_single_owner
     def pin(self, seg: int):
         """Exempt ``seg`` from LRU eviction while it stays resident.  The
         serving tier pins the head segment (embed/ln_f), which is touched
@@ -644,15 +693,18 @@ class OffloadEngine:
         like any other; it is a residency floor, not free memory."""
         self._pinned.add(seg)
 
+    @_single_owner
     def unpin(self, seg: int):
         self._pinned.discard(seg)
 
+    @_single_owner
     def release(self, seg: int):
         """Drop a segment from the window (writing back if dirty)."""
         data = self._resident.pop(seg, None)
         if data is not None:
             self._writeback(seg, data)
 
+    @_single_owner
     def flush(self):
         """Write back every dirty resident segment and fence the background
         write queue (the window stays resident).  This is the barrier every
@@ -666,10 +718,12 @@ class OffloadEngine:
             self._writer.barrier()
             self.t_write_block_s += time.perf_counter() - t0
 
+    @_single_owner
     def drop_all(self):
         for seg in list(self._resident):
             self.release(seg)
 
+    @_single_owner
     def close(self):
         self.flush()
         if self._writer is not None:

@@ -17,8 +17,9 @@ that does not match the serving base:
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +48,12 @@ class AdapterCache:
         self._shapes = {n: s.shape for n, s in
                         flatten_names(template, is_leaf=is_spec)}
         self._zero = None
+        # serving contract: get() runs on the engine-step thread only, so
+        # the LRU OrderedDict is deliberately unlocked — _owner detects
+        # concurrent entry instead of letting the dict corrupt silently
+        # (audit: the single caller is ServeEngine.step's admit path)
         self._cache: "OrderedDict[str, object]" = OrderedDict()
+        self._owner: Optional[int] = None
         self.loads = 0
         self.hits = 0
         self.evictions = 0
@@ -82,21 +88,34 @@ class AdapterCache:
     # ------------------------------------------------------------------
     def get(self, path: str):
         """The adapter tree for ``path`` (loaded + validated on first touch,
-        then LRU-resident until ``capacity`` newer adapters displace it)."""
-        hit = self._cache.get(path)
-        if hit is not None:
-            self.hits += 1
-            self._cache.move_to_end(path)
-            return hit
-        lora, meta = load_adapter(path)
-        self._validate(path, meta, lora)
-        tree = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), lora)
-        self.loads += 1
-        self._cache[path] = tree
-        while len(self._cache) > self.capacity:
-            self._cache.popitem(last=False)
-            self.evictions += 1
-        return tree
+        then LRU-resident until ``capacity`` newer adapters displace it).
+        Single-owner-at-a-time: raises on concurrent entry from a second
+        thread (the LRU mutation is not locked by design)."""
+        me = threading.get_ident()
+        owner = self._owner
+        if owner is not None and owner != me:
+            raise RuntimeError(
+                f"concurrent AdapterCache.get(): thread {me} entered while "
+                f"thread {owner} is inside — adapter admission is "
+                "single-threaded (see CONCURRENCY.md)")
+        self._owner = me
+        try:
+            hit = self._cache.get(path)
+            if hit is not None:
+                self.hits += 1
+                self._cache.move_to_end(path)
+                return hit
+            lora, meta = load_adapter(path)
+            self._validate(path, meta, lora)
+            tree = jax.tree.map(lambda a: jnp.asarray(a, jnp.float32), lora)
+            self.loads += 1
+            self._cache[path] = tree
+            while len(self._cache) > self.capacity:
+                self._cache.popitem(last=False)
+                self.evictions += 1
+            return tree
+        finally:
+            self._owner = None
 
     def zero(self):
         """The all-zero adapter (b = 0, so W' = W bitwise) — used for batch

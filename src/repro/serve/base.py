@@ -30,6 +30,7 @@ host->device traffic.  ``staging=False`` keeps the fully synchronous walk
 """
 from __future__ import annotations
 
+import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict
@@ -81,7 +82,12 @@ class StreamedBase:
         self.base_quant = lstate.base_quant or ""
         self.n_layers = int(lstate.n_layers)
         self.staging = bool(staging)
-        self._staged: Dict[int, Future] = {}  # block idx -> device-tree fut
+        # the staged-future map is touched from the dispatch thread while
+        # the worker completes futures, and close() may race a late
+        # stage() — the only shared mutable state here, so it gets a lock
+        self._lock = threading.Lock()
+        self._staged: Dict[int, Future] = {}  # guarded-by: _lock
+        self._closed = False                  # guarded-by: _lock
         self._head_dev = None                 # head tree, staged once per run
         self.t_h2d_s = 0.0                    # host->device conversion time
         # one worker: window pulls + conversions run off the dispatch
@@ -112,7 +118,10 @@ class StreamedBase:
         """Block ``i``'s device param tree: join the staged future when the
         pipeline ran ahead, else pull + convert (still via the worker, so
         acquires stay single-threaded)."""
-        fut = self._staged.pop(i, None)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("StreamedBase is closed")
+            fut = self._staged.pop(i, None)
         if fut is not None:
             return fut.result()
         if self._worker is not None:
@@ -137,12 +146,16 @@ class StreamedBase:
         dispatched, so the copy runs on another core while that compute
         (and the engine's dispatch loop) proceed.  Bounded to two staged
         blocks (the one consumed next and this one)."""
-        if not self.staging or not (0 <= i < self.n_layers) \
-                or i in self._staged:
+        if not self.staging or not (0 <= i < self.n_layers):
             return
-        self._staged[i] = self._worker.submit(self._pull_block, i)
-        while len(self._staged) > 2:
-            self._staged.pop(next(iter(self._staged)))
+        with self._lock:
+            if self._closed or i in self._staged:
+                return  # closed: a late stage() must not resurrect the pool
+            self._staged[i] = self._worker.submit(self._pull_block, i)
+            while len(self._staged) > 2:
+                # dropped futures are cache evictions, not lost errors: a
+                # failed pull re-raises when block(i) re-pulls it
+                self._staged.pop(next(iter(self._staged)))
 
     def stats(self):
         s = dict(self.lstate.stats())
@@ -155,11 +168,27 @@ class StreamedBase:
         return s
 
     def close(self):
+        """Shutdown ordering: mark closed (so no new stage() lands), drain
+        the worker (so no pull is mid-flight when the store unmaps), then
+        release the window.  An in-flight stage future that failed is
+        re-raised *after* cleanup — a conversion error must not vanish
+        with the pool, and must not leak the store either."""
+        with self._lock:
+            already = self._closed
+            self._closed = True
+            staged = list(self._staged.values())
+            self._staged.clear()
         if self._worker is not None:
             # drain in-flight conversions before the store goes away
             self._worker.shutdown(wait=True)
             self._worker = None
-        self._staged.clear()
         self._head_dev = None
-        self.lstate.engine.unpin(self.lstate.head_segment)
-        self.lstate.close()
+        if not already:
+            self.lstate.engine.unpin(self.lstate.head_segment)
+            self.lstate.close()
+        err = next((f.exception() for f in staged
+                    if f.done() and not f.cancelled() and f.exception()),
+                   None)
+        if err is not None:
+            raise RuntimeError("staged block pull failed during close") \
+                from err

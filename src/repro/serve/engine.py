@@ -271,7 +271,7 @@ class ServeEngine:
             self.admitted += 1
             self._stack_dirty = True
 
-    def _block_call(self, i: int, blora, x, tab, idx, cache):
+    def _block_call(self, i: int, blora, x, tab, idx, cache):  # hot-path
         """One per-layer block dispatch, routing the family's cache
         arguments; returns the new activations (pools/cache updated)."""
         bp = self.base.block(i)
@@ -293,7 +293,7 @@ class ServeEngine:
         pools["k"], pools["v"] = pk, pv
         return x
 
-    def _prefill_step(self, j: int, slot: _Slot, head_bp):
+    def _prefill_step(self, j: int, slot: _Slot, head_bp):  # hot-path
         p = slot.prompt
         cs = min(self.chunk, len(p) - slot.filled)
         slab = jnp.asarray(p[None, slot.filled:slot.filled + cs], jnp.int32)
@@ -343,7 +343,7 @@ class ServeEngine:
                 stacked, self.n_layers)
         self._stack_dirty = False
 
-    def _decode_step(self, active: List[int], head_bp):
+    def _decode_step(self, active: List[int], head_bp):  # hot-path
         if self._stack_dirty:
             self._restack()
         idxs = np.zeros((self.n_slots,), np.int32)
@@ -383,17 +383,19 @@ class ServeEngine:
         if not self.defer_tokens:
             self._materialize()      # per-step host round trip (unstaged)
 
-    def _materialize(self):
+    def _materialize(self):  # hot-path
         """Flush the deferred token trace: one host pull for every step
         since the last flush (satellite of the deferred-argmax tentpole —
         bookkeeping is batched per *flush*, not per step per slot)."""
         if not self._trace:
             return
         t0 = time.perf_counter()
-        arr = np.asarray(jnp.stack([t for t, _ in self._trace]))
+        arr = np.asarray(jnp.stack([t for t, _ in self._trace]))  # sync-point:
+        #   the deferred-argmax flush — one pull amortized over the trace
         for k, (_, act) in enumerate(self._trace):
             for j in act:
-                self.slots[j].generated.append(int(arr[k, j]))
+                self.slots[j].generated.append(int(arr[k, j]))  # sync-point:
+                #   host numpy indexing (arr already pulled above)
         self._trace.clear()
         self.t_decode_s += time.perf_counter() - t0
 
@@ -414,7 +416,7 @@ class ServeEngine:
                 self._stack_dirty = True
 
     # ------------------------------------------------------------------
-    def step(self) -> list:
+    def step(self) -> list:  # hot-path
         """One engine iteration: admit from the queue, advance every
         prefilling slot by one chunk, run one batched decode step over the
         active slots, emit finished requests.  Returns the finished list."""

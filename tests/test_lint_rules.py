@@ -1,0 +1,288 @@
+"""Fixture-level tests for the concurrency lint (tools.repro_analysis.lint).
+
+Each rule gets a minimal firing fixture and a minimal passing one,
+including reproductions of the exact pre-fix patterns the rules were
+built from: the PR 5 silent-writer-death thread body and unguarded
+touches of ``# guarded-by`` fields.  The final test asserts the real
+tree is clean — the CI gate in test form.
+"""
+import os
+import textwrap
+
+from tools.repro_analysis.lint import lint_source, run_lint
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _codes(src, path="<fixture>", select=None):
+    return [v.code for v in lint_source(textwrap.dedent(src), path, select)]
+
+
+# ---------------------------------------------------------------------------
+# RA001 — guarded-by lock discipline
+# ---------------------------------------------------------------------------
+
+GUARDED_HEADER = """
+import threading
+
+class Box:
+    def __init__(self):
+        self._lock = threading.Condition()
+        self._pending = []   # guarded-by: _lock
+"""
+
+
+def test_ra001_fires_on_unguarded_touch():
+    src = GUARDED_HEADER + """
+    def poke(self):
+        self._pending.append(1)
+"""
+    assert _codes(src) == ["RA001"]
+
+
+def test_ra001_prefix_guarded_field_pattern():
+    # the pre-fix shape RA001 exists for: an error field declared guarded
+    # but read on the submit path without taking the lock first
+    src = GUARDED_HEADER.replace("_pending = []   ",
+                                 "_error = None   ") + """
+    def submit(self):
+        if self._error is not None:
+            raise RuntimeError("boom") from self._error
+"""
+    assert _codes(src) == ["RA001", "RA001"]
+
+
+def test_ra001_passes_inside_with_lock():
+    src = GUARDED_HEADER + """
+    def poke(self):
+        with self._lock:
+            self._pending.append(1)
+"""
+    assert _codes(src) == []
+
+
+def test_ra001_init_is_exempt_and_holds_honored():
+    src = GUARDED_HEADER + """
+    def _drain(self):   # holds: _lock
+        self._pending.clear()
+
+    def poke(self):
+        with self._lock:
+            self._drain()
+"""
+    assert _codes(src) == []
+
+
+def test_ra001_waiver():
+    src = GUARDED_HEADER + """
+    def peek(self):
+        return len(self._pending)  # unguarded-ok: racy len is fine here
+"""
+    assert _codes(src) == []
+
+
+# ---------------------------------------------------------------------------
+# RA002 — thread lifecycle
+# ---------------------------------------------------------------------------
+
+def test_ra002_fires_on_prefix_checkpoint_save_async():
+    # the exact pre-fix CheckpointStore.save_async shape: the background
+    # writer has a join (wait()) but no exception-surfacing try/except —
+    # a failed save vanished with its thread
+    src = """
+import threading
+
+class Store:
+    def __init__(self):
+        self._thread = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, state):
+        self.wait()
+
+        def _write():
+            save(state)
+
+        self._thread = threading.Thread(target=_write, daemon=False)
+        self._thread.start()
+"""
+    assert _codes(src, select=["RA002"]) == ["RA002"]
+
+
+def test_ra002_passes_on_surfacing_pattern():
+    src = """
+import threading
+
+class Store:
+    def __init__(self):
+        self._thread = None
+        self._error = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            raise RuntimeError() from self._error
+
+    def save_async(self, state):
+        def _write():
+            try:
+                save(state)
+            except BaseException as e:
+                self._error = e
+
+        self._thread = threading.Thread(target=_write)
+        self._thread.start()
+"""
+    assert _codes(src, select=["RA002"]) == []
+
+
+def test_ra002_fires_without_join():
+    src = """
+import threading
+
+def fire_and_forget(fn):
+    t = threading.Thread(target=fn)
+    t.start()
+"""
+    assert "RA002" in _codes(src, select=["RA002"])
+
+
+def test_ra002_executor_needs_shutdown_and_waiver_works():
+    bad = """
+from concurrent.futures import ThreadPoolExecutor
+
+class W:
+    def __init__(self):
+        self._pool = ThreadPoolExecutor(max_workers=1)
+"""
+    assert _codes(bad, select=["RA002"]) == ["RA002"]
+    good = bad + """
+    def close(self):
+        self._pool.shutdown(wait=True)
+"""
+    assert _codes(good, select=["RA002"]) == []
+    waived = bad.replace(
+        "ThreadPoolExecutor(max_workers=1)",
+        "ThreadPoolExecutor(max_workers=1)  # thread-ok: process-lifetime")
+    assert _codes(waived, select=["RA002"]) == []
+
+
+# ---------------------------------------------------------------------------
+# RA003 — host syncs in hot paths
+# ---------------------------------------------------------------------------
+
+def test_ra003_fires_on_sync_in_hot_path():
+    src = """
+class Step:
+    def run(self, x):  # hot-path
+        return float(x)
+"""
+    assert _codes(src, select=["RA003"]) == ["RA003"]
+
+
+def test_ra003_sync_point_waiver_and_cold_path_ignored():
+    src = """
+import numpy as np
+
+class Step:
+    def run(self, x):  # hot-path
+        return float(x)  # sync-point: end-of-step metric
+
+    def report(self, x):
+        return np.asarray(x)
+"""
+    assert _codes(src, select=["RA003"]) == []
+
+
+def test_ra003_designated_functions_must_be_annotated():
+    # deleting the # hot-path comment on a designated function is itself
+    # a violation — the rule cannot be silently dropped
+    src = """
+class StreamedTrainStep:
+    def _sink(self, seg):
+        pass
+"""
+    codes = _codes(src, path="src/repro/core/stream.py", select=["RA003"])
+    assert codes == ["RA003"]
+
+
+# ---------------------------------------------------------------------------
+# RA004 — donated-argument reuse
+# ---------------------------------------------------------------------------
+
+DONATING = """
+import jax
+
+step = jax.jit(_step, donate_argnums=(0,))
+"""
+
+
+def test_ra004_fires_on_reuse_after_donation():
+    src = DONATING + """
+def run(state, batch):
+    out = step(state, batch)
+    return state
+"""
+    assert _codes(src, select=["RA004"]) == ["RA004"]
+
+
+def test_ra004_rebinding_is_safe():
+    src = DONATING + """
+def run(state, batch):
+    state = step(state, batch)
+    return state
+"""
+    assert _codes(src, select=["RA004"]) == []
+
+
+def test_ra004_loop_wraparound_fires():
+    src = DONATING + """
+def run(state, batches):
+    for b in batches:
+        step(state, b)
+"""
+    assert _codes(src, select=["RA004"]) == ["RA004"]
+
+
+def test_ra004_other_scope_binding_not_confused():
+    # step_fn is donating in one function and a plain callable in another
+    # — the registry is scope-aware, so the second function is clean
+    src = """
+import jax
+
+def bench_jit(state, batch):
+    step_fn = jax.jit(_step, donate_argnums=(0,))
+    state = step_fn(state, batch)
+    return state
+
+def bench_stream(state, batch):
+    step_fn = make_streamed_step()
+    step_fn(state, batch)
+    return state
+"""
+    assert _codes(src, select=["RA004"]) == []
+
+
+def test_ra004_waiver():
+    src = DONATING + """
+def run(state, batch):
+    out = step(state, batch)  # donate-ok
+    return state
+"""
+    assert _codes(src, select=["RA004"]) == []
+
+
+# ---------------------------------------------------------------------------
+# the real tree is clean (the CI gate, in test form)
+# ---------------------------------------------------------------------------
+
+def test_repo_tree_is_clean():
+    paths = [os.path.join(REPO, p) for p in ("src", "tests", "benchmarks")]
+    violations = run_lint(paths)
+    assert violations == [], "\n".join(str(v) for v in violations)

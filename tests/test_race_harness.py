@@ -1,0 +1,214 @@
+"""Race-harness tests: pinned PR 5 bug replays (fail pre-fix, pass
+current), a seeded slice of every fuzz scenario, the shutdown-ordering
+satellites, and the harness's own machinery (watchdog, fuzzed
+primitives, ownership detectors).
+
+The full >= 200-interleavings-per-scenario sweep runs in CI via
+``python -m tools.repro_analysis.race --quick``; here each scenario gets
+a handful of seeds so tier-1 stays fast.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from tools.repro_analysis import race, replays
+from tools.repro_analysis.schedules import (DeadlockError, FuzzedCondition,
+                                            FuzzedLock, Schedule,
+                                            fuzzed_primitives,
+                                            run_with_watchdog)
+
+TEST_SEEDS = range(4)
+
+
+# ---------------------------------------------------------------------------
+# pinned PR 5 replays: deterministic fail on pre-fix, pass on current
+# ---------------------------------------------------------------------------
+
+def test_replay_pool_indexerror(tmp_path):
+    replays.replay_pool_indexerror(str(tmp_path / "pre"), pre_fix=True)
+    replays.replay_pool_indexerror(str(tmp_path / "cur"), pre_fix=False)
+
+
+def test_replay_silent_writer_death(tmp_path):
+    replays.replay_silent_writer_death(str(tmp_path / "pre"), pre_fix=True)
+    replays.replay_silent_writer_death(str(tmp_path / "cur"), pre_fix=False)
+
+
+def test_replay_take_overdrop(tmp_path):
+    replays.replay_take_overdrop(str(tmp_path / "pre"), pre_fix=True)
+    replays.replay_take_overdrop(str(tmp_path / "cur"), pre_fix=False)
+
+
+# ---------------------------------------------------------------------------
+# seeded scenario slices (the CI job runs the full sweep)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(race.SCENARIOS))
+def test_scenario_seeded_slice(name):
+    for seed in TEST_SEEDS:
+        race.run_scenario(name, seed, watchdog_s=60.0)
+
+
+# the two shutdown-ordering satellites, called out explicitly so a failure
+# names the contract rather than a scenario slug
+
+def test_streamed_base_close_with_inflight_stage_future(tmp_path):
+    for seed in TEST_SEEDS:
+        race.scenario_close_inflight_stage(seed, str(tmp_path / str(seed)))
+
+
+def test_engine_close_with_nonempty_write_queue(tmp_path):
+    for seed in TEST_SEEDS:
+        race.scenario_close_pending_writes(seed, str(tmp_path / str(seed)))
+
+
+# ---------------------------------------------------------------------------
+# harness machinery
+# ---------------------------------------------------------------------------
+
+def test_watchdog_flags_deadlock_with_stacks():
+    release = threading.Event()
+    with pytest.raises(DeadlockError) as ei:
+        run_with_watchdog(lambda: release.wait(30.0), timeout_s=0.3,
+                          label="hang")
+    assert "thread" in str(ei.value)     # the stack dump is attached
+    release.set()                        # unpark the leaked worker
+
+
+def test_watchdog_propagates_scenario_exceptions():
+    def boom():
+        raise ValueError("scenario assertion")
+    with pytest.raises(ValueError, match="scenario assertion"):
+        run_with_watchdog(boom, timeout_s=5.0)
+
+
+def test_schedule_is_seed_deterministic():
+    def decisions(seed):
+        sched = Schedule(seed)
+        out = []
+        for _ in range(64):
+            rng = sched._rng()
+            out.append(rng.random())
+        return out
+    assert decisions(7) == decisions(7)
+    assert decisions(7) != decisions(8)
+
+
+def test_fuzzed_primitives_patch_and_restore():
+    real_cond, real_lock = threading.Condition, threading.Lock
+    sched = Schedule(0)
+    with fuzzed_primitives(sched):
+        c = threading.Condition()
+        lk = threading.Lock()
+        assert isinstance(c, FuzzedCondition)
+        assert isinstance(lk, FuzzedLock)
+        with lk:
+            pass
+        with c:
+            c.notify_all()
+    assert threading.Condition is real_cond
+    assert threading.Lock is real_lock
+    assert sched.points > 0
+
+
+def test_fuzzed_condition_bounds_waits():
+    sched = Schedule(3)
+    with fuzzed_primitives(sched):
+        c = threading.Condition()
+    t0 = time.perf_counter()
+    with c:
+        woke = c.wait()                  # nobody notifies: spurious wakeup
+    assert not woke
+    assert time.perf_counter() - t0 < 5.0
+
+
+# ---------------------------------------------------------------------------
+# ownership detectors (satellite audit: engine window + adapter cache)
+# ---------------------------------------------------------------------------
+
+def test_engine_window_rejects_concurrent_entry(tmp_path):
+    store = replays.make_store(str(tmp_path / "s"), n_segments=3)
+    eng = race.OffloadEngine(store, max_resident=2, prefetch=False)
+    gate_in, gate_out = threading.Event(), threading.Event()
+    orig = eng._writeback
+
+    def slow_writeback(seg, data):
+        gate_in.set()
+        gate_out.wait(10.0)
+        return orig(seg, data)
+
+    eng._writeback = slow_writeback
+    errs = []
+
+    def owner():
+        eng.acquire(0)
+        eng.acquire(1)
+        eng.acquire(2)                   # evicts -> parks in slow_writeback
+
+    t = threading.Thread(target=owner, daemon=True)  # thread-ok: joined below, failure surfaces via the asserts
+    t.start()
+    assert gate_in.wait(10.0)
+    try:
+        with pytest.raises(RuntimeError, match="single-owner"):
+            eng.acquire(0)               # second thread mid-window-call
+    finally:
+        gate_out.set()
+        t.join(10.0)
+    assert not t.is_alive()
+    eng._writeback = orig
+    eng.close()                          # ownership transferred back: fine
+
+
+def test_adapter_cache_rejects_concurrent_get(tmp_path):
+    from repro.serve.adapters import AdapterCache
+    cache = AdapterCache.__new__(AdapterCache)  # contract check only
+    cache._cache = {}
+    cache._owner = None
+    cache.hits = 0
+    gate_in, gate_out = threading.Event(), threading.Event()
+
+    from collections import OrderedDict
+
+    class _Gate(OrderedDict):
+        def get(self, k, default=None):
+            gate_in.set()
+            gate_out.wait(10.0)
+            return OrderedDict.get(self, k, default)
+
+    cache._cache = _Gate({"a": object()})
+    out = {}
+
+    def first():
+        out["tree"] = cache.get("a")
+
+    t = threading.Thread(target=first, daemon=True)  # thread-ok: joined below, out["tree"] asserted
+    t.start()
+    assert gate_in.wait(10.0)
+    try:
+        with pytest.raises(RuntimeError, match="single-threaded"):
+            cache.get("a")
+    finally:
+        gate_out.set()
+        t.join(10.0)
+    assert out["tree"] is not None
+    assert cache.get("a") is out["tree"]  # owner released: works again
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-store satellite: async save errors surface on wait()
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_save_async_error_surfaces(tmp_path, monkeypatch):
+    from repro.checkpoint import store as ckpt_store
+    cs = ckpt_store.CheckpointStore(str(tmp_path / "ckpt"))
+
+    def bad_save(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ckpt_store, "save", bad_save)
+    cs.save_async({"w": np.zeros(2, np.float32)}, step=1)
+    with pytest.raises(RuntimeError, match="async checkpoint write"):
+        cs.wait()
+    cs.wait()                            # error consumed: second wait clean

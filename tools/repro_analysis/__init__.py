@@ -1,0 +1,13 @@
+"""Concurrency-correctness tier: repo lint rules + schedule-fuzzing race
+harness for the offload/serving threads.
+
+Two halves (see CONCURRENCY.md for the thread/lock ownership map):
+
+- ``tools.repro_analysis.lint``   AST lint pass enforcing the repo's
+  concurrency conventions (``# guarded-by:``, thread lifecycle,
+  hot-path host syncs, jit donation safety)
+- ``tools.repro_analysis.race``   deterministic schedule-fuzzing harness
+  driving the real OffloadEngine / Prefetcher / AsyncWriter /
+  StreamedBase through seeded interleavings under invariant checks,
+  plus pinned replays of historical (pre-fix) concurrency bugs
+"""

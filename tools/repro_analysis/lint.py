@@ -1,0 +1,758 @@
+"""Repo-specific concurrency lint (``python -m tools.repro_analysis.lint``).
+
+Every concurrency bug shipped so far — the buffer-pool ``IndexError``, the
+silently-dying ``AsyncWriter`` thread, the Prefetcher stale-read race —
+was caught by human review only.  This pass machine-checks the conventions
+those reviews established, over plain ``ast`` (zero new dependencies):
+
+RA001  guarded-by        A field declared ``# guarded-by: _lock`` on its
+                         ``__init__`` assignment line may only be touched
+                         inside ``with self._lock:`` (or in a function
+                         annotated ``# holds: _lock``, which documents the
+                         AsyncWriter._raise_pending_error calling contract).
+RA002  thread-lifecycle  Every ``threading.Thread`` / ``ThreadPoolExecutor``
+                         construction needs a reachable ``join``/``shutdown``
+                         in its owning scope, and a Thread's target must
+                         contain an exception-surfacing ``try``/``except``
+                         (the ``AsyncWriter._error`` pattern — an unhandled
+                         exception kills the thread silently and turns the
+                         next queue interaction into a deadlock).
+RA003  host-sync-in-hot-path  Inside functions annotated ``# hot-path``
+                         (the streamed sweep loops and the serving
+                         step/decode paths), host synchronizations —
+                         ``float()``/``int()`` on non-literals,
+                         ``np.asarray``/``np.array``, ``jax.device_get``,
+                         ``.item()``, ``.block_until_ready()`` — must sit on
+                         a line whitelisted with ``# sync-point``.  The
+                         functions in ``REQUIRED_HOT_PATH`` must carry the
+                         annotation (so deleting the comment cannot silently
+                         drop the rule).
+RA004  donated-arg-reuse A variable passed at a donated position of a
+                         ``jax.jit(..., donate_argnums=...)`` function
+                         defined in the same module must not be read after
+                         the call (its buffer may have been invalidated) —
+                         including wraparound reuse in a loop when the
+                         variable is never rebound.
+
+Per-line waivers (each must carry a reason where the syntax allows one):
+``# unguarded-ok: <why>`` (RA001), ``# thread-ok: <why>`` (RA002),
+``# sync-point`` (RA003), ``# donate-ok`` (RA004).
+
+Exit status 1 when any violation is found; 0 on a clean tree.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import io
+import os
+import re
+import sys
+import tokenize
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+# Functions that MUST be annotated ``# hot-path`` (keyed by path suffix):
+# the streamed trainer's sweep loops and the serving engine's step/decode
+# paths.  PR 5 and PR 7 each re-established the no-host-sync invariant in
+# these by hand; the lint keeps it machine-checked.
+REQUIRED_HOT_PATH: Dict[str, Tuple[str, ...]] = {
+    "repro/core/stream.py": (
+        "_forward_sweep", "_two_sweeps", "_two_sweeps_lora",
+        "_update_sweep", "_sink", "__call__",
+    ),
+    "repro/serve/engine.py": (
+        "step", "_decode_step", "_prefill_step", "_block_call",
+        "_materialize",
+    ),
+}
+
+RULES = {
+    "RA001": "guarded-by: lock-guarded field touched outside its lock",
+    "RA002": "thread-lifecycle: thread without join/shutdown or "
+             "exception surfacing",
+    "RA003": "host-sync-in-hot-path: host synchronization in a hot path "
+             "without a # sync-point waiver",
+    "RA004": "donated-arg-reuse: variable reused after being donated to "
+             "a jitted call",
+}
+
+_GUARDED_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_]\w*)")
+_HOLDS_RE = re.compile(r"#\s*holds:\s*([A-Za-z_]\w*)")
+_HOT_RE = re.compile(r"#\s*hot-path\b")
+_SYNC_OK_RE = re.compile(r"#\s*sync-point\b")
+_THREAD_OK_RE = re.compile(r"#\s*thread-ok:")
+_DONATE_OK_RE = re.compile(r"#\s*donate-ok\b")
+_UNGUARDED_OK_RE = re.compile(r"#\s*unguarded-ok:")
+_SELF_FIELD_RE = re.compile(r"self\.([A-Za-z_]\w*)\s*[:=]")
+
+
+@dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}:{self.col}: {self.code} " \
+               f"{self.message}"
+
+
+# ---------------------------------------------------------------------------
+# parsed-file context
+# ---------------------------------------------------------------------------
+
+class FileCtx:
+    """One parsed source file: AST with parent links + comment map."""
+
+    def __init__(self, source: str, path: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.comments: Dict[int, str] = {}
+        try:
+            for tok in tokenize.generate_tokens(
+                    io.StringIO(source).readline):
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = tok.string
+        except tokenize.TokenError:  # pragma: no cover - parse-able files
+            pass                     # tokenize fine in practice
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                child._ra_parent = node  # type: ignore[attr-defined]
+
+    # -- comment helpers ---------------------------------------------------
+    def comment_at(self, line: int) -> str:
+        return self.comments.get(line, "")
+
+    def line_waived(self, line: int, pattern: re.Pattern) -> bool:
+        """A waiver applies on the node's line or the line above it."""
+        return bool(pattern.search(self.comment_at(line))
+                    or pattern.search(self.comment_at(line - 1)))
+
+    def def_annotated(self, fn: ast.AST, pattern: re.Pattern) -> bool:
+        """Annotation on a def: the ``def`` line, or the line above the
+        def / its first decorator."""
+        first = fn.lineno
+        for dec in getattr(fn, "decorator_list", []):
+            first = min(first, dec.lineno)
+        return bool(pattern.search(self.comment_at(fn.lineno))
+                    or pattern.search(self.comment_at(first - 1)))
+
+    # -- ancestry helpers --------------------------------------------------
+    @staticmethod
+    def parents(node: ast.AST):
+        cur = getattr(node, "_ra_parent", None)
+        while cur is not None:
+            yield cur
+            cur = getattr(cur, "_ra_parent", None)
+
+    def enclosing_functions(self, node: ast.AST):
+        for p in self.parents(node):
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield p
+
+    def enclosing_class(self, node: ast.AST) -> Optional[ast.ClassDef]:
+        for p in self.parents(node):
+            if isinstance(p, ast.ClassDef):
+                return p
+        return None
+
+
+def _is_self_attr(node: ast.AST, attr: Optional[str] = None) -> bool:
+    return (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"
+            and (attr is None or node.attr == attr))
+
+
+def _pos(node: ast.AST) -> Tuple[int, int]:
+    return (node.lineno, node.col_offset)
+
+
+def _end_pos(node: ast.AST) -> Tuple[int, int]:
+    return (getattr(node, "end_lineno", node.lineno),
+            getattr(node, "end_col_offset", node.col_offset))
+
+
+# ---------------------------------------------------------------------------
+# RA001 — guarded-by lock discipline
+# ---------------------------------------------------------------------------
+
+def _guarded_fields(ctx: FileCtx, cls: ast.ClassDef) -> Dict[str, str]:
+    """``# guarded-by: <lock>`` declarations inside this class body:
+    field name -> lock attribute name.  The comment sits on the line of the
+    field's ``self.<field> = ...`` assignment (conventionally in
+    ``__init__``)."""
+    fields: Dict[str, str] = {}
+    start = cls.lineno
+    end = getattr(cls, "end_lineno", start)
+    for line in range(start, end + 1):
+        m = _GUARDED_RE.search(ctx.comment_at(line))
+        if not m:
+            continue
+        src_line = ctx.source.splitlines()[line - 1]
+        fm = _SELF_FIELD_RE.search(src_line)
+        if fm:
+            fields[fm.group(1)] = m.group(1)
+    return fields
+
+
+def _holds_lock(ctx: FileCtx, fn: ast.AST) -> Optional[str]:
+    """The lock named by a ``# holds: <lock>`` annotation on ``fn``'s def
+    line (or the line above it / its first decorator), else None."""
+    first = fn.lineno
+    for dec in getattr(fn, "decorator_list", []):
+        first = min(first, dec.lineno)
+    for line in (fn.lineno, first - 1):
+        m = _HOLDS_RE.search(ctx.comment_at(line))
+        if m:
+            return m.group(1)
+    return None
+
+
+def _inside_with_lock(ctx: FileCtx, node: ast.AST, lock: str) -> bool:
+    """Is ``node`` lexically inside a ``with self.<lock>:`` block?"""
+    for p in ctx.parents(node):
+        if isinstance(p, (ast.With, ast.AsyncWith)):
+            for item in p.items:
+                expr = item.context_expr
+                if _is_self_attr(expr, lock):
+                    return True
+                # ``with self._lock.something():`` style — not used, but a
+                # Call on the lock attribute still counts as holding it
+                if isinstance(expr, ast.Call) and \
+                        _is_self_attr(expr.func) and \
+                        _is_self_attr(getattr(expr.func, "value", None),
+                                      lock):
+                    return True
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # a nested def/lambda may escape the with-block it is defined
+            # in, but conservatively we keep walking: the convention is
+            # that closures created under the lock run under the lock
+            continue
+    return False
+
+
+def _check_guarded_by(ctx: FileCtx) -> List[Violation]:
+    out: List[Violation] = []
+    for cls in ast.walk(ctx.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        fields = _guarded_fields(ctx, cls)
+        if not fields:
+            continue
+        for node in ast.walk(cls):
+            if not isinstance(node, ast.Attribute) or \
+                    not _is_self_attr(node):
+                continue
+            lock = fields.get(node.attr)
+            if lock is None:
+                continue
+            fns = list(ctx.enclosing_functions(node))
+            if ctx.enclosing_class(node) is not cls:
+                continue
+            # construction happens-before any thread start: __init__ of the
+            # declaring class is exempt
+            if fns and fns[-1].name == "__init__":
+                continue
+            if _inside_with_lock(ctx, node, lock):
+                continue
+            if any(_holds_lock(ctx, fn) == lock for fn in fns):
+                continue
+            if ctx.line_waived(node.lineno, _UNGUARDED_OK_RE):
+                continue
+            out.append(Violation(
+                ctx.path, node.lineno, node.col_offset, "RA001",
+                f"self.{node.attr} is declared guarded-by self.{lock} but "
+                f"is touched outside 'with self.{lock}:' (wrap the access, "
+                f"annotate the function '# holds: {lock}', or waive with "
+                f"'# unguarded-ok: <why>')"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RA002 — thread lifecycle
+# ---------------------------------------------------------------------------
+
+def _callee_name(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _binding_target(ctx: FileCtx, call: ast.Call) -> Optional[ast.AST]:
+    """The assignment target the constructed object is bound to (walks
+    through ternaries): ``self.X`` Attribute or Name node, else None."""
+    for p in ctx.parents(call):
+        if isinstance(p, ast.Assign) and p.targets:
+            t = p.targets[0]
+            if isinstance(t, (ast.Attribute, ast.Name)):
+                return t
+            return None
+        if isinstance(p, (ast.IfExp,)):
+            continue
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef, ast.Module)):
+            return None
+    return None
+
+
+def _scope_of(ctx: FileCtx, node: ast.AST, want_class: bool) -> ast.AST:
+    for p in ctx.parents(node):
+        if want_class and isinstance(p, ast.ClassDef):
+            return p
+        if not want_class and isinstance(
+                p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return p
+    return ctx.tree
+
+
+def _has_lifecycle_call(scope: ast.AST, target: ast.AST,
+                        methods: Tuple[str, ...]) -> bool:
+    """Does ``scope`` contain ``<target>.join(...)`` / ``.shutdown(...)``?"""
+    want_attr = target.attr if isinstance(target, ast.Attribute) else None
+    want_name = target.id if isinstance(target, ast.Name) else None
+    for node in ast.walk(scope):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in methods):
+            continue
+        obj = node.func.value
+        if want_attr is not None and _is_self_attr(obj, want_attr):
+            return True
+        if want_name is not None and isinstance(obj, ast.Name) and \
+                obj.id == want_name:
+            return True
+    return False
+
+
+def _resolve_target_fn(ctx: FileCtx, call: ast.Call
+                       ) -> Tuple[Optional[ast.AST], bool]:
+    """Resolve the ``target=`` of a Thread(...) construction to a function
+    node.  Returns (fn_node_or_None, resolvable)."""
+    target_expr = None
+    for kw in call.keywords:
+        if kw.arg == "target":
+            target_expr = kw.value
+    if target_expr is None and call.args:
+        target_expr = call.args[0]
+    if target_expr is None:
+        return None, False
+    name = None
+    if _is_self_attr(target_expr):
+        name = target_expr.attr
+        scope: Optional[ast.AST] = ctx.enclosing_class(call)
+    elif isinstance(target_expr, ast.Name):
+        name = target_expr.id
+        scope = _scope_of(ctx, call, want_class=False)
+    else:
+        return None, False
+    if scope is None:
+        return None, False
+    for node in ast.walk(scope):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                node.name == name:
+            return node, True
+    return None, False
+
+
+def _surfaces_exceptions(fn: ast.AST) -> bool:
+    """The AsyncWriter._error pattern, approximated: the thread body
+    contains a try/except whose handler actually *does* something (stores
+    the exception / notifies a waiter) rather than swallowing it."""
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Try):
+            continue
+        for handler in node.handlers:
+            body = [s for s in handler.body
+                    if not isinstance(s, ast.Pass)]
+            if body:
+                return True
+    return False
+
+
+def _check_thread_lifecycle(ctx: FileCtx) -> List[Violation]:
+    out: List[Violation] = []
+    for call in ast.walk(ctx.tree):
+        if not isinstance(call, ast.Call):
+            continue
+        name = _callee_name(call)
+        if name not in ("Thread", "ThreadPoolExecutor"):
+            continue
+        if ctx.line_waived(call.lineno, _THREAD_OK_RE):
+            continue
+        target = _binding_target(ctx, call)
+        if target is None:
+            out.append(Violation(
+                ctx.path, call.lineno, call.col_offset, "RA002",
+                f"{name} constructed without a binding — nothing can "
+                f"join/shutdown it (bind it, or waive with "
+                f"'# thread-ok: <why>')"))
+            continue
+        scope = _scope_of(ctx, call,
+                          want_class=isinstance(target, ast.Attribute))
+        methods = ("join",) if name == "Thread" else ("shutdown",)
+        if not _has_lifecycle_call(scope, target, methods):
+            out.append(Violation(
+                ctx.path, call.lineno, call.col_offset, "RA002",
+                f"{name} bound to "
+                f"{ast.unparse(target)} has no reachable "
+                f"{' or '.join(m + '()' for m in methods)} in its owning "
+                f"scope"))
+        if name == "Thread":
+            fn, resolvable = _resolve_target_fn(ctx, call)
+            if resolvable and fn is not None and \
+                    not _surfaces_exceptions(fn):
+                out.append(Violation(
+                    ctx.path, call.lineno, call.col_offset, "RA002",
+                    f"Thread target '{getattr(fn, 'name', '?')}' has no "
+                    f"exception-surfacing try/except — an unhandled "
+                    f"exception kills the thread silently (store it like "
+                    f"AsyncWriter._error and re-raise at the next "
+                    f"synchronization point)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RA003 — host syncs in hot paths
+# ---------------------------------------------------------------------------
+
+def _is_host_sync(node: ast.Call) -> Optional[str]:
+    f = node.func
+    if isinstance(f, ast.Name) and f.id in ("float", "int"):
+        if node.args and not isinstance(node.args[0], ast.Constant):
+            return f"{f.id}()"
+        return None
+    if isinstance(f, ast.Attribute):
+        if isinstance(f.value, ast.Name) and f.value.id in ("np", "numpy") \
+                and f.attr in ("asarray", "array"):
+            return f"np.{f.attr}()"
+        if isinstance(f.value, ast.Name) and f.value.id == "jax" and \
+                f.attr == "device_get":
+            return "jax.device_get()"
+        if f.attr in ("item", "block_until_ready"):
+            return f".{f.attr}()"
+    return None
+
+
+def _check_hot_path(ctx: FileCtx) -> List[Violation]:
+    out: List[Violation] = []
+    norm = ctx.path.replace(os.sep, "/")
+    required: Tuple[str, ...] = ()
+    for suffix, names in REQUIRED_HOT_PATH.items():
+        if norm.endswith(suffix):
+            required = names
+    hot_fns: List[ast.AST] = []
+    seen_required: Set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        annotated = ctx.def_annotated(node, _HOT_RE)
+        if annotated:
+            hot_fns.append(node)
+        if node.name in required:
+            seen_required.add(node.name)
+            if not annotated:
+                out.append(Violation(
+                    ctx.path, node.lineno, node.col_offset, "RA003",
+                    f"'{node.name}' is a designated hot path in this file "
+                    f"and must be annotated '# hot-path' (on or above its "
+                    f"def line)"))
+    for fn in hot_fns:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            what = _is_host_sync(node)
+            if what is None:
+                continue
+            if ctx.line_waived(node.lineno, _SYNC_OK_RE):
+                continue
+            out.append(Violation(
+                ctx.path, node.lineno, node.col_offset, "RA003",
+                f"{what} in hot path '{fn.name}' forces a host sync on "
+                f"the overlap-pipelined path — move it off the critical "
+                f"path or whitelist the line with '# sync-point'"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RA004 — donated-argument reuse
+# ---------------------------------------------------------------------------
+
+def _donated_indices(call: ast.Call) -> Optional[Set[int]]:
+    """``jax.jit(..., donate_argnums=...)`` or
+    ``functools.partial(jax.jit, donate_argnums=...)`` -> donated
+    positions, else None."""
+    f = call.func
+    is_jit = (isinstance(f, ast.Attribute) and f.attr == "jit") or \
+             (isinstance(f, ast.Name) and f.id == "jit")
+    is_partial = (isinstance(f, ast.Attribute) and f.attr == "partial") or \
+                 (isinstance(f, ast.Name) and f.id == "partial")
+    if is_partial:
+        # partial(jax.jit, donate_argnums=...) — first arg must be jit
+        if not (call.args and (
+                (isinstance(call.args[0], ast.Attribute)
+                 and call.args[0].attr == "jit")
+                or (isinstance(call.args[0], ast.Name)
+                    and call.args[0].id == "jit"))):
+            return None
+    elif not is_jit:
+        return None
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return {v.value}
+        if isinstance(v, (ast.Tuple, ast.List)):
+            idx = set()
+            for el in v.elts:
+                if isinstance(el, ast.Constant) and \
+                        isinstance(el.value, int):
+                    idx.add(el.value)
+            return idx
+    return None
+
+
+def _binding_scope(ctx: FileCtx, node: ast.AST) -> ast.AST:
+    for p in ctx.parents(node):
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.Lambda)):
+            return p
+    return ctx.tree
+
+
+def _collect_donating_fns(ctx: FileCtx
+                          ) -> Dict[str, List[Tuple[ast.AST, Set[int]]]]:
+    """Names bound to jitted functions with donated argnums — decorated
+    defs and ``name = jax.jit(f, donate_argnums=...)`` (or the partial
+    form) assignments — keyed by name, each with its *binding scope* so a
+    same-named variable in another function never matches."""
+    donating: Dict[str, List[Tuple[ast.AST, Set[int]]]] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call):
+                    idx = _donated_indices(dec)
+                    if idx:
+                        donating.setdefault(node.name, []).append(
+                            (_binding_scope(ctx, node), idx))
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            v = node.value
+            if isinstance(v, ast.Call):
+                idx = _donated_indices(v)
+                if idx is None and isinstance(v.func, ast.Call):
+                    # partial(jax.jit, ...)(f)
+                    idx = _donated_indices(v.func)
+                if idx:
+                    donating.setdefault(node.targets[0].id, []).append(
+                        (_binding_scope(ctx, node), idx))
+    return donating
+
+
+def _assign_targets_names(stmt: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    targets = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    for t in targets:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                names.add(n.id)
+    return names
+
+
+def _check_donation(ctx: FileCtx) -> List[Violation]:
+    donating = _collect_donating_fns(ctx)
+    if not donating:
+        return []
+    out: List[Violation] = []
+    for call in ast.walk(ctx.tree):
+        if not (isinstance(call, ast.Call)
+                and isinstance(call.func, ast.Name)
+                and call.func.id in donating):
+            continue
+        if ctx.line_waived(call.lineno, _DONATE_OK_RE):
+            continue
+        # scope: nearest enclosing function / lambda / module
+        scope: ast.AST = ctx.tree
+        for p in ctx.parents(call):
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+                scope = p
+                break
+        # the donated binding must be visible from the call: bound in the
+        # call's own scope or an enclosing one (a same-named local in a
+        # *different* function is a different object)
+        visible_scopes = {scope, ctx.tree}
+        visible_scopes.update(
+            p for p in ctx.parents(call)
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)))
+        indices: Optional[Set[int]] = None
+        for bscope, idx in donating[call.func.id]:
+            if bscope in visible_scopes:
+                indices = idx
+                break
+        if indices is None:
+            continue
+        # is the result rebound onto the donated name at the call site?
+        rebound: Set[str] = set()
+        for p in ctx.parents(call):
+            if isinstance(p, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                rebound = _assign_targets_names(p)
+                break
+            if isinstance(p, ast.stmt):
+                break
+        loop: Optional[ast.AST] = None
+        for p in ctx.parents(call):
+            if isinstance(p, (ast.For, ast.While)):
+                loop = p
+                break
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+                break
+        call_end = _end_pos(call)
+        for i in sorted(indices):
+            if i >= len(call.args):
+                continue
+            arg = call.args[i]
+            if not isinstance(arg, ast.Name):
+                continue
+            var = arg.id
+            if var in rebound:
+                continue
+            stores = []
+            loads = []
+            for n in ast.walk(scope):
+                if isinstance(n, ast.Name) and n.id == var:
+                    if isinstance(n.ctx, ast.Store):
+                        stores.append(_pos(n))
+                    elif isinstance(n.ctx, ast.Load) and n is not arg:
+                        loads.append(_pos(n))
+            bad = None
+            for lp in sorted(loads):
+                if lp > call_end and not any(
+                        call_end < sp <= lp for sp in stores):
+                    bad = lp
+                    break
+            if bad is None and loop is not None:
+                # wraparound: inside a loop with no rebinding of the
+                # donated name anywhere in the loop body, any load in the
+                # loop — including the donating call site itself —
+                # re-executes after the donation
+                loop_start, loop_end = _pos(loop), _end_pos(loop)
+                in_loop = lambda p: loop_start <= p <= loop_end  # noqa: E731
+                if not any(in_loop(sp) for sp in stores):
+                    for lp in sorted(loads + [_pos(arg)]):
+                        if in_loop(lp):
+                            bad = lp
+                            break
+            if bad is not None:
+                out.append(Violation(
+                    ctx.path, call.lineno, call.col_offset, "RA004",
+                    f"'{var}' is donated (argument {i} of "
+                    f"{call.func.id}, donate_argnums) but read again at "
+                    f"line {bad[0]} — its buffer may be invalidated by "
+                    f"the jit; rebind the result or waive with "
+                    f"'# donate-ok'"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+ALL_CHECKS = {
+    "RA001": _check_guarded_by,
+    "RA002": _check_thread_lifecycle,
+    "RA003": _check_hot_path,
+    "RA004": _check_donation,
+}
+
+
+def lint_source(source: str, path: str = "<string>",
+                select: Optional[Sequence[str]] = None) -> List[Violation]:
+    """Lint one source string (fixture-level entry point for tests)."""
+    ctx = FileCtx(source, path)
+    out: List[Violation] = []
+    for code, check in ALL_CHECKS.items():
+        if select is None or code in select:
+            out.extend(check(ctx))
+    return sorted(out, key=lambda v: (v.path, v.line, v.col, v.code))
+
+
+def lint_file(path: str, select: Optional[Sequence[str]] = None
+              ) -> List[Violation]:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    try:
+        return lint_source(src, path, select)
+    except SyntaxError as e:
+        return [Violation(path, e.lineno or 0, e.offset or 0, "RA000",
+                          f"syntax error: {e.msg}")]
+
+
+def iter_py_files(paths: Sequence[str]):
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            yield p
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = [d for d in dirs
+                           if d not in ("__pycache__", ".git")]
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+def run_lint(paths: Sequence[str],
+             select: Optional[Sequence[str]] = None) -> List[Violation]:
+    out: List[Violation] = []
+    for path in iter_py_files(paths):
+        out.extend(lint_file(path, select))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_analysis.lint",
+        description="repo-specific concurrency lint (RA001-RA004)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule codes (default: all)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for code, desc in RULES.items():
+            print(f"{code}  {desc}")
+        return 0
+    select = args.select.split(",") if args.select else None
+    violations = run_lint(args.paths or ["src"], select)
+    for v in violations:
+        print(v)
+    n_files = sum(1 for _ in iter_py_files(args.paths or ["src"]))
+    if violations:
+        print(f"\n{len(violations)} violation(s) across {n_files} files",
+              file=sys.stderr)
+        return 1
+    print(f"clean: {n_files} files, 0 violations")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,410 @@
+"""Schedule-fuzzing race scenarios (``python -m tools.repro_analysis.race``).
+
+Each scenario builds the *real* threaded components — OffloadEngine,
+Prefetcher, AsyncWriter, StreamedBase — under
+:func:`tools.repro_analysis.schedules.fuzzed_primitives`, drives a seeded
+operation sequence through them, and asserts the conservation invariants
+the paper's preemption-heavy setting depends on:
+
+- **no lost dirty bytes**: after ``close()`` the segment files hold
+  exactly the shadow model's last-written value for every dirtied segment
+  (and the original bytes for everything else);
+- **window consistency**: every ``acquire`` observes the shadow value —
+  a recycled/pooled buffer must never leak stale bytes into a pull;
+- **pool accounting exact**: ``_pool_sets`` equals the summed free-list
+  lengths and no emptied signature list survives (the PR 5 IndexError
+  class);
+- **stats monotone**: counters sampled mid-run never decrease;
+- **no deadlock**: every run finishes inside a watchdog budget, with all
+  thread stacks dumped on timeout.
+
+``--quick`` sweeps a fixed seed set (>= 200 interleavings per scenario)
+sized for CI; ``--full`` is the nightly-style long sweep.  Both modes
+also run the pinned PR 5 regression replays in both directions
+(``tools.repro_analysis.replays``): fail on pre-fix logic, pass current.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import random
+import sys
+import tempfile
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.offload.engine import AsyncWriter, OffloadEngine
+from repro.serve.base import StreamedBase
+
+from tools.repro_analysis import replays
+from tools.repro_analysis.schedules import (MonotoneStats, Schedule,
+                                            fuzzed_primitives,
+                                            run_with_watchdog)
+
+N_SEGMENTS = 6
+MONOTONE_KEYS = ("hits", "misses", "write_hits", "prefetch_hits",
+                 "sync_loads", "bytes_read", "bytes_written",
+                 "peak_resident_bytes")
+
+
+def _check_pool_accounting(engine: OffloadEngine, where: str = "") -> None:
+    pf = engine._prefetcher
+    if pf is None:
+        return
+    with pf._lock:
+        total = sum(len(v) for v in pf._pool.values())
+        assert pf._pool_sets == total, (
+            f"pool accounting drifted {where}: _pool_sets={pf._pool_sets} "
+            f"vs {total} listed sets")
+        assert all(pf._pool.values()), (
+            f"emptied signature list left in the pool {where} "
+            f"(the PR 5 IndexError precondition)")
+
+
+def _expected(shadow: Dict[int, float], original, seg: int, name: str):
+    if seg in shadow:
+        return np.full(original[seg][name].shape, shadow[seg],
+                       original[seg][name].dtype)
+    return original[seg][name]
+
+
+# ---------------------------------------------------------------------------
+# scenario: mixed acquire/dirty/release/flush vs concurrent prefetch
+# ---------------------------------------------------------------------------
+
+def scenario_engine_mixed(seed: int, tmpdir: str) -> None:
+    sched = Schedule(seed)
+    store = replays.make_store(os.path.join(tmpdir, "s"),
+                               n_segments=N_SEGMENTS, seed=seed)
+    original = {s: store.read_segment(s, copy=True, window=True)
+                for s in range(N_SEGMENTS)}
+    with fuzzed_primitives(sched):
+        eng = OffloadEngine(store, max_resident=2, prefetch=True,
+                            async_writeback=True)
+    rng = random.Random(seed * 7919 + 1)
+    shadow: Dict[int, float] = {}
+    mono = MonotoneStats(MONOTONE_KEYS)
+    # writable-window contract: one owner thread issues every window call
+    # (incl. prefetch — cross-thread prefetch is a read-only-window
+    # affordance, exercised by scenario_serve_walk).  The races under test
+    # here are owner vs the engine's *internal* Prefetcher reader and
+    # AsyncWriter threads, which the fuzzed locks stretch apart.
+    for op_i in range(28):
+        seg = rng.randrange(N_SEGMENTS)
+        r = rng.random()
+        if r < 0.45:                           # mutate + dirty
+            data = eng.acquire(seg)
+            val = float(seed % 1000) + op_i + 0.5
+            for name in data:
+                data[name][...] = val
+            eng.mark_dirty(seg)
+            shadow[seg] = val
+        elif r < 0.65:                         # window-consistency read
+            data = eng.acquire(seg)
+            for name in data:
+                want = _expected(shadow, original, seg, name)
+                assert np.allclose(data[name], want), (
+                    f"seed {seed} op {op_i}: acquire({seg})[{name}] "
+                    f"saw stale bytes")
+        elif r < 0.78:                         # overlap: hint the reader
+            eng.prefetch((seg + 1) % N_SEGMENTS)
+        elif r < 0.88:
+            eng.release(seg)
+        elif r < 0.96:
+            eng.flush()
+        else:
+            _check_pool_accounting(eng, f"(seed {seed} op {op_i})")
+        mono.sample(eng.stats(), f"(seed {seed} op {op_i})")
+        sched.pause("mixed.op")
+    eng.close()
+    _check_pool_accounting(eng, f"(seed {seed} final)")
+    for seg in range(N_SEGMENTS):              # no lost dirty bytes
+        back = store.read_segment(seg, copy=True, window=True)
+        for name in back:
+            want = _expected(shadow, original, seg, name)
+            assert np.allclose(back[name], want), (
+                f"seed {seed}: segment {seg} leaf {name} lost dirty bytes")
+
+
+# ---------------------------------------------------------------------------
+# scenario: AsyncWriter submit/steal/barrier churn
+# ---------------------------------------------------------------------------
+
+def scenario_writer_churn(seed: int, tmpdir: str) -> None:
+    sched = Schedule(seed)
+    store = replays.make_store(os.path.join(tmpdir, "s"),
+                               n_segments=N_SEGMENTS, seed=seed)
+    template = {s: store.read_segment(s, copy=True, window=True)
+                for s in range(N_SEGMENTS)}
+    recycled: List[int] = []
+    with fuzzed_primitives(sched):
+        w = AsyncWriter(store, max_pending=2,
+                        recycle=lambda seg, data: recycled.append(seg))
+    rng = random.Random(seed * 7919 + 3)
+    shadow: Dict[int, float] = {}
+    last_writes = 0
+
+    def fresh(seg: int, val: float):
+        return {name: np.full(a.shape, val, a.dtype)
+                for name, a in template[seg].items()}
+
+    for op_i in range(30):
+        seg = rng.randrange(N_SEGMENTS)
+        r = rng.random()
+        if r < 0.55:
+            val = float(seed % 1000) + op_i + 0.25
+            w.submit(seg, fresh(seg, val))
+            shadow[seg] = val
+        elif r < 0.8:
+            hit = w.steal(seg)
+            if hit is not None:
+                data, dirty = hit
+                if dirty:                      # stolen bytes never landed:
+                    val = float(seed % 1000) + op_i + 0.75
+                    w.submit(seg, fresh(seg, val))   # conserve by resubmit
+                    shadow[seg] = val
+        else:
+            w.barrier()
+            assert not w._pending and w._writing is None
+        assert w.writes >= last_writes, "writes went backwards"
+        last_writes = w.writes
+        sched.pause("churn.op")
+    w.close()
+    for seg, val in shadow.items():            # no lost dirty bytes
+        back = store.read_segment(seg, copy=True, window=True)
+        for name, a in back.items():
+            assert np.allclose(a, val), (
+                f"seed {seed}: segment {seg} leaf {name} lost bytes "
+                f"(want {val})")
+
+
+# ---------------------------------------------------------------------------
+# scenario: StreamedBase layer walk (staging worker vs dispatch thread)
+# ---------------------------------------------------------------------------
+
+class _FakeLState:
+    """Minimal LayerStreamedState stand-in over a real read-only
+    OffloadEngine — the StreamedBase contract surface without a model."""
+
+    frozen = True
+    base_quant = ""
+
+    def __init__(self, store, n_layers: int, gate: Optional[Dict] = None):
+        self.n_layers = n_layers
+        self.head_segment = n_layers
+        self.engine = OffloadEngine(store, max_resident=2, prefetch=True,
+                                    read_only=True)
+        self._gate = gate or {}
+
+    def layer_params(self, i: int):
+        g = self._gate.get(i)
+        if g is not None:
+            if not g["event"].wait(timeout=20.0):
+                raise TimeoutError(f"gate for layer {i} never released")
+            if g.get("raise"):
+                raise RuntimeError(f"injected pull failure (layer {i})")
+        return {k: np.array(v) for k, v in self.engine.acquire(i).items()}
+
+    def head_params(self):
+        return {k: np.array(v)
+                for k, v in self.engine.acquire(self.head_segment).items()}
+
+    def prefetch_layer(self, i: int):
+        self.engine.prefetch(i)
+
+    def stats(self):
+        return self.engine.stats()
+
+    def close(self):
+        self.engine.close()
+
+
+def _serve_store(tmpdir: str, n_layers: int, seed: int):
+    # n_layers block segments + one head segment
+    return replays.make_store(os.path.join(tmpdir, "s"),
+                              n_segments=n_layers + 1, seed=seed)
+
+
+def scenario_serve_walk(seed: int, tmpdir: str) -> None:
+    n_layers = N_SEGMENTS - 1
+    sched = Schedule(seed)
+    store = _serve_store(tmpdir, n_layers, seed)
+    original = {s: store.read_segment(s, copy=True, window=True)
+                for s in range(n_layers + 1)}
+    with fuzzed_primitives(sched):
+        base = StreamedBase(_FakeLState(store, n_layers))
+    mono = MonotoneStats(MONOTONE_KEYS)
+    for sweep in range(2):
+        head = base.head()
+        for name, a in head.items():
+            assert np.allclose(a, original[n_layers][name]), \
+                f"seed {seed}: head leaf {name} corrupted"
+        for i in range(n_layers):
+            base.prefetch(i + 2)
+            base.stage(i + 1)
+            blk = base.block(i)
+            for name, a in blk.items():
+                assert np.allclose(a, original[i][name]), (
+                    f"seed {seed} sweep {sweep}: block {i} leaf {name} "
+                    f"corrupted")
+            mono.sample(base.lstate.stats(),
+                        f"(seed {seed} sweep {sweep} block {i})")
+    stats = base.stats()
+    assert stats["head_reads"] == 1, (
+        f"seed {seed}: pinned head segment read {stats['head_reads']} "
+        f"times (want exactly 1)")
+    base.close()
+
+
+# ---------------------------------------------------------------------------
+# scenario: StreamedBase.close with a stage future in flight (satellite)
+# ---------------------------------------------------------------------------
+
+def scenario_close_inflight_stage(seed: int, tmpdir: str) -> None:
+    n_layers = 4
+    rng = random.Random(seed * 7919 + 5)
+    for inject_error in (False, True):
+        sched = Schedule(seed + (1_000_000 if inject_error else 0))
+        sub = os.path.join(tmpdir, "err" if inject_error else "ok")
+        store = _serve_store(sub, n_layers, seed)
+        gate = {1: {"event": threading.Event(), "raise": inject_error}}
+        with fuzzed_primitives(sched):
+            base = StreamedBase(_FakeLState(store, n_layers, gate=gate))
+        base.stage(1)                          # worker parks on the gate
+        releaser = threading.Timer(rng.random() * 0.02,
+                                   gate[1]["event"].set)
+        releaser.start()
+        try:
+            if inject_error:
+                try:
+                    base.close()
+                    raise AssertionError(
+                        f"seed {seed}: close() swallowed the in-flight "
+                        f"stage failure")
+                except RuntimeError:
+                    pass                       # surfaced after cleanup
+            else:
+                base.close()                   # must drain, not hang
+        finally:
+            releaser.join()
+        assert base._worker is None, "worker must be shut down"
+        base.stage(2)                          # post-close: a no-op
+        with base._lock:
+            assert not base._staged, "post-close stage() resurrected pool"
+        try:
+            base.block(0)
+            raise AssertionError("block() after close must raise")
+        except RuntimeError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# scenario: OffloadEngine.close with a non-empty write queue (satellite)
+# ---------------------------------------------------------------------------
+
+def scenario_close_pending_writes(seed: int, tmpdir: str) -> None:
+    sched = Schedule(seed)
+    store = replays.make_store(os.path.join(tmpdir, "s"),
+                               n_segments=N_SEGMENTS, seed=seed)
+    with fuzzed_primitives(sched):
+        eng = OffloadEngine(store, max_resident=1, prefetch=True,
+                            async_writeback=True)
+    shadow: Dict[int, float] = {}
+    # a max_resident=1 window dirties + evicts on every acquire, so the
+    # write queue is busy right up to the close() barrier
+    for op_i, seg in enumerate(range(N_SEGMENTS)):
+        data = eng.acquire(seg)
+        val = float(seed % 1000) + op_i + 0.125
+        for name in data:
+            data[name][...] = val
+        eng.mark_dirty(seg)
+        shadow[seg] = val
+    eng.close()                                # fence + join, queue loaded
+    for seg, val in shadow.items():
+        back = store.read_segment(seg, copy=True, window=True)
+        for name, a in back.items():
+            assert np.allclose(a, val), (
+                f"seed {seed}: close() lost dirty bytes for segment "
+                f"{seg} leaf {name}")
+
+
+SCENARIOS: Dict[str, Callable[[int, str], None]] = {
+    "engine_mixed": scenario_engine_mixed,
+    "writer_churn": scenario_writer_churn,
+    "serve_walk": scenario_serve_walk,
+    "close_inflight_stage": scenario_close_inflight_stage,
+    "close_pending_writes": scenario_close_pending_writes,
+}
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def run_scenario(name: str, seed: int, watchdog_s: float = 60.0) -> None:
+    fn = SCENARIOS[name]
+    with tempfile.TemporaryDirectory(prefix=f"race_{name}_") as tmp:
+        run_with_watchdog(lambda: fn(seed, tmp), timeout_s=watchdog_s,
+                          label=f"{name}[seed={seed}]")
+
+
+def run_sweep(names, seeds, watchdog_s: float = 60.0,
+              verbose: bool = False) -> int:
+    total = 0
+    for name in names:
+        t0 = time.perf_counter()
+        for seed in seeds:
+            run_scenario(name, seed, watchdog_s=watchdog_s)
+            total += 1
+        if verbose:
+            print(f"  {name}: {len(list(seeds))} interleavings ok "
+                  f"({time.perf_counter() - t0:.1f}s)")
+    return total
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_analysis.race",
+        description="seeded schedule-fuzzing race harness")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fixed seeds, >=200 interleavings per "
+                         "scenario")
+    ap.add_argument("--full", action="store_true",
+                    help="nightly-style long sweep (1000 seeds/scenario)")
+    ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None)
+    ap.add_argument("--seeds", default=None, metavar="A:B",
+                    help="explicit seed range, e.g. 0:50")
+    ap.add_argument("--watchdog", type=float, default=60.0,
+                    help="per-run deadlock budget in seconds")
+    ap.add_argument("--skip-replays", action="store_true",
+                    help="skip the pinned PR 5 pre-fix/current replays")
+    args = ap.parse_args(argv)
+
+    if args.seeds:
+        a, _, b = args.seeds.partition(":")
+        seeds = range(int(a), int(b or int(a) + 1))
+    elif args.full:
+        seeds = range(1000)
+    else:
+        seeds = range(200)      # --quick default: the CI gate floor
+    names = [args.scenario] if args.scenario else sorted(SCENARIOS)
+
+    if not args.skip_replays:
+        t0 = time.perf_counter()
+        replays.run_all(pre_fix=True)     # the three PR 5 bugs reproduce
+        replays.run_all(pre_fix=False)    # ... and are absent today
+        print(f"replays: 3 pre-fix bugs reproduced, 0 present "
+              f"({time.perf_counter() - t0:.1f}s)")
+
+    t0 = time.perf_counter()
+    total = run_sweep(names, seeds, watchdog_s=args.watchdog, verbose=True)
+    print(f"race harness: {total} interleavings across {len(names)} "
+          f"scenario(s), 0 failures ({time.perf_counter() - t0:.1f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

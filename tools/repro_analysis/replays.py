@@ -1,0 +1,327 @@
+"""Deterministic replays of the PR 5 review concurrency bugs.
+
+Each replay pairs a *pre-fix* variant of the component (the exact logic
+the PR 5 review found shipping) with a driver sequence that makes the bug
+fire every run — no timing, no fuzzing; the same sequence passes against
+the current code.  The harness keeps these pinned so a refactor that
+silently reintroduces one of the patterns fails CI deterministically:
+
+1. ``PreFixPoolPrefetcher``   buffer-pool ``IndexError``: ``_read`` popped
+   a signature's free-list empty without deleting the key, and the
+   ``recycle`` evictor popped from whatever signature sat at the front of
+   the pool — an emptied-but-present list crashes it.
+2. ``PreFixSilentWriter``     the recycle hook ran *outside* the
+   ``_run`` try/except: a raising hook killed the writer thread with
+   ``_error`` still ``None`` — the next bounded ``submit`` (or
+   ``barrier``) then blocks forever with nobody left to drain the queue.
+3. ``PreFixDroppyPrefetcher`` ``take()`` dropped the oldest buffered
+   segment on *every* wakeup while its segment was still queued — each
+   spurious wakeup bled one still-useful prefetched segment back to a
+   flash re-read (the fix caps forced drops at one per ``take`` and
+   front-runs the queue).
+
+The drivers use only public/engine-internal calls plus explicit
+event-style sequencing, so "fails pre-fix, passes current" is a property
+of the logic, not the scheduler.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.offload.engine import AsyncWriter, Prefetcher
+from repro.offload.segments import SegmentStore
+
+
+# ---------------------------------------------------------------------------
+# shared fixture store
+# ---------------------------------------------------------------------------
+
+def make_store(directory: str, n_segments: int = 6, shape=(4, 3),
+               mixed: bool = False, seed: int = 0) -> SegmentStore:
+    """A small layer-aligned store.  ``mixed=True`` alternates two leaf
+    geometries so consecutive segments have different signatures (the
+    shape the pool bug needs)."""
+    rng = np.random.default_rng(seed)
+    groups = []
+    for i in range(n_segments):
+        shp = (shape[0] + 1, shape[1]) if (mixed and i % 2) else shape
+        groups.append([
+            (f"p.l{i}", rng.standard_normal(shp).astype(np.float32)),
+            (f"m.l{i}", rng.standard_normal(shp).astype(np.float32)),
+        ])
+    return SegmentStore.create(directory, groups, num_segments=n_segments)
+
+
+# ---------------------------------------------------------------------------
+# 1. buffer-pool IndexError
+# ---------------------------------------------------------------------------
+
+class PreFixPoolPrefetcher(Prefetcher):
+    """Prefetcher with the pre-fix pool logic: ``_read`` leaves emptied
+    free-lists behind and the evictor pops without the defensive
+    empty-list check."""
+
+    def _read(self, seg):
+        bufs = None
+        if self._pooling:
+            sig = self._store.segment_signature(seg)
+            with self._lock:
+                free = self._pool.get(sig)
+                if free:
+                    bufs = free.pop()
+                    self._pool_sets -= 1
+                    # PRE-FIX: the emptied list stays keyed in the pool
+        data = self._store.read_segment(
+            seg, copy=True, encoded=self._encoded,
+            window=not self._encoded, out=bufs)
+        if bufs is not None:
+            self.buffer_reuses += 1
+        return data
+
+    def recycle(self, seg, data):
+        if not self._pooling or not data:
+            return
+        arrs = list(data.values())
+        if not all(isinstance(a, np.ndarray) for a in arrs):
+            return
+        sig = self._store.segment_signature(seg)
+        with self._lock:
+            while self._pool_sets >= self._depth + 1 and self._pool:
+                old_sig, free = next(iter(self._pool.items()))
+                free.pop()        # PRE-FIX: IndexError on an emptied list
+                self._pool_sets -= 1
+                if not free:
+                    del self._pool[old_sig]
+            self._pool.setdefault(sig, []).append(arrs)
+            self._pool.move_to_end(sig)
+            self._pool_sets += 1
+
+
+def drive_pool_sequence(pf: Prefetcher, store: SegmentStore) -> None:
+    """The crashing sequence (depth=1, mixed signatures A/B):
+
+    recycle(A) -> pool {A:[set]}; _read(A) pops it empty; then three
+    recycles of B-signature sets trip the global bound with the emptied
+    ``A`` entry at the front of the pool.  Pre-fix the evictor pops the
+    empty list (``IndexError``); current code deleted the key in ``_read``
+    and skips defensively."""
+    def fresh(seg):
+        return store.read_segment(seg, copy=True, window=True)
+
+    pf.recycle(0, fresh(0))              # signature A enters the pool
+    pf._read(0)                          # pops A's only set
+    for _ in range(3):                   # B-signature sets hit the bound
+        pf.recycle(1, fresh(1))
+
+
+def replay_pool_indexerror(tmpdir: str, pre_fix: bool) -> None:
+    """Raises ``IndexError`` iff ``pre_fix`` (asserts the dichotomy)."""
+    os.environ["REPRO_OFFLOAD_BUFFER_POOL"] = "1"
+    try:
+        store = make_store(os.path.join(tmpdir, "pool"), n_segments=2,
+                           mixed=True)
+        cls = PreFixPoolPrefetcher if pre_fix else Prefetcher
+        pf = cls(store, depth=1)
+        try:
+            try:
+                drive_pool_sequence(pf, store)
+            except IndexError:
+                if not pre_fix:
+                    raise AssertionError(
+                        "current Prefetcher crashed on the pool sequence")
+                return
+            if pre_fix:
+                raise AssertionError(
+                    "pre-fix pool logic did not raise IndexError — the "
+                    "replay sequence no longer matches the bug")
+        finally:
+            pf.close()
+    finally:
+        os.environ.pop("REPRO_OFFLOAD_BUFFER_POOL", None)
+
+
+# ---------------------------------------------------------------------------
+# 2. silent AsyncWriter death
+# ---------------------------------------------------------------------------
+
+class PreFixSilentWriter(AsyncWriter):
+    """AsyncWriter with the pre-fix ``_run``: the recycle hook runs outside
+    any try/except, so a raising hook kills the thread with ``_error``
+    still unset."""
+
+    def _run(self):
+        while True:
+            with self._lock:
+                while not self._pending and not self._closed:
+                    self._lock.wait()
+                if not self._pending:
+                    return
+                seg, data = self._pending.popitem(last=False)
+                self._writing, self._writing_data = seg, data
+                self._stolen = False
+                self._lock.notify_all()
+            t0 = time.perf_counter()
+            err = None
+            try:
+                self._store.pwrite_segment(seg, data)
+            except BaseException as e:
+                err = e
+            self.busy_s += time.perf_counter() - t0
+            with self._lock:
+                stolen = self._stolen
+                self._writing = self._writing_data = None
+                if err is not None:
+                    self._error = err
+                else:
+                    self.writes += 1
+                    self.bytes_landed += self._store.seg_nbytes[seg]
+                    self._unsynced.add(seg)
+                self._lock.notify_all()
+            if err is None and not stolen and self._recycle is not None:
+                self._recycle(seg, data)   # PRE-FIX: unprotected hook
+
+
+def replay_silent_writer_death(tmpdir: str, pre_fix: bool) -> None:
+    """A raising recycle hook must surface on the next submit — pre-fix
+    the thread dies silently (``_error`` None, queue never drains)."""
+    store = make_store(os.path.join(tmpdir, "writer"), n_segments=4)
+
+    def bad_recycle(seg, data):
+        raise RuntimeError("recycle hook exploded")
+
+    cls = PreFixSilentWriter if pre_fix else AsyncWriter
+    w = cls(store, max_pending=1, recycle=bad_recycle)
+    data = store.read_segment(0, copy=True, window=True)
+    if pre_fix:
+        # the unprotected hook is *expected* to kill the thread here —
+        # keep the default excepthook's traceback out of the test output
+        old_hook, threading.excepthook = threading.excepthook, \
+            lambda args: None
+        try:
+            w.submit(0, data)
+            w._thread.join(timeout=10.0)  # the hook kills the thread
+        finally:
+            threading.excepthook = old_hook
+        assert not w._thread.is_alive(), \
+            "pre-fix writer thread should be dead after the hook raised"
+        with w._lock:
+            assert w._error is None, \
+                "pre-fix writer should have died *silently* (no _error)"
+        # the queue is now undrainable: a second bounded submit would
+        # block forever — that is the deadlock the watchdog half of the
+        # harness exists for, so we stop at the silent-death assertions.
+        return
+    w.submit(0, data)
+    deadline = time.monotonic() + 10.0   # hook error lands in _error
+    while time.monotonic() < deadline:
+        with w._lock:
+            if w._error is not None:
+                break
+        time.sleep(1e-3)
+    assert w._thread.is_alive(), \
+        "current writer thread must survive a raising recycle hook"
+    try:
+        w.submit(1, store.read_segment(1, copy=True, window=True))
+        raise AssertionError("current writer must re-raise the stored "
+                             "recycle error on the next submit")
+    except RuntimeError:
+        pass
+    w.close()                            # error consumed above; drains
+
+
+# ---------------------------------------------------------------------------
+# 3. take() over-dropping
+# ---------------------------------------------------------------------------
+
+class PreFixDroppyPrefetcher(Prefetcher):
+    """Prefetcher with the pre-fix ``take``: no single-drop cap and no
+    queue front-running — every wakeup with full buffers drops the oldest
+    buffered segment while the wanted one is still queued."""
+
+    def take(self, seg):
+        with self._lock:
+            while not self._closed:
+                if seg in self._buffers:
+                    self.prefetch_hits += 1
+                    data = self._buffers.pop(seg)
+                    self._lock.notify_all()
+                    return data
+                if seg in self._inflight:
+                    self._lock.wait()
+                elif seg in self._queue:
+                    if len(self._buffers) >= self._depth:
+                        # PRE-FIX: drop on *every* pass, no front-running
+                        self.forced_drops += 1
+                        old, old_data = self._buffers.popitem(last=False)
+                        self.recycle(old, old_data)
+                        self._lock.notify_all()
+                    self._lock.wait()
+                else:
+                    break
+            if seg in self._queue:
+                self._queue.remove(seg)
+        self.sync_loads += 1
+        return self._read(seg)
+
+
+def replay_take_overdrop(tmpdir: str, pre_fix: bool) -> None:
+    """Buffers full of {0,1}, queue [3,4,2], then ``take(2)``.
+
+    Pre-fix: each read completion wakes ``take`` which drops another
+    still-buffered segment while 2 sits behind 3 and 4 in the queue —
+    three forced drops.  Current: 2 is front-run to the queue head and at
+    most one stranded buffer is dropped."""
+    store = make_store(os.path.join(tmpdir, "droppy"), n_segments=6)
+    cls = PreFixDroppyPrefetcher if pre_fix else Prefetcher
+    pf = cls(store, depth=2)
+    try:
+        pf.schedule(0)
+        pf.schedule(1)
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            with pf._lock:
+                if set(pf._buffers) == {0, 1} and not pf._inflight:
+                    break
+            time.sleep(1e-3)
+        with pf._lock:
+            assert set(pf._buffers) == {0, 1}, dict(pf._buffers)
+        # buffers are full, so the reader parks and these only queue up
+        pf.schedule(3)
+        pf.schedule(4)
+        pf.schedule(2)
+        with pf._lock:
+            assert pf._queue == [3, 4, 2], pf._queue
+        data = pf.take(2)
+        want = store.read_segment(2, copy=True, window=True)
+        for name in want:
+            assert np.allclose(data[name], want[name]), name
+        if pre_fix:
+            assert pf.forced_drops >= 2, (
+                f"pre-fix take() should cascade-drop (got "
+                f"{pf.forced_drops}) — the replay no longer matches")
+        else:
+            assert pf.forced_drops <= 1, (
+                f"current take() must drop at most once per call, got "
+                f"{pf.forced_drops}")
+    finally:
+        pf.close()
+
+
+REPLAYS = {
+    "pool_indexerror": replay_pool_indexerror,
+    "silent_writer_death": replay_silent_writer_death,
+    "take_overdrop": replay_take_overdrop,
+}
+
+
+def run_all(pre_fix: bool) -> None:
+    with tempfile.TemporaryDirectory() as tmp:
+        for name, fn in REPLAYS.items():
+            sub = os.path.join(tmp, name)
+            os.makedirs(sub, exist_ok=True)
+            fn(sub, pre_fix)

@@ -1,0 +1,251 @@
+"""Seeded schedule fuzzing for the repo's threaded components.
+
+CPython will happily run the Prefetcher/AsyncWriter/StreamedBase threads in
+near-lockstep on an idle CI box, so a plain stress test explores a handful
+of interleavings forever.  This module widens the schedule space on
+purpose: every lock/condition operation passes through a :class:`Schedule`
+pause point that (seeded, per thread) yields the GIL or sleeps a few
+hundred microseconds, and every ``Condition.wait`` is bounded so spurious
+wakeups — which the real code must tolerate anyway — are injected
+constantly instead of almost never.
+
+Determinism is *seed-level*: the pause decisions are a pure function of
+``(seed, thread-arrival-order, call-count)``, so a failing seed replays
+the same perturbation sequence.  (Exact thread interleavings are not
+replayable on CPython — the pinned regression replays in
+``tools.repro_analysis.replays`` use explicit event gating instead, which
+is fully deterministic.)
+
+Injection happens at *construction*: :func:`fuzzed_primitives` patches
+``threading.Condition`` / ``threading.Lock`` while the component under
+test builds, so the instances it creates are the instrumented wrappers
+for their whole lifetime, with no change to the production modules.
+
+``run_with_watchdog`` is the no-deadlock invariant: the scenario runs on a
+worker thread and a join timeout converts a hang into a loud failure with
+every thread's current stack attached.
+"""
+from __future__ import annotations
+
+import contextlib
+import random
+import sys
+import threading
+import time
+import traceback
+from typing import Callable, Dict, Optional
+
+_REAL_CONDITION = threading.Condition
+_REAL_LOCK = threading.Lock
+
+
+class Schedule:
+    """Seeded per-thread pause-point generator.
+
+    Each thread that reaches a pause point gets its own ``random.Random``
+    derived from ``(seed, arrival-order)``; each pause independently
+    chooses between running on, yielding the GIL, and a short sleep.  The
+    instance counts pause points (``points``) so harness runs can report
+    how much schedule space a sweep actually touched.
+    """
+
+    def __init__(self, seed: int, max_sleep_s: float = 300e-6,
+                 p_sleep: float = 0.25, p_yield: float = 0.5,
+                 wait_slice_s: float = 2e-3):
+        self.seed = int(seed)
+        self.max_sleep_s = float(max_sleep_s)
+        self.p_sleep = float(p_sleep)
+        self.p_yield = float(p_yield)
+        self.wait_slice_s = float(wait_slice_s)
+        self.points = 0                      # total pause points hit
+        self._meta = threading.Lock()        # orders thread arrival only
+        self._n_threads = 0
+        self._local = threading.local()
+
+    def _rng(self) -> random.Random:
+        rng = getattr(self._local, "rng", None)
+        if rng is None:
+            with self._meta:
+                order = self._n_threads
+                self._n_threads += 1
+            rng = random.Random((self.seed + 1) * 1_000_003 + order)
+            self._local.rng = rng
+        return rng
+
+    def pause(self, point: str = "") -> None:
+        """One scheduling decision: continue, yield, or micro-sleep."""
+        rng = self._rng()
+        self.points += 1
+        r = rng.random()
+        if r < self.p_sleep:
+            time.sleep(rng.random() * self.max_sleep_s)
+        elif r < self.p_sleep + self.p_yield:
+            time.sleep(0)                    # bare GIL yield
+
+    def wait_timeout(self, timeout: Optional[float]) -> float:
+        """Bound a ``Condition.wait``: forces periodic spurious wakeups,
+        which the repo's wait loops must tolerate by contract."""
+        rng = self._rng()
+        slice_s = self.wait_slice_s * (0.5 + rng.random())
+        if timeout is None:
+            return slice_s
+        return min(timeout, slice_s)
+
+
+class FuzzedLock:
+    """``threading.Lock`` wrapper pausing around acquire/release."""
+
+    def __init__(self, sched: Schedule):
+        self._sched = sched
+        self._lock = _REAL_LOCK()
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        self._sched.pause("lock.acquire")
+        got = self._lock.acquire(blocking, timeout)
+        if got:
+            self._sched.pause("lock.acquired")
+        return got
+
+    def release(self) -> None:
+        self._sched.pause("lock.release")
+        self._lock.release()
+
+    def locked(self) -> bool:
+        return self._lock.locked()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+
+class FuzzedCondition:
+    """``threading.Condition`` wrapper pausing at acquire/release/wait/
+    notify boundaries and bounding every wait (spurious-wakeup
+    injection).  Delegates to a real Condition (whose default RLock keeps
+    the repo's nested ``with self._lock`` uses working)."""
+
+    def __init__(self, sched: Schedule, lock=None):
+        self._sched = sched
+        self._cond = _REAL_CONDITION(lock)
+
+    # -- lock protocol ----------------------------------------------------
+    def acquire(self, *args):
+        self._sched.pause("cond.acquire")
+        got = self._cond.acquire(*args)
+        self._sched.pause("cond.acquired")
+        return got
+
+    def release(self):
+        self._sched.pause("cond.release")
+        self._cond.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    # -- condition protocol ----------------------------------------------
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        self._sched.pause("cond.wait")
+        got = self._cond.wait(self._sched.wait_timeout(timeout))
+        self._sched.pause("cond.woke")
+        return got
+
+    def wait_for(self, predicate, timeout: Optional[float] = None):
+        end = None if timeout is None else time.monotonic() + timeout
+        result = predicate()
+        while not result:
+            remaining = None if end is None else end - time.monotonic()
+            if remaining is not None and remaining <= 0:
+                break
+            self.wait(remaining)
+            result = predicate()
+        return result
+
+    def notify(self, n: int = 1):
+        self._sched.pause("cond.notify")
+        self._cond.notify(n)
+
+    def notify_all(self):
+        self._sched.pause("cond.notify_all")
+        self._cond.notify_all()
+
+
+@contextlib.contextmanager
+def fuzzed_primitives(sched: Schedule):
+    """Patch ``threading.Condition`` / ``threading.Lock`` so objects
+    constructed inside the block are schedule-instrumented for life.
+    Patching is process-global — construction windows from concurrent
+    tests must not overlap, so entry is serialized on a module lock."""
+    with _PATCH_LOCK:
+        threading.Condition = lambda lock=None: FuzzedCondition(sched, lock)
+        threading.Lock = lambda: FuzzedLock(sched)
+        try:
+            yield sched
+        finally:
+            threading.Condition = _REAL_CONDITION
+            threading.Lock = _REAL_LOCK
+
+
+_PATCH_LOCK = _REAL_LOCK()
+
+
+class DeadlockError(AssertionError):
+    """A scenario failed to finish inside its watchdog budget."""
+
+
+def _dump_frames() -> str:
+    lines = []
+    for tid, frame in sys._current_frames().items():
+        lines.append(f"--- thread {tid} ---")
+        lines.extend(l.rstrip() for l in traceback.format_stack(frame))
+    return "\n".join(lines)
+
+
+def run_with_watchdog(fn: Callable[[], None], timeout_s: float = 30.0,
+                      label: str = "scenario") -> None:
+    """Run ``fn`` on a worker thread; a join timeout is reported as a
+    deadlock with every live thread's stack (the harness's no-deadlock
+    invariant).  Exceptions from ``fn`` re-raise on the caller."""
+    box: Dict[str, BaseException] = {}
+
+    def _body():
+        try:
+            fn()
+        except BaseException as e:  # surfaced on join below
+            box["err"] = e
+
+    t = threading.Thread(target=_body, daemon=True, name=f"wd-{label}")
+    t.start()
+    t.join(timeout_s)
+    if t.is_alive():
+        raise DeadlockError(
+            f"{label!r} did not finish within {timeout_s:.0f}s — "
+            f"deadlock or livelock.  Live threads:\n{_dump_frames()}")
+    if "err" in box:
+        raise box["err"]
+
+
+class MonotoneStats:
+    """Asserts that a set of counters sampled over time never decreases
+    (the 'stats monotone' conservation invariant)."""
+
+    def __init__(self, keys):
+        self.keys = tuple(keys)
+        self._last: Dict[str, float] = {}
+
+    def sample(self, stats: Dict[str, float], where: str = "") -> None:
+        for k in self.keys:
+            cur = float(stats.get(k, 0))
+            prev = self._last.get(k)
+            if prev is not None and cur < prev:
+                raise AssertionError(
+                    f"stat {k!r} went backwards ({prev} -> {cur}) {where}")
+            self._last[k] = cur
