@@ -4,13 +4,29 @@ The paper's Termux comparison measures its native runtime vs an unoptimized
 pipeline; the controlled analogue here is the same exact-attention operator
 with and without the C4 optimization: step time + the quadratic-vs-streaming
 intermediate footprint across sequence lengths.
+
+``flash_rows`` extends the table to long sequences (1k/8k/32k): the Pallas
+flash kernel vs its streaming numerics oracle (``impl="ref"``), reporting
+wall time and the analytic peak score-intermediate bytes each path
+materializes (naive S^2 / streaming q-chunk x kv-chunk / flash tile).  Full
+runs land in ``BENCH_attention.json`` (committed artifact); on CPU the
+Pallas kernel executes in interpret mode, so the committed wall numbers are
+an algorithmic (not kernel-level) comparison — the memory column is the
+portable story.
+
+    PYTHONPATH=src python -m benchmarks.bench_attention [--quick] [--json F]
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 
 from benchmarks.common import row, time_call
 from repro.core.attention import attention
+
+_COMMITTED_JSON = "BENCH_attention.json"
 
 
 def main(fast: bool = False):
@@ -33,5 +49,61 @@ def main(fast: bool = False):
             f"scores {stream_mb:.1f}MB ({naive_mb/stream_mb:.0f}x smaller)")
 
 
+def flash_rows(fast: bool = False, out_json: str = _COMMITTED_JSON):
+    """Flash (Pallas) vs ref (streaming oracle) at long seq: wall + the
+    peak score-intermediate bytes each path holds.  ``--quick`` runs 1k
+    only (CI); the full 1k/8k/32k sweep writes the committed artifact."""
+    b, h, d = 1, 2, 64
+    chunk = 512
+    block = 128                      # the kernel's query/key tile edge
+    seqs = (1024,) if fast else (1024, 8192, 32768)
+    iters = 3 if fast else 1         # 32k interpret-mode calls are heavy
+    results = {"geometry": {"batch": b, "heads": h, "head_dim": d,
+                            "chunk": chunk, "block": block},
+               "rows": {}}
+    for s in seqs:
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, d))
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, d))
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d))
+        f_ref = jax.jit(lambda q, k, v: attention(
+            q, k, v, causal=True, impl="ref", chunk=chunk))
+        f_flash = jax.jit(lambda q, k, v: attention(
+            q, k, v, causal=True, impl="flash"))
+        us_ref = time_call(f_ref, q, k, v, iters=iters)
+        us_flash = time_call(f_flash, q, k, v, iters=iters)
+        naive_mb = b * h * s * s * 4 / 1e6          # what S^2 would cost
+        ref_mb = b * h * min(chunk // 2, s) * chunk * 4 / 1e6
+        flash_mb = b * h * block * block * 4 / 1e6  # one VMEM tile
+        row(f"flash_ref_s{s}", us_ref,
+            f"scores {ref_mb:.2f}MB (naive would be {naive_mb:.0f}MB)")
+        row(f"flash_pallas_s{s}", us_flash,
+            f"tile {flash_mb:.2f}MB ({ref_mb/flash_mb:.0f}x under ref, "
+            f"{naive_mb/flash_mb:.0f}x under naive)")
+        results["rows"][str(s)] = {
+            "ref_wall_us": us_ref, "flash_wall_us": us_flash,
+            "naive_scores_mb": naive_mb, "ref_scores_mb": ref_mb,
+            "flash_tile_mb": flash_mb,
+        }
+    if fast and out_json == _COMMITTED_JSON:
+        # quick-mode numbers must never clobber the committed artifact
+        out_json = None
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(results, f, indent=1)
+        row("flash_json", 0.0, out_json)
+
+
+def main_cli():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", "--fast", action="store_true", dest="quick",
+                    help="reduced sweep (CI)")
+    ap.add_argument("--json", default=_COMMITTED_JSON,
+                    help="output artifact path (full runs only)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(fast=args.quick)
+    flash_rows(fast=args.quick, out_json=args.json)
+
+
 if __name__ == "__main__":
-    main()
+    main_cli()

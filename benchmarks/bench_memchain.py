@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import tempfile
 import time
 
@@ -114,6 +115,7 @@ def main(fast: bool = False):
     stream_rows(fast)
     stream_lora_rows(fast)
     stream_qlora_rows(fast)
+    act_offload_rows(fast)
 
 
 def offload_rows(fast: bool = False, num_segments: int = 8, window: int = 2):
@@ -326,6 +328,115 @@ def stream_qlora_rows(fast: bool = False, window: int = 2, rank: int = 8):
     row("stream_qlora_flash_analytic_124m", 0.0,
         f"on-flash frozen base {fl32/1e6:.0f}MB -> {fl8/1e6:.0f}MB "
         f"(x{fl32/max(fl8,1):.2f})")
+
+
+def act_offload_rows(fast: bool = False, window: int = 2):
+    """Long-sequence activation offload: constant-token seq-len sweep.
+
+    The streamed driver made resident *params* depth-independent, but the
+    device-resident boundary activations still cost (L+1) * B * S * D
+    fp32 — the remaining wall for long documents.  This sweep holds the
+    token budget constant (one long document vs many short chats, the
+    paper's on-device corpus framing) and stretches seq_len 512 -> 32k on
+    a deep-narrow ssm config (the sub-quadratic family the repo's long-seq
+    cells run), comparing measured boundary-activation residency and tok/s
+    with and without ``--offload-activations --activation-codec bf16``.
+
+    Gates (the CI perf job runs ``--quick``):
+      - act-offload resident < no-offload resident at seq 4096;
+      - full sweep: the 32k act-offload figure stays within 1.35x the
+        seq-512 act-offload figure, while no-offload at 32k is >= 10x it.
+    """
+    from repro.config import ModelConfig
+
+    n_layers = 12 if fast else 32
+    tokens = 4096 if fast else 32768
+    seqs = [512, 4096] if fast else [512, 4096, 32768]
+    cfg = ModelConfig(
+        name="mamba-deep-bench", family="ssm",
+        n_layers=n_layers, d_model=32, n_heads=1, n_kv_heads=1, d_ff=0,
+        vocab_size=256, head_dim=8, pos_variant="none", tie_embeddings=True,
+        ssm_state=16, ssm_head_dim=8, ssm_expand=2, ssm_chunk=256,
+        max_seq_len=65536)
+    steps = 2
+    specs = registry.param_specs(cfg)
+    measured = {}   # (seq, offload) -> resident bytes
+    results = {"config": {"n_layers": n_layers, "d_model": cfg.d_model,
+                          "tokens_per_step": tokens, "window": window,
+                          "codec": "bf16", "family": cfg.family},
+               "rows": {}}
+    for seq in seqs:
+        batch = tokens // seq
+        for off in (False, True):
+            tcfg = TrainConfig(
+                global_batch=batch, seq_len=seq, compute_dtype="float32",
+                total_steps=steps + 1, warmup_steps=1,
+                offload_resident=window, offload_stream_params=True,
+                offload_activations=off,
+                activation_codec="bf16" if off else "fp32")
+            state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+            b = registry.make_batch(jax.random.PRNGKey(1), cfg, batch, seq)
+            b["labels"] = b["tokens"]
+            with tempfile.TemporaryDirectory() as d:
+                lst = LayerStreamedState.create(state, d + "/segs",
+                                                max_resident=window)
+                step = make_stream_step(cfg, tcfg, lst, d + "/grads")
+                step(b, 0)              # warm the per-stage jit caches
+                t0 = time.perf_counter()
+                for i in range(steps):
+                    step(b, i + 1)
+                dt = time.perf_counter() - t0
+                s = step.stats()
+                res = s["act_resident_peak_bytes"]
+                measured[(seq, off)] = res
+                tag = "bf16_offload" if off else "resident"
+                hit = (f" hit {s.get('act_write_hits', 0) + s.get('act_prefetch_hits', 0)}"
+                       f"/{s.get('act_takes', 0)}" if off else "")
+                row(f"act_sweep_seq{seq}_{tag}", dt / steps * 1e6,
+                    f"acts resident {res/1e6:.2f}MB "
+                    f"{tokens * steps / dt:.0f} tok/s "
+                    f"(B{batch} S{seq} L{n_layers}){hit}")
+                results["rows"][f"seq{seq}_{tag}"] = {
+                    "batch": batch, "seq_len": seq,
+                    "act_resident_peak_bytes": int(res),
+                    "tokens_per_s": tokens * steps / dt,
+                    "step_ms": dt / steps * 1e3,
+                    "act_takes": int(s.get("act_takes", 0)),
+                    "act_hits": int(s.get("act_write_hits", 0)
+                                    + s.get("act_prefetch_hits", 0)),
+                }
+                step.close()
+                lst.close()
+        # analytic (same geometry): device-resident vs spilled bound
+        _, a_res = stream_resident_bytes(
+            specs, window, write_queue=2 * window, batch=batch, seq_len=seq,
+            d_model=cfg.d_model)
+        _, a_off = stream_resident_bytes(
+            specs, window, write_queue=2 * window, batch=batch, seq_len=seq,
+            d_model=cfg.d_model, act_offload=True, act_bytes=2)
+        row(f"act_sweep_seq{seq}_analytic", 0.0,
+            f"resident {a_res/1e6:.2f}MB -> offload {a_off/1e6:.2f}MB "
+            f"(B{batch} S{seq})")
+        results["rows"][f"seq{seq}_analytic"] = {
+            "resident_bytes": int(a_res), "offload_bytes": int(a_off)}
+    assert measured[(4096, True)] < measured[(4096, False)], (
+        "act-offload resident must beat device-resident acts at seq 4096: "
+        f"{measured}")
+    base512 = measured[(512, True)]
+    if not fast:
+        grow_off = measured[(32768, True)] / max(base512, 1)
+        grow_res = measured[(32768, False)] / max(base512, 1)
+        row("act_sweep_summary", 0.0,
+            f"32k/512 act-offload x{grow_off:.2f} (<= 1.35) vs "
+            f"device-resident x{grow_res:.1f} (>= 10)")
+        assert grow_off <= 1.35, measured
+        assert grow_res >= 10.0, measured
+        results["summary"] = {"growth_offload_32k_over_512": grow_off,
+                              "growth_resident_32k_over_512": grow_res}
+        # quick-mode numbers never land in the committed artifact
+        with open("BENCH_act_offload.json", "w") as f:
+            json.dump(results, f, indent=1)
+        row("act_sweep_json", 0.0, "BENCH_act_offload.json")
 
 
 def main_cli():

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Tuned launch profile for phone-budget streamed training (README:
+# "Tuned launch profile").  Wraps any command — default: a long-seq
+# activation-offload smoke run — with the allocator + XLA environment
+# from repro.launch.env:
+#
+#   bash examples/run_tuned.sh                                   # demo run
+#   bash examples/run_tuned.sh python benchmarks/bench_memchain.py --quick
+#
+# tcmalloc only engages when a system copy exists (no install step); the
+# profile degrades gracefully without it.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="${PYTHONPATH:+$PYTHONPATH:}src"
+
+# one source of truth for the env overlay (tcmalloc LD_PRELOAD, large-alloc
+# report threshold, XLA step markers, TF log silencing)
+eval "$(python -m repro.launch.env --print)"
+
+if [ "$#" -gt 0 ]; then
+    exec "$@"
+fi
+
+exec python -m repro.launch.train \
+    --arch gpt2_124m --smoke --steps 8 --batch 4 --seq 512 \
+    --offload-stream-params --offload-activations --activation-codec bf16

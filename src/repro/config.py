@@ -158,7 +158,8 @@ class TrainConfig:
     grad_reduce_dtype: str = ""      # "" -> compute dtype; "bfloat16" = compression
 
     # --- resource-aware runtime (the paper's optimization chain) ---
-    attention_impl: str = "streaming"  # naive | streaming | flash  (paper C4)
+    attention_impl: str = "streaming"  # naive | streaming (alias: ref) |
+                                       # flash (Pallas kernel)   (paper C4)
     remat_policy: str = "none"         # none | dots | full        (paper C3)
     shard_preset: str = "fsdp_tp"      # dp | fsdp | tp | fsdp_tp | fsdp_dp (C1)
     moe_dispatch_dtype: str = ""       # "" -> compute; float8_e4m3fn halves a2a
@@ -189,6 +190,14 @@ class TrainConfig:
     base_quant: str = ""               # "" | int8: quantize the *frozen* base
                                        # segments of streamed LoRA per channel
                                        # (QLoRA-style; ~4x less flash + window)
+    offload_activations: bool = False  # spill layer-boundary activations to a
+                                       # per-step scratch store during the
+                                       # forward sweep, re-pulled in reverse
+                                       # order for backward — resident acts
+                                       # stop scaling with depth (long seq)
+    activation_codec: str = "fp32"     # fp32 | bf16 | int8 (per-token absmax)
+                                       # storage precision of spilled acts;
+                                       # fp32 is a bit-exact spill
 
     # --- LoRA (paper C6) ---
     lora_rank: int = 0                 # 0 -> Full-FT

@@ -70,10 +70,22 @@ def attention(q, k, v, *, q_pos=None, kv_pos=None, causal=True, window=0,
 
     if impl == "naive":
         return _naive(q, k, v, q_pos, kv_pos, causal, window)
-    if impl == "streaming":
+    if impl in ("streaming", "ref"):
+        # "ref" aliases the streaming path: it is the numerics oracle the
+        # flash Pallas kernel is validated against (tests + benches)
         return _streaming(q, k, v, q_pos, kv_pos, causal, window, chunk)
     if impl == "flash":
+        if not isinstance(window, int):
+            # scanned-layer drivers carry the per-layer sliding window as a
+            # traced scalar, but the Pallas grid/skip structure specializes
+            # on it — those layers ride the exact streaming oracle instead
+            # (full-attention configs pass a static 0 and hit the kernel)
+            return _streaming(q, k, v, q_pos, kv_pos, causal, window, chunk)
         from repro.kernels.flash_attention import ops as flash_ops
+        # the Pallas kernel has no CPU lowering — interpret mode is the
+        # correct (and only) execution path on the CPU backend, so gate it
+        # on the backend instead of making every caller thread the flag
+        interpret = interpret or jax.default_backend() == "cpu"
         return flash_ops.flash_attention(
             q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
             window=window, interpret=interpret)

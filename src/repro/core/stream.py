@@ -64,6 +64,17 @@ The step is an *overlap pipeline*, not just a memory bound:
 - **Async write-back** (``tcfg.offload_async_writeback``): dirty segment
   eviction hands bytes to the engine's background writer instead of
   encode+msync on the critical path (repro/offload/engine.py).
+- **Activation-boundary offload** (``tcfg.offload_activations``): the
+  forward sweep spills boundary ``i`` into a per-step activation scratch
+  store (repro/offload/act_store.py) right after block ``i``'s compute is
+  dispatched — only the running boundary plus ``acts[L]`` stay on device,
+  so resident activations stop scaling with depth (the long-sequence
+  wall).  The backward sweep pulls boundaries back in *reverse* order
+  (``i-1`` prefetches while block ``i``'s VJP runs; a boundary still in
+  the write queue is stolen straight back), optionally through a
+  bf16/int8 activation codec (``tcfg.activation_codec``; fp32 is a
+  bit-exact spill — loss trajectories match the device-resident path
+  bitwise).
 
 ``pipeline_stats()`` reports the overlap breakdown (time blocked on reads
 / writes / host->device staging) that the stream-throughput benchmark
@@ -73,6 +84,8 @@ from __future__ import annotations
 
 import math
 import os
+import shutil
+import tempfile
 import time
 from typing import Any, Dict, List, Optional
 
@@ -84,6 +97,8 @@ from repro.config import ModelConfig, TrainConfig
 from repro.core.accumulate import split_batch
 from repro.models import transformer as T
 from repro.models.lm import make_layer_program
+from repro.offload.act_store import ActivationStore, act_store_for
+from repro.offload.codecs import activation_codec
 from repro.offload.engine import OffloadEngine
 from repro.offload.segments import SegmentStore
 from repro.offload.state import (LayerStreamedState, P,
@@ -154,6 +169,25 @@ class StreamedTrainStep:
         self._sumsq = jax.jit(
             lambda gs, inv: sum(jnp.sum(jnp.square(g * inv)) for g in gs))
         self.t_h2d_s = 0.0                    # host->device staging time
+        # --- activation-boundary offload (long-sequence memory wall) ---
+        self.act_offload = bool(getattr(tcfg, "offload_activations", False))
+        self._act_codec = activation_codec(
+            getattr(tcfg, "activation_codec", "fp32"))
+        self.act_store: Optional[ActivationStore] = None
+        self._act_dtype = None                # device dtype of boundary acts
+        self._act_tmp = False
+        # measured boundary-activation residency (device boundaries held +
+        # the spill store's bounded host buffers) — the mem-chain bench's
+        # seq-len sweep reads this
+        self.act_resident_peak_bytes = 0
+        if self.act_offload:
+            if grad_dir:
+                self._act_dir = grad_dir.rstrip("/") + "-acts"
+            else:
+                self._act_dir = tempfile.mkdtemp(prefix="repro_acts_")
+                self._act_tmp = True
+        else:
+            self._act_dir = ""
         self.grad_engine: Optional[OffloadEngine] = None
         if self.lora_mode:
             if adapter is None:
@@ -256,6 +290,47 @@ class StreamedTrainStep:
         return self._pos_cache[(b, s)]
 
     # ------------------------------------------------------------------
+    # activation-boundary offload (repro/offload/act_store.py)
+    # ------------------------------------------------------------------
+    def _ensure_act_store(self, x):
+        """Lazily (re)build the per-step activation scratch store once the
+        boundary geometry (B, S, D) is known — at the first forward sweep,
+        or when the batch shape changes (train -> eval geometry)."""
+        self.act_store = act_store_for(
+            self._act_dir, self.lstate.n_layers, x.shape, self._act_codec,
+            existing=self.act_store)
+        self._act_dtype = x.dtype
+
+    def _act_sink(self, i: int, x):  # hot-path
+        """Spill boundary ``i`` (block ``i``'s device input) to the store —
+        called right after block ``i``'s compute is dispatched, so the
+        device->host pull and the background write ride behind it."""
+        a = np.asarray(x)  # sync-point: the boundary spill is a D2H pull
+        #                    by design (waits on block i-1's output only —
+        #                    block i's in-flight compute keeps overlapping)
+        self.act_store.sink(i, a)
+
+    def _act_take(self, i: int):  # hot-path
+        """Boundary ``i`` back on device for block ``i``'s VJP: write-queue
+        steal / reverse-order prefetch hit / sync read, then one
+        host->device conversion; the host buffer recycles into the
+        prefetcher's pool."""
+        arr = self.act_store.take(i)
+        a = jnp.asarray(arr, self._act_dtype)
+        self.act_store.recycle(i, arr)
+        return a
+
+    def _act_note(self, acts, live: int = 0):  # hot-path
+        """Sample the measured boundary-activation residency: device
+        boundaries still held (non-None ``acts`` entries + ``live`` working
+        bytes) plus the spill store's bounded host buffers."""
+        held = live + sum(a.nbytes for a in acts if a is not None)
+        if self.act_store is not None:
+            held += self.act_store.inflight_bytes()
+        if held > self.act_resident_peak_bytes:
+            self.act_resident_peak_bytes = held
+
+    # ------------------------------------------------------------------
     # hot-path
     def _sink(self, seg: int, names: List[str], grads: List[Any],
               first: bool, last: bool, n_micro: int):
@@ -296,6 +371,9 @@ class StreamedTrainStep:
         else:
             x = prog.embed(head, mb)
         positions = self._positions(x.shape[0], x.shape[1])
+        spill = keep_acts and self.act_offload
+        if spill:
+            self._ensure_act_store(x)
         acts = [x]
         aux_sum = jnp.zeros((), jnp.float32)
         lstate.prefetch_layer(0)
@@ -310,17 +388,27 @@ class StreamedTrainStep:
                 lstate.prefetch_layer(lstate.head_segment)
             bp = self._block_params(i)
             win = self._windows_dev[i]
+            x_in = x
             if self.lora_mode:
-                x, aux = prog.block(bp, self._block_lora(lblocks, i), x, win,
-                                    positions)
+                x, aux = prog.block(bp, self._block_lora(lblocks, i), x_in,
+                                    win, positions)
             else:
-                x, aux = prog.block(bp, x, win, positions)
+                x, aux = prog.block(bp, x_in, win, positions)
             # block i's compute is in flight: stage i+1's device copy now
             self._stage_layer(i + 1)
-            if keep_acts:
+            if spill:
+                # ... and spill boundary i behind it: only the running
+                # boundary (and the final acts[L] the head VJP consumes)
+                # stay device-resident — resident acts stop scaling with L
+                self._act_sink(i, x_in)
+                acts[0] = None
+                acts.append(x if i + 1 == lstate.n_layers else None)
+            elif keep_acts:
                 acts.append(x)
             else:
                 acts[0] = x
+            if keep_acts:
+                self._act_note(acts, live=x_in.nbytes if spill else 0)
             aux_sum = aux_sum + aux
         return head, acts, aux_sum, positions
 
@@ -342,12 +430,19 @@ class StreamedTrainStep:
         sq = 0.0
         lstate.prefetch_layer(L - 1)
         self.grad_engine.prefetch(L - 1)
+        if self.act_offload:
+            self.act_store.prefetch(L - 1)
         for i in reversed(range(L)):
             lstate.prefetch_layer(i - 1)
             self.grad_engine.prefetch(
                 i - 1 if i > 0 else lstate.head_segment)
+            if self.act_offload and i > 0:
+                # boundary i-1 pages back in while block i's VJP runs
+                self.act_store.prefetch(i - 1)
             bp = self._block_params(i)
-            dp, dx = prog.block_vjp(bp, acts[i], self._windows_dev[i],
+            a_in = acts[i] if acts[i] is not None else self._act_take(i)
+            self._act_note(acts, live=a_in.nbytes)
+            dp, dx = prog.block_vjp(bp, a_in, self._windows_dev[i],
                                     positions, dx, daux)
             # the VJP is in flight: stage block i-1 while it computes
             self._stage_layer(i - 1)
@@ -380,11 +475,18 @@ class StreamedTrainStep:
         # ---- backward sweep: re-pull frozen blocks, collect adapter grads
         block_grads: List[Any] = [None] * L
         lstate.prefetch_layer(L - 1)
+        if self.act_offload:
+            self.act_store.prefetch(L - 1)
         for i in reversed(range(L)):
             lstate.prefetch_layer(i - 1)
+            if self.act_offload and i > 0:
+                # boundary i-1 pages back in while block i's VJP runs
+                self.act_store.prefetch(i - 1)
             bp = self._block_params(i)
+            a_in = acts[i] if acts[i] is not None else self._act_take(i)
+            self._act_note(acts, live=a_in.nbytes)
             dlp, dx = prog.block_vjp(bp, self._block_lora(lblocks, i),
-                                     acts[i], self._windows_dev[i],
+                                     a_in, self._windows_dev[i],
                                      positions, dx, daux)
             self._stage_layer(i - 1)       # overlap the VJP in flight
             acts[i + 1] = None             # free the boundary activation
@@ -516,6 +618,10 @@ class StreamedTrainStep:
         if self.grad_engine is not None:
             s.update({"grad_" + k: v
                       for k, v in self.grad_engine.stats().items()})
+        if self.act_store is not None:
+            s.update({"act_" + k: v
+                      for k, v in self.act_store.stats().items()})
+        s["act_resident_peak_bytes"] = self.act_resident_peak_bytes
         s["stage_h2d_s"] = self.t_h2d_s
         return s
 
@@ -527,19 +633,29 @@ class StreamedTrainStep:
         s = self.stats()
         out = {
             "read_block_s": float(s.get("param_t_read_block_s", 0.0))
-            + float(s.get("grad_t_read_block_s", 0.0)),
+            + float(s.get("grad_t_read_block_s", 0.0))
+            + float(s.get("act_t_read_block_s", 0.0)),
             "write_block_s": float(s.get("param_t_write_block_s", 0.0))
-            + float(s.get("grad_t_write_block_s", 0.0)),
+            + float(s.get("grad_t_write_block_s", 0.0))
+            + float(s.get("act_t_write_block_s", 0.0)),
             "stage_h2d_s": float(self.t_h2d_s),
             "writeback_busy_s": float(s.get("param_writeback_busy_s", 0.0))
-            + float(s.get("grad_writeback_busy_s", 0.0)),
+            + float(s.get("grad_writeback_busy_s", 0.0))
+            + float(s.get("act_writeback_busy_s", 0.0)),
         }
         hits = s.get("param_prefetch_hits", 0)
         loads = s.get("param_sync_loads", 0)
         out["prefetch_hit_rate"] = (hits / (hits + loads)
                                     if (hits + loads) else 1.0)
+        if self.act_store is not None:
+            out["act_hit_rate"] = self.act_store.hit_rate()
         return out
 
     def close(self):
         if self.grad_engine is not None:
             self.grad_engine.close()
+        if self.act_store is not None:
+            self.act_store.close()
+            self.act_store = None
+        if self._act_tmp and self._act_dir:
+            shutil.rmtree(self._act_dir, ignore_errors=True)

@@ -68,7 +68,11 @@ def _stream_geometry(specs):
 
 
 def stream_resident_bytes(specs, window: int = 2, param_bytes: int = 4,
-                          moment_bytes: int = 8, write_queue: int = 0):
+                          moment_bytes: int = 8, write_queue: int = 0,
+                          batch: int = 0, seq_len: int = 0,
+                          d_model: int = 0, act_offload: bool = False,
+                          act_bytes: int = 4, act_window: int = 2,
+                          act_queue: int = 2):
     """Analytic peak resident state bytes of the *layer-streamed* path
     (repro/core/stream.py): fwd/bwd pulls layer-aligned (p, m, v) segments
     through the offload window, so compute holds the head segment (embed /
@@ -80,13 +84,33 @@ def stream_resident_bytes(specs, window: int = 2, param_bytes: int = 4,
     recycle pool (up to ``window`` free buffer sets) — pass
     ``write_queue=2*window`` to bound the fully pipelined engine honestly
     (deferring a write defers its memory too, and pooled free buffers are
-    still resident bytes).  Returns (full_state, resident) bytes like
-    ``offload_resident_bytes``; ``moment_bytes=4`` models bf16 moments."""
+    still resident bytes).
+
+    With ``batch * seq_len * d_model > 0`` the bound becomes seq-len-aware,
+    adding the boundary-activation term the two-sweep driver actually
+    holds: device-resident acts pin all ``n_layers + 1`` fp32 boundaries
+    (``O(L * B * S * D)`` — the long-seq memory wall), while
+    ``act_offload=True`` models the activation spill
+    (repro/offload/act_store.py): one live boundary on device plus the
+    act prefetcher's ``act_window + 1`` pooled buffers and the act
+    writer's ``act_queue`` queued spills, each ``act_bytes`` per element
+    in storage form (4 fp32 / 2 bf16 / ~1 int8) — depth-independent.
+
+    Returns (full_state, resident) bytes like ``offload_resident_bytes``;
+    ``moment_bytes=4`` models bf16 moments."""
     per_leaf = param_bytes + moment_bytes
     block_n, head_n, n_layers = _stream_geometry(specs)
     layer_seg = block_n // max(n_layers, 1) * per_leaf
     full_state = (block_n + head_n) * per_leaf
     resident = head_n * per_leaf + (window + 1 + write_queue) * layer_seg
+    act_elems = batch * seq_len * d_model
+    if act_elems > 0:
+        if act_offload:
+            resident += (1 * act_elems * 4                       # live x
+                         + (act_window + 1 + act_queue)
+                         * act_elems * act_bytes)                # spill share
+        else:
+            resident += (n_layers + 1) * act_elems * 4
     return full_state, int(resident)
 
 

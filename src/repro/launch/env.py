@@ -1,0 +1,128 @@
+"""Tuned process-environment profile for phone-budget runs.
+
+The long-sequence streamed trainer is allocator- and logging-sensitive:
+every step mmaps/munmaps segment files, round-trips multi-hundred-MB host
+activation buffers through the spill store, and (on glibc malloc) the
+transient fp32 spill copies fragment the arena badly enough to inflate
+peak RSS well past the analytic resident bound.  This module centralizes
+the launch profile the benches and ``examples/run_tuned.sh`` share:
+
+- **tcmalloc** via ``LD_PRELOAD`` when a system copy exists (thread-caching
+  allocator: the AsyncWriter / Prefetcher threads allocate and free the
+  same segment-sized buffers every step, exactly tcmalloc's sweet spot),
+  with ``TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD`` raised so multi-GB
+  streaming allocations don't spam stderr;
+- **XLA flags**: ``--xla_force_host_platform_device_count`` (host-mesh
+  sizing for the dry-run/sharding tools) and step markers for profiler
+  alignment;
+- ``TF_CPP_MIN_LOG_LEVEL=4`` to silence the XLA/TSL banner noise that
+  otherwise pollutes benchmark CSV capture.
+
+``LD_PRELOAD`` only takes effect at process start, so the overlay is
+applied by *launchers* (``run_tuned.sh``, or ``python -m repro.launch.env
+<cmd> ...`` which re-execs), never mid-process.
+"""
+from __future__ import annotations
+
+import os
+import shlex
+import sys
+from typing import Dict, Optional
+
+# well-known system locations, checked in order (full build first — it
+# includes the heap profiler hooks the bench harness can enable)
+TCMALLOC_CANDIDATES = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/aarch64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/aarch64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+    "/usr/lib/libtcmalloc_minimal.so.4",
+)
+
+# large-alloc report threshold: 60 GB, i.e. effectively off — streaming
+# training legitimately makes multi-GB host allocations every few steps
+TCMALLOC_REPORT_THRESHOLD = "60000000000"
+
+
+def find_tcmalloc() -> Optional[str]:
+    """First present tcmalloc shared object, or None (profile degrades
+    gracefully on images without gperftools — nothing to install)."""
+    for path in TCMALLOC_CANDIDATES:
+        if os.path.exists(path):
+            return path
+    return None
+
+
+def tuned_env(host_device_count: int = 0, step_markers: bool = True,
+              base: Optional[Dict[str, str]] = None) -> Dict[str, str]:
+    """The env-var *overlay* of the tuned profile (only the keys to set).
+
+    ``host_device_count > 0`` forces that many host-platform XLA devices
+    (the mesh tools' CPU stand-in); ``step_markers`` adds the step-marker
+    annotation XLA flag so profiles align on step boundaries.  Existing
+    ``XLA_FLAGS`` / ``LD_PRELOAD`` in ``base`` (default: this process's
+    environment) are extended, not clobbered.
+    """
+    base = os.environ if base is None else base
+    env: Dict[str, str] = {}
+
+    tc = find_tcmalloc()
+    if tc is not None:
+        pre = base.get("LD_PRELOAD", "")
+        if tc not in pre.split(":"):
+            env["LD_PRELOAD"] = f"{tc}:{pre}" if pre else tc
+        env["TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD"] = \
+            base.get("TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD",
+                     TCMALLOC_REPORT_THRESHOLD)
+
+    flags = []
+    if step_markers:
+        # enum-named value — the numeric spelling is rejected (fatally) by
+        # XLA's env-flag parser on current jaxlibs
+        flags.append("--xla_step_marker_location=STEP_MARK_AT_ENTRY")
+    if host_device_count > 0:
+        flags.append(
+            f"--xla_force_host_platform_device_count={host_device_count}")
+    existing = base.get("XLA_FLAGS", "")
+    new = [f for f in flags if f.split("=")[0] not in existing]
+    if new:
+        env["XLA_FLAGS"] = (existing + " " + " ".join(new)).strip()
+
+    env.setdefault("TF_CPP_MIN_LOG_LEVEL",
+                   base.get("TF_CPP_MIN_LOG_LEVEL", "4"))
+    return env
+
+
+def main(argv=None) -> int:
+    """``python -m repro.launch.env [--print] [--devices N] [cmd ...]``
+
+    With a command: re-exec it under the tuned profile (``LD_PRELOAD``
+    needs a fresh process).  With ``--print``: emit ``export`` lines for
+    shell ``eval`` (what ``examples/run_tuned.sh`` does).
+    """
+    argv = list(sys.argv[1:] if argv is None else argv)
+    devices = 0
+    emit = False
+    while argv and argv[0].startswith("--"):
+        if argv[0] == "--print":
+            emit = True
+            argv.pop(0)
+        elif argv[0] == "--devices":
+            argv.pop(0)
+            devices = int(argv.pop(0))
+        else:
+            raise SystemExit(f"unknown flag {argv[0]!r}")
+    overlay = tuned_env(host_device_count=devices)
+    if emit or not argv:
+        for k, v in sorted(overlay.items()):
+            print(f"export {k}={shlex.quote(v)}")
+        return 0
+    env = dict(os.environ)
+    env.update(overlay)
+    os.execvpe(argv[0], argv, env)
+    return 1  # unreachable
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -452,6 +452,17 @@ def main():
                          "--offload-stream-params): int8 per-channel "
                          "absmax, ~4x less flash and resident window; the "
                          "jitted per-block program dequantizes on the fly")
+    ap.add_argument("--offload-activations", action="store_true",
+                    help="spill layer-boundary activations to a per-step "
+                         "scratch store during the streamed forward sweep "
+                         "and re-pull them in reverse order for backward "
+                         "(requires --offload-stream-params): resident "
+                         "activations stop scaling with depth at long seq")
+    ap.add_argument("--activation-codec", default="fp32",
+                    choices=("fp32", "bf16", "int8"),
+                    help="storage precision of spilled activations: fp32 is "
+                         "a bit-exact spill, bf16 halves the bytes, int8 "
+                         "quarters them (per-token absmax)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
@@ -477,6 +488,16 @@ def main():
                                 and args.offload_stream_params):
         ap.error("--base-quant applies to the frozen base of streamed LoRA; "
                  "pass --lora-rank N and --offload-stream-params with it")
+    if args.offload_activations and not args.offload_stream_params:
+        ap.error("--offload-activations spills the streamed driver's "
+                 "boundary activations; pass --offload-stream-params with it")
+    from repro.core.remat import POLICIES
+    if args.remat not in POLICIES:
+        ap.error(f"--remat {args.remat!r} is not a remat policy "
+                 f"(choose from {', '.join(POLICIES)})")
+    if args.attention not in ("naive", "streaming", "ref", "flash"):
+        ap.error(f"--attention {args.attention!r} is not an attention impl "
+                 "(choose from naive, streaming, ref, flash)")
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     tcfg = TrainConfig(
@@ -499,7 +520,9 @@ def main():
         offload_moment_dtype=args.offload_moment_dtype,
         offload_async_writeback=args.offload_async_writeback,
         offload_staging=args.offload_staging,
-        base_quant=args.base_quant)
+        base_quant=args.base_quant,
+        offload_activations=args.offload_activations,
+        activation_codec=args.activation_codec)
     governor = None
     if args.energy:
         governor = EnergyGovernor(monitor=SimulatedBattery(

@@ -104,6 +104,10 @@ def forward(params, batch, cfg: ModelConfig, tcfg: TrainConfig):
     x = constrain(x, ("batch", "seq", "act_embed"), preset=tcfg.shard_preset)
     positions = _positions(cfg, b, s_total)
     windows = T.layer_windows(cfg)
+    # full-attention configs carry an all-zero per-layer windows array; the
+    # scanned entry arrives as a traced scalar, so pass the zero statically
+    # instead — kernel impls (flash) specialize their grid on the window
+    full_attn = cfg.sliding_window <= 0
     fam = cfg.family
     bspecs = block_specs(cfg)
     from repro.sharding import constrain_params
@@ -118,11 +122,12 @@ def forward(params, batch, cfg: ModelConfig, tcfg: TrainConfig):
         if fam in ("dense", "vlm"):
             lp, win = layer
             x, _ = T.apply_block(lp, x, cfg, tcfg, positions=positions,
-                                 window=win)
+                                 window=0 if full_attn else win)
         elif fam == "moe":
             lp, win = layer
-            x, _, a = moe_mod.apply_moe_block(lp, x, cfg, tcfg,
-                                              positions=positions, window=win)
+            x, _, a = moe_mod.apply_moe_block(
+                lp, x, cfg, tcfg, positions=positions,
+                window=0 if full_attn else win)
             aux = aux + a
         elif fam == "ssm":
             lp = layer
@@ -135,7 +140,7 @@ def forward(params, batch, cfg: ModelConfig, tcfg: TrainConfig):
         elif fam == "hybrid":
             lp, win = layer
             x, _, _ = apply_hymba_block(lp, x, cfg, tcfg, positions=positions,
-                                        window=win)
+                                        window=0 if full_attn else win)
         return (x, aux), None
 
     body = maybe_remat(body, tcfg.remat_policy)
@@ -235,6 +240,11 @@ def make_layer_program(cfg: ModelConfig, tcfg: TrainConfig) -> LayerProgram:
 
     def block_fn(bp, x, window, positions):
         bp = constrain_params(bp, bspecs, tcfg.shard_preset)
+        if cfg.sliding_window <= 0:
+            # the driver feeds the per-layer window as a jit argument, so it
+            # is traced here; full-attention configs only ever carry zeros —
+            # pin the zero statically so the flash kernel can specialize
+            window = 0
         aux = jnp.zeros((), jnp.float32)
         if fam in ("dense", "vlm"):
             x, _ = T.apply_block(bp, x, cfg, tcfg, positions=positions,
@@ -254,6 +264,12 @@ def make_layer_program(cfg: ModelConfig, tcfg: TrainConfig) -> LayerProgram:
             x, _, _ = apply_hymba_block(bp, x, cfg, tcfg, positions=positions,
                                         window=window)
         return x, aux
+
+    # paper C3 on the streamed path too: the per-block VJPs below close over
+    # the remat-wrapped body, so a ``dots``/``full`` policy trades block-
+    # internal activation residency for recompute exactly as the in-memory
+    # scan body does (validated at parse time in launch/train.py)
+    block_fn = maybe_remat(block_fn, tcfg.remat_policy)
 
     def head_fn(head, x, batch, aux_sum):
         if cfg.n_meta_tokens > 0:
@@ -450,6 +466,7 @@ def decode_step(params, cache, tokens, index, cfg: ModelConfig,
     else:
         positions = jnp.broadcast_to(pos[None], (b, s))
     windows = T.layer_windows(cfg)
+    full_attn = cfg.sliding_window <= 0  # see forward(): pin the zero window
     fam = cfg.family
     bspecs = block_specs(cfg)
     from repro.sharding import constrain_params
@@ -459,6 +476,7 @@ def decode_step(params, cache, tokens, index, cfg: ModelConfig,
                  ) + tuple(layer[1:])
         if fam in ("dense", "vlm", "moe"):
             lp, ck, cv, win = layer
+            win = 0 if full_attn else win
             if fam == "moe":
                 y, (ck, cv), _ = moe_mod.apply_moe_block(
                     lp, x, cfg, tcfg, positions=positions, window=win,
@@ -476,6 +494,7 @@ def decode_step(params, cache, tokens, index, cfg: ModelConfig,
             return x + h, (st["conv"], st["ssm"])
         # hybrid
         lp, ck, cv, conv, ssm, win = layer
+        win = 0 if full_attn else win
         y, (ck, cv), st = apply_hymba_block(
             lp, x, cfg, tcfg, positions=positions, window=win,
             kv_cache=(ck, cv), cache_index=index,

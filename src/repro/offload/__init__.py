@@ -11,12 +11,17 @@ while segment ``i`` computes, and dirty (updated) segments are written back.
                per-channel quantization) — all dtype conversion lives here
 - segments.py  SegmentStore: mapping table + mmap segment files + COW snapshot
 - engine.py    OffloadEngine: LRU residency window + prefetch + write-back
+- act_store.py ActivationStore: per-step layer-boundary activation spill
+               (forward sinks ride the AsyncWriter, the backward sweep
+               re-pulls in reverse order through the Prefetcher)
 - state.py     OffloadedTrainState: segment-by-segment AdamW update;
                LayerStreamedState: layer-aligned segments (one per block +
                head) for the streamed fwd/bwd driver (repro/core/stream.py)
 """
+from repro.offload.act_store import ActivationStore  # noqa: F401
 from repro.offload.codecs import (CODECS, QuantLeaf,  # noqa: F401
-                                  SegmentCodec, dequant_tree, get_codec)
+                                  SegmentCodec, activation_codec,
+                                  dequant_tree, get_codec)
 from repro.offload.segments import (LeafRecord, SegmentStore,  # noqa: F401
                                     plan_segments)
 from repro.offload.engine import OffloadEngine, Prefetcher  # noqa: F401

@@ -1,0 +1,255 @@
+"""Per-step spill store for layer-boundary activations (long-seq streaming).
+
+Layer streaming made resident *params* depth-independent, but the streamed
+two-sweep driver (``repro/core/stream.py``) still pinned every boundary
+activation ``acts[0..L]`` on device, so memory scaled with ``seq_len x
+depth``.  This module closes that wall with the same machinery the param
+path already trusts:
+
+- the forward sweep ``sink``s boundary ``i`` into a layer-aligned scratch
+  ``SegmentStore`` (one single-leaf segment per boundary, sparse files —
+  rewritten every step, never read before written), the bytes riding the
+  bounded background :class:`AsyncWriter` behind the next block's compute;
+- the backward sweep pulls boundaries back in **reverse** order through the
+  slot-bounded :class:`Prefetcher` (boundary ``i-1`` pages in while block
+  ``i``'s VJP runs), with the prefetcher's pooled ``out=`` buffers keeping
+  the steady-state loop allocation-free (identity/bf16 codecs);
+- a boundary still sitting in the write queue is ``steal``-ed straight
+  back (a *write hit*): with a 2-deep queue the two most recently sunk
+  activations — exactly the first two the reverse walk wants — never touch
+  flash at all.
+
+Activation codecs (``repro/offload/codecs.py``): ``identity`` (fp32,
+bit-exact spill), ``bf16`` (the window stays bf16 — half the buffer
+bytes), ``act_int8`` (per-*token* absmax — activations carry outliers
+along the channel axis, so scales go per position, the transpose of the
+weight codec).  ``sink`` applies ``storage_roundtrip`` up front so a
+stolen (never-written) boundary is numerically identical to one that
+round-tripped through flash — the loss trajectory cannot depend on writer
+timing.
+
+Threading: the store itself is **single-owner** — ``sink``/``prefetch``/
+``take``/``barrier``/``close`` are issued by the step thread only (the
+same discipline as the ``OffloadEngine`` window).  All cross-thread state
+lives inside the internally-locked ``Prefetcher``/``AsyncWriter``; errors
+from either background thread surface on the next ``sink``/``take``/
+``barrier`` by their own contracts.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.offload.codecs import get_codec
+from repro.offload.engine import AsyncWriter, Prefetcher
+from repro.offload.segments import SegmentStore
+
+
+
+class ActivationStore:
+    """Scratch store spilling ``n_acts`` boundary activations of one shape.
+
+    ``shape``/``dtype`` are the *logical* (fp32 host) activation geometry;
+    every segment shares one signature so the prefetcher's buffer pool
+    recycles across boundaries.  ``depth`` bounds completed prefetch
+    buffers (reverse-walk lookahead); ``max_pending`` bounds the write
+    queue — both count toward :meth:`peak_inflight_bytes`.
+    """
+
+    def __init__(self, directory: str, n_acts: int, shape: Tuple[int, ...],
+                 codec: str = "identity", depth: int = 2,
+                 max_pending: int = 2):
+        if n_acts < 1:
+            raise ValueError(f"n_acts must be >= 1, got {n_acts}")
+        self.n_acts = int(n_acts)
+        self.shape = tuple(int(d) for d in shape)
+        self.codec_name = codec
+        self._codec = get_codec(codec)
+        os.makedirs(directory, exist_ok=True)
+        groups = [[(f"act.{i}", np.zeros(self.shape, np.float32), codec)]
+                  for i in range(self.n_acts)]
+        # sparse layout: every boundary is re-sunk before it is re-read,
+        # so there is no reason to burst n_acts * act_bytes of zeros onto
+        # flash-wear-sensitive storage at construction
+        self.store = SegmentStore.create(
+            directory, groups, self.n_acts,
+            meta={"kind": "act_scratch_v1", "codec": codec},
+            group_labels=[f"act:{i}" for i in range(self.n_acts)],
+            write=False)
+        self._pf = Prefetcher(self.store, depth=max(1, depth))
+        # identity spills recycle the written-out fp32 buffer back into the
+        # prefetcher pool (same signature as the read path's window form);
+        # converting codecs submit fp32 but read back the window dtype, so
+        # their writer buffers would only pollute the bounded pool
+        recycle = self._recycle_writable if codec == "identity" else None
+        self._writer = AsyncWriter(self.store, max_pending=max(1, max_pending),
+                                   recycle=recycle)
+        self._sunk = [False] * self.n_acts
+        self.write_hits = 0
+        self.takes = 0
+        self.bytes_sunk = 0
+        self.bytes_taken = 0
+        self.t_read_block_s = 0.0
+        self.t_write_block_s = 0.0
+        self.peak_inflight_bytes = 0
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    def _note_inflight(self):
+        self.peak_inflight_bytes = max(
+            self.peak_inflight_bytes,
+            self._writer.pending_bytes() + self._pf.buffer_bytes())
+
+    def sink(self, i: int, x: np.ndarray) -> None:  # hot-path
+        """Queue boundary ``i``'s host array for background write-back.
+        Blocks only while the bounded write queue is full (billed to
+        ``t_write_block_s``).  The caller must hand over ownership of
+        ``x`` — the writer thread reads it until the write lands."""
+        if x.shape != self.shape:
+            raise ValueError(
+                f"activation {i} has shape {x.shape}, store laid out for "
+                f"{self.shape} — recreate the store when the batch geometry "
+                "changes")
+        # round-trip through storage precision *now*: a stolen boundary
+        # must be bit-equal to one re-read from flash, or the loss would
+        # depend on writer timing (identity: a no-op returning x itself)
+        x = self._codec.storage_roundtrip(
+            np.asarray(x, np.float32))  # sync-point: the spill is host-side
+        #                                 by design; the caller already
+        #                                 pulled the boundary off device
+        # a buffered/in-flight read of this boundary (prior micro-batch's
+        # unconsumed lookahead) holds stale bytes now
+        self._pf.invalidate(i)
+        t0 = time.perf_counter()
+        self._writer.submit(i, {f"act.{i}": x})
+        self.t_write_block_s += time.perf_counter() - t0
+        self.bytes_sunk += x.nbytes
+        self._sunk[i] = True
+        self._note_inflight()
+
+    def prefetch(self, i: int) -> None:
+        """Schedule a background read of boundary ``i`` (reverse-walk
+        lookahead).  Skipped while the writer still holds the boundary —
+        reading the file would race the write and land stale bytes; the
+        later ``take`` steals it from the queue instead."""
+        if not (0 <= i < self.n_acts) or not self._sunk[i]:
+            return
+        if self._writer.holds(i):
+            return
+        self._pf.schedule(i)
+
+    def take(self, i: int) -> np.ndarray:  # hot-path
+        """Boundary ``i`` back in window form (fp32 for identity/act_int8,
+        bf16 for the bf16 codec).  Steals from the write queue when the
+        bytes never landed; otherwise a prefetch hit or (counted) sync
+        read.  The caller owns the returned buffer — hand it back via
+        :meth:`recycle` once consumed.
+
+        **Consume-once**: a dirty steal hands over bytes that never
+        landed on flash, so a second ``take`` of the same boundary would
+        read whatever older spill the file still holds.  Taking marks the
+        boundary un-sunk; the driver re-sinks every boundary each
+        forward sweep, so the contract costs nothing there."""
+        if not self._sunk[i]:
+            raise KeyError(
+                f"activation boundary {i} was never sunk (or was already "
+                "consumed — takes are consume-once)")
+        self._sunk[i] = False
+        self.takes += 1
+        t0 = time.perf_counter()
+        stolen = self._writer.steal(i)
+        if stolen is not None:
+            data, _dirty = stolen
+            # a racing prefetch issued before the writer picked i up would
+            # read pre-steal file bytes — poison it
+            self._pf.invalidate(i)
+            self.write_hits += 1
+            arr = data[f"act.{i}"]
+            # the stolen array is the fp32 submit copy; converting codecs
+            # hand back the window form so the consumer sees one dtype
+            if self.codec_name == "bf16":
+                arr = arr.astype(self._codec.window_np_dtype("float32"))
+            self.t_read_block_s += time.perf_counter() - t0
+            self.bytes_taken += arr.nbytes
+            return arr
+        data = self._pf.take(i)
+        self.t_read_block_s += time.perf_counter() - t0
+        arr = data[f"act.{i}"]
+        self.bytes_taken += arr.nbytes
+        self._note_inflight()
+        return arr
+
+    def _recycle_writable(self, seg: int, data: Dict[str, np.ndarray]):
+        """Writer recycle hook: spilled boundaries are often *read-only*
+        zero-copy views of device buffers — those must never enter the
+        reusable-destination pool (``read_segment(out=)`` writes into it)."""
+        if all(isinstance(a, np.ndarray) and a.flags.writeable
+               for a in data.values()):
+            self._pf.recycle(seg, data)
+
+    def recycle(self, i: int, arr: np.ndarray) -> None:
+        """Return a consumed ``take`` buffer to the prefetcher pool (no-op
+        when pooling is off — i.e. when the jit boundary zero-copies host
+        arrays and reuse would corrupt live device buffers — and for
+        read-only stolen views)."""
+        self._recycle_writable(i, {f"act.{i}": arr})
+
+    # ------------------------------------------------------------------
+    def barrier(self) -> None:
+        """Drain the write queue (durability fence — tests and snapshots)."""
+        self._writer.barrier()
+
+    def inflight_bytes(self) -> int:
+        """Current bounded host-buffer footprint: queued/mid-flight writes
+        plus the prefetcher's completed buffers and recycle pool."""
+        return self._writer.pending_bytes() + self._pf.buffer_bytes()
+
+    def hit_rate(self) -> float:
+        """Fraction of takes served without a synchronous flash read
+        (write-queue steals + prefetch hits)."""
+        if not self.takes:
+            return 1.0
+        return (self.write_hits + self._pf.prefetch_hits) / self.takes
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "write_hits": self.write_hits,
+            "prefetch_hits": self._pf.prefetch_hits,
+            "sync_loads": self._pf.sync_loads,
+            "forced_drops": self._pf.forced_drops,
+            "buffer_reuses": self._pf.buffer_reuses,
+            "takes": self.takes,
+            "bytes_sunk": self.bytes_sunk,
+            "bytes_taken": self.bytes_taken,
+            "t_read_block_s": self.t_read_block_s,
+            "t_write_block_s": self.t_write_block_s,
+            "writeback_busy_s": self._writer.busy_s,
+            "peak_inflight_bytes": self.peak_inflight_bytes,
+            "store_bytes": self.store.total_bytes,
+        }
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._writer.close()
+        finally:
+            self._pf.close()
+
+
+def act_store_for(directory: str, n_acts: int, shape, codec: str,
+                  existing: Optional[ActivationStore] = None
+                  ) -> ActivationStore:
+    """Reuse ``existing`` when its geometry still matches, else (re)build —
+    the streamed step creates the store lazily at the first forward sweep
+    (the batch shape is not known at construction time)."""
+    shape = tuple(int(d) for d in shape)
+    if existing is not None:
+        if existing.shape == shape and existing.n_acts == n_acts:
+            return existing
+        existing.close()
+    return ActivationStore(directory, n_acts, shape, codec=codec)

@@ -193,8 +193,54 @@ class Int8Codec(SegmentCodec):
         return dequant_np(self._quantize(a)).astype(a.dtype, copy=False)
 
 
+class ActInt8Codec(Int8Codec):
+    """Per-token absmax symmetric int8 for *activations*: the transpose of
+    ``Int8Codec``'s weight layout.  Boundary activations are (B, S, D) with
+    outlier structure along the channel axis, so each token position gets
+    its own scale — absmax reduces over the **last** (channel) axis and the
+    scales are shaped to the leading B*S positions.  Storage layout stays
+    [codes | fp32 scales]."""
+
+    name = "act_int8"
+
+    def encoded_nbytes(self, shape, dtype):
+        return (int(np.prod(shape, dtype=np.int64))
+                + _n_act_scales(shape) * 4)
+
+    def _quantize(self, arr) -> QuantLeaf:
+        a = np.asarray(arr, np.float32)
+        if a.ndim == 0:
+            raise ValueError("act_int8 codec cannot quantize 0-d leaves")
+        absmax = np.max(np.abs(a), axis=-1, keepdims=True) if a.ndim >= 2 \
+            else np.max(np.abs(a), keepdims=True)
+        scales = np.where(absmax > 0, absmax / 127.0, 1.0).astype(np.float32)
+        codes = np.clip(np.rint(a / scales), -127, 127).astype(np.int8)
+        return QuantLeaf(codes, scales.reshape(_n_act_scales(a.shape)))
+
+    def decode(self, buf, shape, dtype, copy=True):
+        q = self.decode_encoded(buf, shape, dtype)
+        scales = q.scales.reshape(shape[:-1] + (1,)) if len(shape) >= 2 \
+            else q.scales
+        out = np.asarray(q.codes, np.float32) * scales
+        return out.astype(np_dtype(dtype), copy=False)
+
+    def storage_roundtrip(self, arr):
+        a = np.asarray(arr)
+        q = self._quantize(a)
+        scales = q.scales.reshape(a.shape[:-1] + (1,)) if a.ndim >= 2 \
+            else q.scales
+        return (np.asarray(q.codes, np.float32) * scales).astype(
+            a.dtype, copy=False)
+
+
+def _n_act_scales(shape: Tuple[int, ...]) -> int:
+    """act_int8 scale count: one per leading (token) position."""
+    return int(np.prod(shape[:-1], dtype=np.int64)) if len(shape) >= 2 else 1
+
+
 CODECS: Dict[str, SegmentCodec] = {c.name: c for c in
-                                   (SegmentCodec(), Bf16Codec(), Int8Codec())}
+                                   (SegmentCodec(), Bf16Codec(), Int8Codec(),
+                                    ActInt8Codec())}
 
 
 def get_codec(name: str) -> SegmentCodec:
@@ -216,6 +262,20 @@ def moment_codec(moment_dtype: str) -> str:
         return "bf16"
     raise ValueError(f"unsupported moment dtype {moment_dtype!r} "
                      "(float32 or bfloat16)")
+
+
+def activation_codec(name: str) -> str:
+    """Map the user-facing --activation-codec knob to a codec name.  fp32 is
+    the identity codec (bit-exact spill); int8 maps to the *activation*
+    variant (per-token scales), not the weight codec."""
+    if name in ("", "fp32", "float32"):
+        return "identity"
+    if name in ("bf16", "bfloat16"):
+        return "bf16"
+    if name == "int8":
+        return "act_int8"
+    raise ValueError(f"unsupported activation codec {name!r} "
+                     "(fp32, bf16 or int8)")
 
 
 # ----------------------------------------------------------------------------

@@ -331,12 +331,101 @@ def scenario_close_pending_writes(seed: int, tmpdir: str) -> None:
                 f"{seg} leaf {name}")
 
 
+# ---------------------------------------------------------------------------
+# scenario: ActivationStore sink/prefetch/take churn (writer vs prefetcher)
+# ---------------------------------------------------------------------------
+
+ACT_MONOTONE_KEYS = ("write_hits", "prefetch_hits", "sync_loads", "takes",
+                     "bytes_sunk", "bytes_taken", "peak_inflight_bytes")
+
+
+def scenario_act_store_churn(seed: int, tmpdir: str) -> None:
+    """The activation-spill interleavings the streamed two-sweep driver
+    produces: a boundary can be re-sunk while its write is queued or
+    mid-flight, prefetched while the writer still holds it (the store must
+    skip, then steal), and taken from any of the three sources (steal /
+    prefetch buffer / sync read) — every take must observe the *last* sunk
+    value and micro-batch churn must never leak stale lookahead bytes."""
+    from repro.offload.act_store import ActivationStore
+
+    sched = Schedule(seed)
+    n, shape = N_SEGMENTS, (4, 3)
+    with fuzzed_primitives(sched):
+        store = ActivationStore(os.path.join(tmpdir, "acts"), n, shape,
+                                codec="identity", depth=2, max_pending=2)
+    rng = random.Random(seed * 7919 + 7)
+    shadow: Dict[int, float] = {}
+    consumed: set = set()
+    mono = MonotoneStats(ACT_MONOTONE_KEYS)
+    for op_i in range(30):
+        i = rng.randrange(n)
+        r = rng.random()
+        if r < 0.45:                           # (re-)sink a fresh value
+            val = float(seed % 1000) + op_i + 0.5
+            store.sink(i, np.full(shape, val, np.float32))
+            shadow[i] = val
+            consumed.discard(i)                # a re-sink re-arms take
+        elif r < 0.65:                         # reverse-walk lookahead hint
+            store.prefetch(i)
+        elif r < 0.9:
+            if i in shadow:                    # consume: must see last sink
+                got = store.take(i)
+                assert np.allclose(got, shadow[i]), (
+                    f"seed {seed} op {op_i}: take({i}) saw stale bytes "
+                    f"(want {shadow[i]})")
+                store.recycle(i, got)
+                # takes are consume-once: a dirty steal hands over bytes
+                # that never landed on flash, so the store un-sinks the
+                # boundary (a second take would read the older spill)
+                del shadow[i]
+                consumed.add(i)
+        else:
+            store.barrier()
+        mono.sample(store.stats(), f"(seed {seed} op {op_i})")
+        sched.pause("act.op")
+    # durability through the API: after a barrier every still-sunk
+    # boundary must read back its last value (no steal path left — the
+    # queue is drained), and a consumed boundary must refuse a re-take
+    # instead of serving whatever older spill the file holds
+    store.barrier()
+    for i, val in sorted(shadow.items(), reverse=True):
+        got = store.take(i)
+        assert np.allclose(got, val), (
+            f"seed {seed}: final take({i}) lost sunk bytes (want {val})")
+        store.recycle(i, got)
+    for i in sorted(consumed):
+        try:
+            store.take(i)
+        except KeyError:
+            pass
+        else:
+            raise AssertionError(
+                f"seed {seed}: take({i}) after consumption must raise "
+                "(consume-once contract)")
+    # every take was served by exactly one source
+    s = store.stats()
+    assert s["write_hits"] + s["prefetch_hits"] + s["sync_loads"] == \
+        s["takes"], f"seed {seed}: take source accounting drifted: {s}"
+    # prefetcher pool accounting exact (the PR 5 IndexError class)
+    pf = store._pf
+    with pf._lock:
+        total = sum(len(v) for v in pf._pool.values())
+        assert pf._pool_sets == total, (
+            f"seed {seed}: act-store pool accounting drifted "
+            f"({pf._pool_sets} vs {total})")
+        assert all(pf._pool.values()), (
+            f"seed {seed}: emptied signature list left in act-store pool")
+    # close with whatever is still queued/in flight: drain, not deadlock
+    store.close()
+
+
 SCENARIOS: Dict[str, Callable[[int, str], None]] = {
     "engine_mixed": scenario_engine_mixed,
     "writer_churn": scenario_writer_churn,
     "serve_walk": scenario_serve_walk,
     "close_inflight_stage": scenario_close_inflight_stage,
     "close_pending_writes": scenario_close_pending_writes,
+    "act_store_churn": scenario_act_store_churn,
 }
 
 
