@@ -181,12 +181,20 @@ def _engine_grid(fast: bool, results: dict):
         n_stores = [0]
 
         def int8_base(staging=True):
-            # each StreamedBase owns (and closes) its own frozen store
+            # each StreamedBase owns (and closes) its own frozen store;
+            # the segment read transport comes from $REPRO_OFFLOAD_IO
+            # (the tuned launcher exports the probed raw backend)
             n_stores[0] += 1
-            return StreamedBase(LayerStreamedState.create_frozen(
+            base = StreamedBase(LayerStreamedState.create_frozen(
                 params, os.path.join(d, f"int8_base_{n_stores[0]}"),
                 max_resident=2, quant="int8", base_tag="bench"),
                 staging=staging)
+            if n_stores[0] == 1:
+                results["io_backend"] = base.lstate.store.io_backend
+                row("serve_io_backend", 0.0,
+                    f"streamed-base segment reads via "
+                    f"{base.lstate.store.io_backend}")
+            return base
 
         # (factory, adapter base_quant, defer_tokens): the sync row runs
         # the whole pre-staging discipline, not just synchronous h2d

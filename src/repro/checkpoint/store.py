@@ -191,7 +191,8 @@ def offload_checkpoint_layout(directory: str, step: int) -> str:
 
 def restore_offload(directory: str, work_dir: str, like_params,
                     step: Optional[int] = None, *, max_resident: int = 2,
-                    prefetch: bool = True, async_writeback: bool = True):
+                    prefetch: bool = True, async_writeback: bool = True,
+                    io_backend: str = ""):
     """Reattach to an offload checkpoint by hardlinking its segment files
     into ``work_dir`` (copy-on-write).  Dispatches on the stored segment
     layout: layer-aligned checkpoints come back as ``LayerStreamedState``,
@@ -208,7 +209,8 @@ def restore_offload(directory: str, work_dir: str, like_params,
            else OffloadedTrainState)
     ostate = cls.from_checkpoint(
         seg_dir, work_dir, like_params, max_resident=max_resident,
-        prefetch=prefetch, async_writeback=async_writeback)
+        prefetch=prefetch, async_writeback=async_writeback,
+        io_backend=io_backend)
     return ostate, step
 
 

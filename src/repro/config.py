@@ -198,6 +198,11 @@ class TrainConfig:
     activation_codec: str = "fp32"     # fp32 | bf16 | int8 (per-token absmax)
                                        # storage precision of spilled acts;
                                        # fp32 is a bit-exact spill
+    offload_io: str = ""               # segment read backend: "" (defer to
+                                       # $REPRO_OFFLOAD_IO, else mmap) | mmap |
+                                       # pread | direct (O_DIRECT) | uring |
+                                       # auto (probe uring -> direct -> pread);
+                                       # all backends are bit-identical
 
     # --- LoRA (paper C6) ---
     lora_rank: int = 0                 # 0 -> Full-FT

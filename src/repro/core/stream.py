@@ -107,8 +107,8 @@ from repro.optim.adamw import adamw_update
 from repro.optim.schedule import lr_schedule
 
 
-def make_grad_store(lstate: LayerStreamedState, directory: str
-                    ) -> SegmentStore:
+def make_grad_store(lstate: LayerStreamedState, directory: str,
+                    io_backend: str = "") -> SegmentStore:
     """Gradient scratch segments mirroring the param store's layer-aligned
     geometry (same segment <-> block mapping, fp32, params only — no
     moments).  Rewritten every step, and the first micro-batch overwrites
@@ -123,7 +123,8 @@ def make_grad_store(lstate: LayerStreamedState, directory: str
         labels.append(lstate.store.labels[seg])
     return SegmentStore.create(directory, groups, len(groups),
                                meta={"kind": "grad_scratch_v1"},
-                               group_labels=labels, write=False)
+                               group_labels=labels, write=False,
+                               io_backend=io_backend)
 
 
 class StreamedTrainStep:
@@ -209,7 +210,8 @@ class StreamedTrainStep:
                     "Full-FT streaming needs the (p, m, v) layout")
             os.makedirs(grad_dir, exist_ok=True)
             self.grad_engine = OffloadEngine(
-                make_grad_store(lstate, grad_dir),
+                make_grad_store(lstate, grad_dir,
+                                io_backend=getattr(tcfg, "offload_io", "")),
                 max_resident=max(1, tcfg.offload_resident),
                 prefetch=tcfg.offload_prefetch,
                 async_writeback=getattr(tcfg, "offload_async_writeback",
@@ -298,7 +300,8 @@ class StreamedTrainStep:
         or when the batch shape changes (train -> eval geometry)."""
         self.act_store = act_store_for(
             self._act_dir, self.lstate.n_layers, x.shape, self._act_codec,
-            existing=self.act_store)
+            existing=self.act_store,
+            io_backend=getattr(self.tcfg, "offload_io", ""))
         self._act_dtype = x.dtype
 
     def _act_sink(self, i: int, x):  # hot-path

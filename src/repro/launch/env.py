@@ -16,7 +16,13 @@ the launch profile the benches and ``examples/run_tuned.sh`` share:
   sizing for the dry-run/sharding tools) and step markers for profiler
   alignment;
 - ``TF_CPP_MIN_LOG_LEVEL=4`` to silence the XLA/TSL banner noise that
-  otherwise pollutes benchmark CSV capture.
+  otherwise pollutes benchmark CSV capture;
+- ``REPRO_OFFLOAD_IO`` set to the best *probed* raw segment-read backend
+  (io_uring -> O_DIRECT -> pread, see repro/offload/readers.py) so tuned
+  runs stop double-buffering segment pulls through the page cache.  An
+  existing value in the environment always wins, and every backend is
+  bit-identical with the mmap oracle — this is a transport choice, never
+  a numerics one.
 
 ``LD_PRELOAD`` only takes effect at process start, so the overlay is
 applied by *launchers* (``run_tuned.sh``, or ``python -m repro.launch.env
@@ -54,8 +60,22 @@ def find_tcmalloc() -> Optional[str]:
     return None
 
 
+def probe_io_backend() -> str:
+    """Best available raw segment-read backend on this kernel/filesystem:
+    ``uring`` when ``io_uring_setup`` round-trips, else ``direct`` when
+    O_DIRECT reads work in the working directory, else ``pread`` (always
+    available).  One cached functional probe per backend — cheap enough
+    to run at launcher startup."""
+    from repro.offload.readers import backend_available
+    for name in ("uring", "direct", "pread"):
+        if backend_available(name, "."):
+            return name
+    return "mmap"   # unreachable in practice: pread always probes true
+
+
 def tuned_env(host_device_count: int = 0, step_markers: bool = True,
-              base: Optional[Dict[str, str]] = None) -> Dict[str, str]:
+              base: Optional[Dict[str, str]] = None,
+              io_backend: str = "auto") -> Dict[str, str]:
     """The env-var *overlay* of the tuned profile (only the keys to set).
 
     ``host_device_count > 0`` forces that many host-platform XLA devices
@@ -91,11 +111,19 @@ def tuned_env(host_device_count: int = 0, step_markers: bool = True,
 
     env.setdefault("TF_CPP_MIN_LOG_LEVEL",
                    base.get("TF_CPP_MIN_LOG_LEVEL", "4"))
+
+    # raw segment I/O: probe once here, at launcher startup, so every
+    # store in the child process picks the backend up from the env var
+    # without per-store probing.  ``io_backend=""`` disables; an explicit
+    # name skips the probe (SegmentStore still degrades it gracefully)
+    if io_backend and "REPRO_OFFLOAD_IO" not in base:
+        env["REPRO_OFFLOAD_IO"] = (probe_io_backend()
+                                   if io_backend == "auto" else io_backend)
     return env
 
 
 def main(argv=None) -> int:
-    """``python -m repro.launch.env [--print] [--devices N] [cmd ...]``
+    """``python -m repro.launch.env [--print] [--devices N] [--io B] [cmd ...]``
 
     With a command: re-exec it under the tuned profile (``LD_PRELOAD``
     needs a fresh process).  With ``--print``: emit ``export`` lines for
@@ -104,6 +132,7 @@ def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     devices = 0
     emit = False
+    io_backend = "auto"
     while argv and argv[0].startswith("--"):
         if argv[0] == "--print":
             emit = True
@@ -111,9 +140,12 @@ def main(argv=None) -> int:
         elif argv[0] == "--devices":
             argv.pop(0)
             devices = int(argv.pop(0))
+        elif argv[0] == "--io":
+            argv.pop(0)
+            io_backend = argv.pop(0)
         else:
             raise SystemExit(f"unknown flag {argv[0]!r}")
-    overlay = tuned_env(host_device_count=devices)
+    overlay = tuned_env(host_device_count=devices, io_backend=io_backend)
     if emit or not argv:
         for k, v in sorted(overlay.items()):
             print(f"export {k}={shlex.quote(v)}")

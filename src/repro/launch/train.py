@@ -144,7 +144,8 @@ def offload_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
             rt.ckdir, work_dir, like_params, last,
             max_resident=tcfg.offload_resident,
             prefetch=tcfg.offload_prefetch,
-            async_writeback=tcfg.offload_async_writeback)
+            async_writeback=tcfg.offload_async_writeback,
+            io_backend=tcfg.offload_io)
         rt.guard_segment_layout(ostate)
         rt.log(f"[resume] offload checkpoint step {start}")
     if ostate is None:
@@ -154,7 +155,8 @@ def offload_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
             max_resident=tcfg.offload_resident,
             prefetch=tcfg.offload_prefetch,
             moment_dtype=tcfg.offload_moment_dtype,
-            async_writeback=tcfg.offload_async_writeback)
+            async_writeback=tcfg.offload_async_writeback,
+            io_backend=tcfg.offload_io)
         del state  # from here on the segment files own the optimizer state
 
     rt.install_sigterm(lambda: rt.store.save_offload(ostate, ostate.step),
@@ -216,7 +218,8 @@ def stream_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
             rt.ckdir, work_dir, like_params, last,
             max_resident=tcfg.offload_resident,
             prefetch=tcfg.offload_prefetch,
-            async_writeback=tcfg.offload_async_writeback)
+            async_writeback=tcfg.offload_async_writeback,
+            io_backend=tcfg.offload_io)
         rt.guard_segment_layout(lstate)
         rt.log(f"[resume] layer-streamed checkpoint step {start}")
     if lstate is None:
@@ -225,7 +228,8 @@ def stream_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
             state, work_dir, max_resident=tcfg.offload_resident,
             prefetch=tcfg.offload_prefetch,
             moment_dtype=tcfg.offload_moment_dtype,
-            async_writeback=tcfg.offload_async_writeback)
+            async_writeback=tcfg.offload_async_writeback,
+            io_backend=tcfg.offload_io)
         del state  # the segment files own params AND optimizer state now
 
     rt.install_sigterm(lambda: rt.store.save_offload(lstate, lstate.step),
@@ -325,7 +329,8 @@ def stream_lora_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
                                 dtype=dtype_of(tcfg.param_dtype))
     lstate = LayerStreamedState.open_frozen_if_matching(
         work_dir, like_base, base_tag=base_tag,
-        max_resident=tcfg.offload_resident, prefetch=tcfg.offload_prefetch)
+        max_resident=tcfg.offload_resident, prefetch=tcfg.offload_prefetch,
+        io_backend=tcfg.offload_io)
     if lstate is not None:
         rt.log("[stream+lora] reusing frozen base segments in "
                f"{work_dir} (tag {base_tag})")
@@ -338,7 +343,8 @@ def stream_lora_train_loop(cfg: ModelConfig, tcfg: TrainConfig, *,
             base, work_dir, base_tag=base_tag,
             max_resident=tcfg.offload_resident,
             prefetch=tcfg.offload_prefetch,
-            quant=tcfg.base_quant)
+            quant=tcfg.base_quant,
+            io_backend=tcfg.offload_io)
         del base  # the read-only segment files own the base from here on
     rt.guard_segment_layout(lstate)
 
@@ -463,6 +469,17 @@ def main():
                     help="storage precision of spilled activations: fp32 is "
                          "a bit-exact spill, bf16 halves the bytes, int8 "
                          "quarters them (per-token absmax)")
+    ap.add_argument("--offload-io", default="",
+                    choices=("", "mmap", "pread", "direct", "uring", "auto"),
+                    help="segment read backend: mmap (default, page-cache "
+                         "oracle), pread (batched positional reads straight "
+                         "into window buffers), direct (O_DIRECT, bypasses "
+                         "the page cache), uring (one io_uring SQE batch "
+                         "per segment pull), auto (probe uring -> direct -> "
+                         "pread).  Unsupported backends fall back to pread "
+                         "with a logged note; bytes are bit-identical "
+                         "across all of them.  Default '' defers to "
+                         "$REPRO_OFFLOAD_IO, else mmap")
     ap.add_argument("--out", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
@@ -522,7 +539,8 @@ def main():
         offload_staging=args.offload_staging,
         base_quant=args.base_quant,
         offload_activations=args.offload_activations,
-        activation_codec=args.activation_codec)
+        activation_codec=args.activation_codec,
+        offload_io=args.offload_io)
     governor = None
     if args.energy:
         governor = EnergyGovernor(monitor=SimulatedBattery(

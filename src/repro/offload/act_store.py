@@ -61,7 +61,7 @@ class ActivationStore:
 
     def __init__(self, directory: str, n_acts: int, shape: Tuple[int, ...],
                  codec: str = "identity", depth: int = 2,
-                 max_pending: int = 2):
+                 max_pending: int = 2, io_backend: str = ""):
         if n_acts < 1:
             raise ValueError(f"n_acts must be >= 1, got {n_acts}")
         self.n_acts = int(n_acts)
@@ -78,7 +78,7 @@ class ActivationStore:
             directory, groups, self.n_acts,
             meta={"kind": "act_scratch_v1", "codec": codec},
             group_labels=[f"act:{i}" for i in range(self.n_acts)],
-            write=False)
+            write=False, io_backend=io_backend)
         self._pf = Prefetcher(self.store, depth=max(1, depth))
         # identity spills recycle the written-out fp32 buffer back into the
         # prefetcher pool (same signature as the read path's window form);
@@ -229,6 +229,7 @@ class ActivationStore:
             "writeback_busy_s": self._writer.busy_s,
             "peak_inflight_bytes": self.peak_inflight_bytes,
             "store_bytes": self.store.total_bytes,
+            **self.store.io_stats(),
         }
 
     def close(self) -> None:
@@ -238,12 +239,15 @@ class ActivationStore:
         try:
             self._writer.close()
         finally:
-            self._pf.close()
+            try:
+                self._pf.close()
+            finally:
+                self.store.close_io()
 
 
 def act_store_for(directory: str, n_acts: int, shape, codec: str,
-                  existing: Optional[ActivationStore] = None
-                  ) -> ActivationStore:
+                  existing: Optional[ActivationStore] = None,
+                  io_backend: str = "") -> ActivationStore:
     """Reuse ``existing`` when its geometry still matches, else (re)build —
     the streamed step creates the store lazily at the first forward sweep
     (the batch shape is not known at construction time)."""
@@ -252,4 +256,5 @@ def act_store_for(directory: str, n_acts: int, shape, codec: str,
         if existing.shape == shape and existing.n_acts == n_acts:
             return existing
         existing.close()
-    return ActivationStore(directory, n_acts, shape, codec=codec)
+    return ActivationStore(directory, n_acts, shape, codec=codec,
+                           io_backend=io_backend)

@@ -109,6 +109,14 @@ class SegmentCodec:
         returns) — the dtype a reusable window buffer must carry."""
         return np_dtype(dtype)
 
+    def storage_np_dtype(self, dtype: str):
+        """Numpy dtype the on-flash bytes carry when storage is a flat
+        array of that dtype, else None (int8's packed codes+scales).  The
+        raw read backends use this to decide — without allocating — when
+        a leaf can be read *straight into* its destination window buffer
+        versus staged through a scratch chunk and decoded."""
+        return np_dtype(dtype)
+
     def storage_roundtrip(self, arr: np.ndarray) -> np.ndarray:
         """decode(encode(arr)) without touching bytes: what a value becomes
         after one trip through storage.  The state layer applies this when
@@ -141,6 +149,9 @@ class Bf16Codec(SegmentCodec):
         return buf.view(np_dtype("bfloat16")).reshape(shape)
 
     def window_np_dtype(self, dtype):
+        return np_dtype("bfloat16")
+
+    def storage_np_dtype(self, dtype):
         return np_dtype("bfloat16")
 
     def storage_roundtrip(self, arr):
@@ -187,6 +198,9 @@ class Int8Codec(SegmentCodec):
 
     def storage_view(self, buf, shape, dtype):
         return None     # packed [codes | scales]: no flat array view
+
+    def storage_np_dtype(self, dtype):
+        return None     # packed: never readable straight into a window
 
     def storage_roundtrip(self, arr):
         a = np.asarray(arr)

@@ -522,9 +522,14 @@ class OffloadEngine:
 
     def __init__(self, store: SegmentStore, max_resident: int = 2,
                  prefetch: bool = True, read_only: bool = False,
-                 encoded: bool = False, async_writeback: bool = False):
+                 encoded: bool = False, async_writeback: bool = False,
+                 io_backend: str = ""):
         assert max_resident >= 1
         self.store = store
+        if io_backend:
+            # re-resolve the store's read backend (probing again) before
+            # any reader thread exists — selection stays single-threaded
+            store.set_io_backend(io_backend)
         self.max_resident = max_resident
         # read-only window mode (frozen-base PEFT streaming): segments are
         # never dirtied, so eviction is a plain drop and mark_dirty is a
@@ -636,7 +641,8 @@ class OffloadEngine:
         self.peak_resident_bytes = max(
             self.peak_resident_bytes,
             self._resident_bytes() + self._prefetch_buffer_bytes()
-            + (self._writer.pending_bytes() if self._writer else 0))
+            + (self._writer.pending_bytes() if self._writer else 0)
+            + self.store.io_pool_bytes())   # raw readers' staging scratch
         return data
 
     def _prefetch_buffer_bytes(self) -> int:
@@ -730,6 +736,9 @@ class OffloadEngine:
             self._writer.close()
         if self._prefetcher is not None:
             self._prefetcher.close()
+        # after the reader thread is gone: release the io backend's
+        # ring/staging pool (lazily re-created if the store is reused)
+        self.store.close_io()
 
     def stats(self) -> Dict[str, float]:
         pf = self._prefetcher
@@ -749,4 +758,7 @@ class OffloadEngine:
             "t_write_block_s": self.t_write_block_s,
             "writeback_busy_s": self._writer.busy_s if self._writer else 0.0,
             "async_writeback": 1 if self._writer is not None else 0,
+            # raw-reader counters (io_* all-zero under mmap) + COW cost;
+            # every value stays numeric — consumers aggregate this dict
+            **self.store.io_stats(),
         }

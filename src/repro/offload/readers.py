@@ -1,0 +1,583 @@
+"""Raw-speed segment readers: pluggable I/O backends for ``SegmentStore``.
+
+The streamed trainer's read path historically went through page-cache
+``np.memmap`` only.  That is the right *oracle* (simple, zero-copy, one
+unified cache with the pwrite write-back path) but on slow flash it is not
+the fastest way to move segment bytes: every pull double-buffers through
+the page cache, cold reads fault one page at a time, and a multi-leaf
+segment costs one fault train per leaf.  This module provides the raw
+backends ``repro.offload.segments.SegmentStore`` can route
+``read_segment`` through instead:
+
+  mmap     the default and the numerics oracle — not in this module; the
+           store keeps its original memmap path verbatim
+  pread    positional ``os.preadv`` on a plain fd: flat-storage leaves are
+           read *straight into* their destination window buffers (same
+           copy count as mmap, no page-cache double buffering of the
+           user-side buffer, no fault trains), converting leaves stage
+           through a small pooled chunk
+  direct   ``O_DIRECT`` whole-segment reads into 4096-aligned pooled
+           staging buffers (the page cache is bypassed entirely — the
+           honest cold-flash path), falling back to buffered pread when
+           the open or the alignment contract fails
+  uring    batched io_uring submission via ctypes on
+           ``io_uring_setup``/``io_uring_enter``: one multi-leaf segment
+           pull is one SQE batch + one syscall instead of N sequential
+           preads.  Kernel-probe gated; falls back to ``pread``.
+
+Backend selection (``resolve_io_backend``): an explicit name wins, else
+the ``REPRO_OFFLOAD_IO`` environment variable, else ``mmap``.  ``auto``
+probes ``uring -> direct -> pread`` and picks the first that works
+(``repro.launch.env`` exports this under the tuned profile).  ``direct``
+and ``uring`` degrade to ``pread`` with a logged one-line fallback when
+the kernel / filesystem refuses — requested vs actual backend are both
+recorded, so CI can log an explicit skip line instead of silently testing
+the wrong thing.
+
+Alignment contract: destination buffers allocated by the raw read path
+come from :func:`aligned_empty` (4096-byte base pointers), so a recycled
+window buffer handed back through the prefetcher's pool stays a valid
+O_DIRECT/readinto target no matter which backend picks it up next.
+Pooled staging chunks live in a bounded, lock-guarded
+:class:`AlignedBufferPool` per reader.
+
+Thread ownership (see CONCURRENCY.md): a reader is owned by its
+``SegmentStore`` and must be callable from any thread that may call
+``read_segment`` — the Prefetcher's reader thread and the consumer's
+sync-load fallback run concurrently on *different* segments.  Readers are
+therefore stateless per call (fd per call) except the buffer pool and the
+uring submission ring, which are internally locked.
+"""
+from __future__ import annotations
+
+import ctypes
+import mmap
+import os
+import struct
+import sys
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# one alignment for everything: O_DIRECT needs the storage logical block
+# size (512 or 4096); 4096 satisfies both and matches the page size, so an
+# aligned buffer is also a well-formed readinto/DMA target
+ALIGN = 4096
+
+IO_BACKENDS = ("mmap", "pread", "direct", "uring")
+ENV_VAR = "REPRO_OFFLOAD_IO"
+
+
+def aligned_empty(shape, dtype, align: int = ALIGN) -> np.ndarray:
+    """``np.empty`` whose base pointer is ``align``-byte aligned (numpy
+    only guarantees 16/64) — the alignment-aware allocation path: buffers
+    born here stay O_DIRECT-compatible through the prefetcher's recycle
+    pool."""
+    dtype = np.dtype(dtype)
+    nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    raw = np.empty(nbytes + align, np.uint8)
+    start = (-raw.ctypes.data) % align
+    return raw[start:start + nbytes].view(dtype).reshape(shape)
+
+
+def is_aligned(arr: np.ndarray, align: int = ALIGN) -> bool:
+    return arr.ctypes.data % align == 0
+
+
+def _byte_view(arr: np.ndarray) -> np.ndarray:
+    """Writable flat uint8 view of a C-contiguous array (any dtype —
+    including ml_dtypes.bfloat16, whose buffer-protocol format numpy
+    cannot always export directly)."""
+    return arr.reshape(-1).view(np.uint8)
+
+
+class AlignedBufferPool:
+    """Bounded, size-classed pool of 4096-aligned uint8 staging buffers.
+
+    ``get`` rounds the request up to the next multiple of ``align`` (the
+    capacity class) and reuses a free buffer of at least that capacity;
+    ``put`` returns it.  The pool is globally bounded in *buffers* so a
+    pathological mix of sizes cannot accumulate unbounded staging memory;
+    ``pool_bytes`` (free + lent) feeds the engine's honest peak-residency
+    accounting."""
+
+    def __init__(self, max_buffers: int = 4, align: int = ALIGN):
+        self._align = align
+        self._max = max(1, max_buffers)
+        self._lock = threading.Lock()
+        self._free: List[np.ndarray] = []       # guarded-by: _lock
+        self._lent_bytes = 0                    # guarded-by: _lock
+        self.reuses = 0                         # guarded-by: _lock
+        self.allocs = 0                         # guarded-by: _lock
+
+    def get(self, nbytes: int) -> np.ndarray:
+        cap = -(-max(1, int(nbytes)) // self._align) * self._align
+        with self._lock:
+            for i, b in enumerate(self._free):
+                if b.nbytes >= cap:
+                    buf = self._free.pop(i)
+                    self._lent_bytes += buf.nbytes
+                    self.reuses += 1
+                    return buf
+            self.allocs += 1
+            self._lent_bytes += cap
+        return aligned_empty((cap,), np.uint8, self._align)
+
+    def put(self, buf: np.ndarray) -> None:
+        with self._lock:
+            self._lent_bytes = max(0, self._lent_bytes - buf.nbytes)
+            if len(self._free) < self._max:
+                self._free.append(buf)
+            # else: drop — the bound wins over reuse
+
+    def pool_bytes(self) -> int:
+        with self._lock:
+            return int(sum(b.nbytes for b in self._free) + self._lent_bytes)
+
+
+# ---------------------------------------------------------------------------
+# probes (cached: one functional round-trip per process / per directory)
+# ---------------------------------------------------------------------------
+_probe_lock = threading.Lock()
+_direct_cache: Dict[str, bool] = {}      # guarded-by: _probe_lock
+_uring_cache: Optional[bool] = None      # guarded-by: _probe_lock
+
+
+def direct_supported(directory: str) -> bool:
+    """True when ``O_DIRECT`` opens *and reads* work for files in
+    ``directory`` (per-filesystem: tmpfs and some overlayfs refuse).  One
+    aligned-read round trip against a scratch file, cached per realpath."""
+    if not hasattr(os, "O_DIRECT"):
+        return False
+    key = os.path.realpath(directory or ".")
+    with _probe_lock:
+        if key in _direct_cache:
+            return _direct_cache[key]
+    ok = False
+    probe = os.path.join(directory or ".", f".io_probe_{os.getpid()}")
+    try:
+        payload = bytes(range(256)) * (ALIGN // 256)
+        with open(probe, "wb") as f:
+            f.write(payload)
+        fd = os.open(probe, os.O_RDONLY | os.O_DIRECT)
+        try:
+            buf = aligned_empty((ALIGN,), np.uint8)
+            ok = (os.preadv(fd, [buf], 0) == ALIGN
+                  and bytes(buf) == payload)
+        finally:
+            os.close(fd)
+    except OSError:
+        ok = False
+    finally:
+        try:
+            os.unlink(probe)
+        except OSError:
+            pass
+    with _probe_lock:
+        _direct_cache[key] = ok
+    return ok
+
+
+def uring_supported() -> bool:
+    """True when ``io_uring_setup`` works (seccomp/kernel gated) and a
+    small batched read round-trips.  Cached per process."""
+    global _uring_cache
+    with _probe_lock:
+        if _uring_cache is not None:
+            return _uring_cache
+    ok = False
+    try:
+        ring = _Uring(entries=4)
+        try:
+            import tempfile
+            payload = os.urandom(8192)
+            with tempfile.NamedTemporaryFile(delete=False) as f:
+                f.write(payload)
+                probe = f.name
+            try:
+                dst = np.empty(8192, np.uint8)
+                fd = os.open(probe, os.O_RDONLY)
+                try:
+                    ring.read_batch(fd, [(0, dst[:4096]), (4096, dst[4096:])])
+                finally:
+                    os.close(fd)
+                ok = bytes(dst) == payload
+            finally:
+                os.unlink(probe)
+        finally:
+            ring.close()
+    except (OSError, RuntimeError):
+        ok = False
+    with _probe_lock:
+        _uring_cache = ok
+    return ok
+
+
+def backend_available(name: str, directory: str = ".") -> bool:
+    """Probe-level availability of one backend name (CI matrix gating)."""
+    if name in ("mmap", "pread"):
+        return True
+    if name == "direct":
+        return direct_supported(directory)
+    if name == "uring":
+        return uring_supported()
+    return False
+
+
+_warned: set = set()
+
+
+def _warn_fallback(requested: str, actual: str, why: str) -> None:
+    key = (requested, actual)
+    if key in _warned:
+        return
+    _warned.add(key)
+    sys.stderr.write(f"[io] requested --offload-io {requested}, using "
+                     f"{actual} ({why})\n")
+
+
+def resolve_io_backend(requested: str, directory: str) -> Tuple[str, str]:
+    """-> ``(requested, actual)`` backend names.
+
+    Resolution: explicit ``requested`` wins, else ``$REPRO_OFFLOAD_IO``,
+    else ``mmap``.  ``auto`` probes uring -> direct -> pread.  ``direct``
+    and ``uring`` degrade to ``pread`` (with a one-line stderr note) when
+    their probe fails — a requested raw backend never silently becomes a
+    crash on an unsupporting kernel/filesystem."""
+    req = (requested or os.environ.get(ENV_VAR, "") or "mmap").strip().lower()
+    if req == "auto":
+        for name in ("uring", "direct", "pread"):
+            if backend_available(name, directory):
+                return "auto", name
+        return "auto", "mmap"
+    if req not in IO_BACKENDS:
+        raise ValueError(
+            f"unknown offload I/O backend {req!r}; choose from "
+            f"{IO_BACKENDS + ('auto',)} (--offload-io / ${ENV_VAR})")
+    if req == "direct" and not direct_supported(directory):
+        _warn_fallback(req, "pread", "O_DIRECT unsupported on this "
+                       "filesystem — probe read failed")
+        return req, "pread"
+    if req == "uring" and not uring_supported():
+        _warn_fallback(req, "pread", "io_uring unavailable — "
+                       "io_uring_setup probe failed")
+        return req, "pread"
+    return req, req
+
+
+def make_reader(actual: str, directory: str) -> Optional["SegmentReader"]:
+    """Reader instance for a *resolved* backend name (None for mmap)."""
+    if actual == "mmap":
+        return None
+    if actual == "pread":
+        return PreadReader()
+    if actual == "direct":
+        return DirectReader()
+    if actual == "uring":
+        return UringReader()
+    raise ValueError(f"unknown resolved backend {actual!r}")
+
+
+# ---------------------------------------------------------------------------
+# readers
+# ---------------------------------------------------------------------------
+class SegmentReader:
+    """Base raw reader: positional buffered preads on a plain fd.
+
+    ``whole_segment`` readers (O_DIRECT) can only serve staged
+    whole-segment pulls; the others accept per-leaf request batches and
+    read flat leaves straight into their destination arrays."""
+
+    name = "pread"
+    whole_segment = False
+
+    def __init__(self, pool_buffers: int = 4):
+        self.pool = AlignedBufferPool(max_buffers=pool_buffers)
+        self._lock = threading.Lock()
+        self.batched_reads = 0     # guarded-by: _lock
+        self.staged_reads = 0      # guarded-by: _lock
+        self.bytes_read = 0        # guarded-by: _lock
+        self.fallbacks = 0         # guarded-by: _lock
+
+    # -- accounting ----------------------------------------------------
+    def _note(self, nbytes: int, batches: int = 1, staged: int = 0,
+              fallback: int = 0) -> None:
+        with self._lock:
+            self.batched_reads += batches
+            self.staged_reads += staged
+            self.bytes_read += nbytes
+            self.fallbacks += fallback
+
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            s = {"io_batched_reads": self.batched_reads,
+                 "io_staged_reads": self.staged_reads,
+                 "io_bytes_read": self.bytes_read,
+                 "io_fallbacks": self.fallbacks}
+        s["io_pool_bytes"] = self.pool.pool_bytes()
+        s["io_pool_reuses"] = self.pool.reuses
+        return s
+
+    def pool_bytes(self) -> int:
+        return self.pool.pool_bytes()
+
+    def close(self) -> None:
+        pass
+
+    # -- I/O -----------------------------------------------------------
+    @staticmethod
+    def _pread_into(fd: int, offset: int, dst: np.ndarray) -> None:
+        """Full positional read into ``dst`` (uint8 view), looping on
+        short reads.  A read past EOF (sparse scratch tails) zero-fills —
+        matching what the mmap path reads from a hole."""
+        mv, off = dst, int(offset)
+        while mv.nbytes:
+            n = os.preadv(fd, [mv], off)
+            if n == 0:                        # EOF: mmap would read zeros
+                mv[:] = 0
+                return
+            mv, off = mv[n:], off + n
+
+    def read_batch(self, fd: int, requests: Sequence[Tuple[int, np.ndarray]]
+                   ) -> None:
+        """Read every ``(file_offset, destination array)`` request.  The
+        base implementation is a pread loop; uring overrides this with one
+        SQE batch per call."""
+        for off, dst in requests:
+            self._pread_into(fd, off, _byte_view(dst))
+
+    def read_leaves(self, path: str,
+                    requests: Sequence[Tuple[int, np.ndarray]],
+                    staged: int = 0) -> None:
+        """One multi-leaf segment pull: open, batch-read, close."""
+        if not requests:
+            return
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            self.read_batch(fd, requests)
+        finally:
+            os.close(fd)
+        self._note(sum(d.nbytes for _, d in requests), staged=staged)
+
+    def read_segment_bytes(self, path: str, nbytes: int
+                           ) -> Tuple[np.ndarray, "callable"]:
+        """Whole-segment staged read: ``(uint8 buffer >= nbytes, release)``.
+        Only the first ``nbytes`` are meaningful; call ``release()`` once
+        every leaf has been decoded out of the buffer."""
+        buf = self.pool.get(nbytes)
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            self._pread_into(fd, 0, buf[:nbytes])
+        finally:
+            os.close(fd)
+        self._note(nbytes, staged=1)
+        return buf, lambda: self.pool.put(buf)
+
+
+class PreadReader(SegmentReader):
+    name = "pread"
+
+
+class DirectReader(SegmentReader):
+    """O_DIRECT whole-segment reads — the page cache is bypassed, so every
+    pull measures (and pays) flash, not RAM.  Per-leaf offsets inside a
+    segment are not block-aligned, so this backend always stages the whole
+    segment into an aligned pooled buffer and lets the codec loop copy
+    out; when O_DIRECT itself is refused at open/read time the pull falls
+    back to buffered pread (counted in ``io_fallbacks``)."""
+
+    name = "direct"
+    whole_segment = True
+    _CHUNK = 8 << 20         # per-preadv span; multiple of ALIGN
+
+    def read_segment_bytes(self, path, nbytes):
+        buf = self.pool.get(nbytes)            # capacity is ALIGN-rounded
+        assert is_aligned(buf), "pool handed back a misaligned buffer"
+        cap = -(-int(nbytes) // ALIGN) * ALIGN
+        try:
+            fd = os.open(path, os.O_RDONLY | os.O_DIRECT)
+        except OSError:
+            self._note(0, batches=0, fallback=1)
+            return super().read_segment_bytes(path, nbytes)
+        try:
+            off = 0
+            while off < nbytes:
+                want = min(self._CHUNK, cap - off)
+                try:
+                    n = os.preadv(fd, [buf[off:off + want]], off)
+                except OSError:
+                    # alignment/fs refusal mid-stream: finish buffered
+                    self._note(0, batches=0, fallback=1)
+                    os.close(fd)
+                    fd = os.open(path, os.O_RDONLY)
+                    self._pread_into(fd, off, buf[off:nbytes])
+                    break
+                if n == 0:                     # EOF hole: zeros, like mmap
+                    buf[off:nbytes] = 0
+                    break
+                off += n
+        finally:
+            os.close(fd)
+        self._note(nbytes, staged=1)
+        return buf, lambda: self.pool.put(buf)
+
+
+# ---------------------------------------------------------------------------
+# io_uring (ctypes, no external deps)
+# ---------------------------------------------------------------------------
+_SYS_IO_URING_SETUP = 425
+_SYS_IO_URING_ENTER = 426
+_IORING_OFF_SQ_RING = 0
+_IORING_OFF_CQ_RING = 0x8000000
+_IORING_OFF_SQES = 0x10000000
+_IORING_OP_READ = 22            # plain buffer read, kernel >= 5.6
+_IORING_ENTER_GETEVENTS = 1
+
+_libc = ctypes.CDLL(None, use_errno=True)
+_libc.syscall.restype = ctypes.c_long
+
+
+class _Uring:
+    """Minimal single-ring io_uring wrapper: setup, one mmap per ring
+    area, batched ``IORING_OP_READ`` submission.  NOT thread-safe — the
+    owning reader serializes access with its own lock (the syscall in
+    ``read_batch`` doubles as the memory barrier between the userspace
+    ring writes and the kernel's reads, per the io_uring contract)."""
+
+    def __init__(self, entries: int = 64):
+        params = ctypes.create_string_buffer(120)
+        fd = _libc.syscall(ctypes.c_long(_SYS_IO_URING_SETUP),
+                           ctypes.c_uint(entries), params)
+        if fd < 0:
+            raise OSError(ctypes.get_errno() or 1, "io_uring_setup failed")
+        self.fd = int(fd)
+        raw = params.raw
+        self.sq_entries, self.cq_entries = struct.unpack_from("<II", raw, 0)
+        (self.sq_head_off, self.sq_tail_off, self.sq_mask_off, _,
+         _, _, self.sq_array_off) = struct.unpack_from("<7I", raw, 40)
+        (self.cq_head_off, self.cq_tail_off, self.cq_mask_off, _,
+         _, self.cq_cqes_off) = struct.unpack_from("<6I", raw, 80)
+        try:
+            sq_size = self.sq_array_off + self.sq_entries * 4
+            cq_size = self.cq_cqes_off + self.cq_entries * 16
+            self._sq = mmap.mmap(self.fd, sq_size,
+                                 offset=_IORING_OFF_SQ_RING)
+            self._cq = mmap.mmap(self.fd, cq_size,
+                                 offset=_IORING_OFF_CQ_RING)
+            self._sqes = mmap.mmap(self.fd, self.sq_entries * 64,
+                                   offset=_IORING_OFF_SQES)
+        except OSError:
+            os.close(self.fd)
+            raise
+        self.sq_mask = struct.unpack_from("<I", self._sq,
+                                          self.sq_mask_off)[0]
+        self.cq_mask = struct.unpack_from("<I", self._cq,
+                                          self.cq_mask_off)[0]
+
+    def _enter(self, to_submit: int, min_complete: int) -> int:
+        ret = _libc.syscall(ctypes.c_long(_SYS_IO_URING_ENTER),
+                            ctypes.c_uint(self.fd),
+                            ctypes.c_uint(to_submit),
+                            ctypes.c_uint(min_complete),
+                            ctypes.c_uint(_IORING_ENTER_GETEVENTS),
+                            ctypes.c_void_p(0), ctypes.c_size_t(0))
+        if ret < 0:
+            raise OSError(ctypes.get_errno() or 1, "io_uring_enter failed")
+        return int(ret)
+
+    def read_batch(self, fd: int, requests: Sequence[Tuple[int, np.ndarray]]
+                   ) -> None:
+        """Submit every ``(file_offset, destination array)`` as one SQE
+        batch (chunked by ring size) and reap completions.  Short reads
+        (EOF holes in sparse scratch files) zero-fill the tail like the
+        mmap oracle; failed SQEs raise the underlying OSError."""
+        reqs = [(off, _byte_view(dst)) for off, dst in requests
+                if dst.nbytes]
+        start = 0
+        while start < len(reqs):
+            group = reqs[start:start + self.sq_entries]
+            start += len(group)
+            tail = struct.unpack_from("<I", self._sq, self.sq_tail_off)[0]
+            for k, (off, dst) in enumerate(group):
+                idx = (tail + k) & self.sq_mask
+                base = idx * 64
+                self._sqes[base:base + 64] = b"\x00" * 64
+                struct.pack_into(
+                    "<BBHiQQIIQ", self._sqes, base,
+                    _IORING_OP_READ, 0, 0, fd, int(off),
+                    dst.ctypes.data, dst.nbytes, 0, k)
+                struct.pack_into("<I", self._sq,
+                                 self.sq_array_off + idx * 4, idx)
+            struct.pack_into("<I", self._sq, self.sq_tail_off,
+                             (tail + len(group)) & 0xFFFFFFFF)
+            self._enter(len(group), len(group))
+            head = struct.unpack_from("<I", self._cq, self.cq_head_off)[0]
+            cq_tail = struct.unpack_from("<I", self._cq,
+                                         self.cq_tail_off)[0]
+            while head != cq_tail:
+                idx = head & self.cq_mask
+                user_data, res, _flags = struct.unpack_from(
+                    "<QiI", self._cq, self.cq_cqes_off + idx * 16)
+                off, dst = group[int(user_data)]
+                if res < 0:
+                    struct.pack_into("<I", self._cq, self.cq_head_off,
+                                     cq_tail)
+                    raise OSError(-res, f"io_uring read at offset {off} "
+                                        f"failed")
+                if res < dst.nbytes:
+                    # short read: finish synchronously (EOF zero-fills)
+                    SegmentReader._pread_into(fd, off + res, dst[res:])
+                head = (head + 1) & 0xFFFFFFFF
+            struct.pack_into("<I", self._cq, self.cq_head_off, cq_tail)
+
+    def close(self) -> None:
+        for m in ("_sqes", "_cq", "_sq"):
+            mm = getattr(self, m, None)
+            if mm is not None:
+                mm.close()
+                setattr(self, m, None)
+        if self.fd >= 0:
+            os.close(self.fd)
+            self.fd = -1
+
+
+class UringReader(SegmentReader):
+    """Batched io_uring reads: one multi-leaf segment pull is one SQE
+    batch + one ``io_uring_enter`` (GIL released for the syscall), so the
+    kernel can service the per-leaf reads at queue depth > 1 instead of
+    serially.  The ring is shared per reader and lock-guarded —
+    concurrent pulls (prefetcher thread vs a consumer's sync fallback on
+    another segment) serialize on submission, which is still one syscall
+    each."""
+
+    name = "uring"
+
+    def __init__(self, entries: int = 64, pool_buffers: int = 4):
+        super().__init__(pool_buffers=pool_buffers)
+        self._ring: Optional[_Uring] = _Uring(entries)  # guarded-by: _ring_lock
+        self._ring_lock = threading.Lock()
+
+    def read_batch(self, fd, requests):
+        with self._ring_lock:
+            ring = self._ring
+            if ring is not None:
+                try:
+                    ring.read_batch(fd, requests)
+                    return
+                except OSError as e:
+                    # ring-level refusal (e.g. an op gated off): fall back
+                    # to pread for this and every later pull
+                    if e.errno not in (1, 13, 22, 38, 95):  # PERM/ACCES/
+                        raise            # INVAL/NOSYS/OPNOTSUPP degrade;
+                    #                      real I/O errors surface
+                    self._ring = None
+                    ring.close()
+        self._note(0, batches=0, fallback=1)
+        super().read_batch(fd, requests)
+
+    def close(self):
+        with self._ring_lock:
+            if self._ring is not None:
+                self._ring.close()
+                self._ring = None

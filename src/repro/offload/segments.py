@@ -10,9 +10,16 @@ Leaves are grouped (a group is never split across segments — e.g. the
 (param, m, v) triple of one tensor) and groups are packed contiguously into
 ``num_segments`` byte-balanced segments.
 
-I/O is memory-mapped: reads slice an ``np.memmap`` (page-cache backed, no
-user-space staging), writes go through an ``r+`` map and are flushed before
-the map is dropped.  ``snapshot``/``link_clone`` hardlink the segment files
+I/O is memory-mapped by default: reads slice an ``np.memmap`` (page-cache
+backed, no user-space staging), writes go through an ``r+`` map and are
+flushed before the map is dropped.  The read side is additionally
+*pluggable* (``io_backend`` / ``$REPRO_OFFLOAD_IO``; see
+repro/offload/readers.py): ``pread`` batches positional reads straight
+into destination buffers, ``direct`` bypasses the page cache with
+O_DIRECT, ``uring`` submits one SQE batch per segment pull.  ``mmap``
+stays the numerics oracle — every raw backend decodes through the same
+per-leaf codec loop, so bytes are bit-identical across backends.
+``snapshot``/``link_clone`` hardlink the segment files
 (zero-copy checkpointing) and flip the store into copy-on-write mode so the
 snapshot inode is never mutated: the first later write to a segment rewrites
 it under a fresh inode via copy + atomic replace.
@@ -29,13 +36,24 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import threading
+import time
+import weakref
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.offload.codecs import get_codec, np_dtype
+from repro.offload.readers import (aligned_empty, make_reader,
+                                   resolve_io_backend)
 
 TABLE_VERSION = 2
+
+# store kinds whose segment files are write-once scratch (re-created every
+# run, never re-read after training): their durability barrier may evict
+# the written pages from the page cache instead of leaving them to fight
+# the streamed base's reads
+SCRATCH_KINDS = ("grad_scratch_v1", "act_scratch_v1")
 
 
 class LeafRecord(NamedTuple):
@@ -84,7 +102,8 @@ class SegmentStore:
     TABLE = "table.json"
 
     def __init__(self, directory: str, records: List[LeafRecord],
-                 seg_nbytes: List[int], meta: Optional[Dict] = None):
+                 seg_nbytes: List[int], meta: Optional[Dict] = None,
+                 io_backend: str = ""):
         self.directory = directory
         self.records = records
         self.seg_nbytes = seg_nbytes
@@ -95,6 +114,19 @@ class SegmentStore:
         for r in records:
             self._seg_leaves[r.segment].append(r)
         self._cow = [False] * len(seg_nbytes)
+        self._scratch = self.meta.get("kind") in SCRATCH_KINDS
+        # read-backend selection: explicit arg > $REPRO_OFFLOAD_IO > mmap;
+        # direct/uring degrade to pread when their kernel/fs probe fails
+        self.io_requested, self.io_backend = resolve_io_backend(
+            io_backend, directory)
+        self._reader = None             # built lazily (first raw read)
+        self._io_lock = threading.Lock()
+        # copy=False view-lifetime debug guard ($REPRO_OFFLOAD_VIEW_GUARD=1)
+        self._view_guard = os.environ.get(
+            "REPRO_OFFLOAD_VIEW_GUARD", "") == "1"
+        self._live_views: Dict[int, int] = {}   # guarded-by: _io_lock
+        self.cow_breaks = 0
+        self.cow_break_s = 0.0
 
     # ------------------------------------------------------------------
     # construction
@@ -104,7 +136,7 @@ class SegmentStore:
                groups: Sequence[Sequence[Tuple]],
                num_segments: int, meta: Optional[Dict] = None,
                group_labels: Optional[Sequence[str]] = None,
-               write: bool = True) -> "SegmentStore":
+               write: bool = True, io_backend: str = "") -> "SegmentStore":
         """Write ``groups`` (ordered lists of (name, array) or
         (name, array, codec); a group is kept within one segment) into
         ``num_segments`` segment files.  Omitted codecs default to identity;
@@ -151,7 +183,8 @@ class SegmentStore:
                                           codec))
                 offset += nbytes
             seg_nbytes.append(offset)
-        store = cls(directory, records, seg_nbytes, meta)
+        store = cls(directory, records, seg_nbytes, meta,
+                    io_backend=io_backend)
         flat = {n: a for g in arrs for n, a, _ in g}
         for seg in range(len(seg_nbytes)):
             with open(store.segment_path(seg), "wb") as f:
@@ -164,7 +197,7 @@ class SegmentStore:
         return store
 
     @classmethod
-    def open(cls, directory: str) -> "SegmentStore":
+    def open(cls, directory: str, io_backend: str = "") -> "SegmentStore":
         path = os.path.join(directory, cls.TABLE)
         with open(path) as f:
             table = json.load(f)
@@ -178,7 +211,7 @@ class SegmentStore:
                 "rerun) to continue with this one")
         records = [cls._leaf_record(r, version) for r in table["leaves"]]
         return cls(directory, records, table["seg_nbytes"],
-                   table.get("meta", {}))
+                   table.get("meta", {}), io_backend=io_backend)
 
     @staticmethod
     def _leaf_record(r: Dict, version: int) -> LeafRecord:
@@ -196,7 +229,8 @@ class SegmentStore:
                           tuple(r["shape"]), dtype, codec)
 
     @classmethod
-    def link_clone(cls, src_dir: str, dest_dir: str) -> "SegmentStore":
+    def link_clone(cls, src_dir: str, dest_dir: str,
+                   io_backend: str = "") -> "SegmentStore":
         """Open a zero-copy working clone of ``src_dir`` at ``dest_dir``:
         segment files are hardlinked (copied if the filesystem refuses) and
         every segment starts in copy-on-write mode, so writes through the
@@ -208,7 +242,8 @@ class SegmentStore:
                           os.path.join(dest_dir, cls._seg_name(seg)))
         shutil.copyfile(os.path.join(src_dir, cls.TABLE),
                         os.path.join(dest_dir, cls.TABLE))
-        store = cls(dest_dir, src.records, src.seg_nbytes, src.meta)
+        store = cls(dest_dir, src.records, src.seg_nbytes, src.meta,
+                    io_backend=io_backend)
         store._cow = [True] * store.num_segments
         return store
 
@@ -267,8 +302,128 @@ class SegmentStore:
                      for r in self._seg_leaves[seg])
 
     # ------------------------------------------------------------------
+    # read backend (readers.py)
+    # ------------------------------------------------------------------
+    def set_io_backend(self, io_backend: str) -> str:
+        """Re-select the read backend (probing again); returns the
+        *actual* backend name after fallback resolution."""
+        self.close_io()
+        self.io_requested, self.io_backend = resolve_io_backend(
+            io_backend, self.directory)
+        return self.io_backend
+
+    def _ensure_reader(self):
+        # double-checked under the lock: read_segment runs concurrently on
+        # the prefetcher thread and a consumer's sync-load fallback
+        r = self._reader
+        if r is None and self.io_backend != "mmap":
+            with self._io_lock:
+                r = self._reader
+                if r is None:
+                    r = self._reader = make_reader(self.io_backend,
+                                                   self.directory)
+        return r
+
+    def close_io(self):
+        """Release the reader's ring/pool.  Idempotent; a later read
+        lazily re-creates the reader, so close-then-reuse stays legal."""
+        with self._io_lock:
+            r, self._reader = self._reader, None
+        if r is not None:
+            r.close()
+
+    def io_stats(self) -> Dict[str, float]:
+        """Numeric reader counters (empty for mmap) + COW-break cost."""
+        r = self._reader
+        s = dict(r.stats()) if r is not None else {}
+        s["cow_breaks"] = self.cow_breaks
+        s["cow_break_s"] = self.cow_break_s
+        return s
+
+    def io_pool_bytes(self) -> int:
+        """Bytes held by the reader's staging pool — counted into the
+        engine's peak-residency accounting so raw backends can't hide
+        memory in their scratch buffers."""
+        r = self._reader
+        return r.pool_bytes() if r is not None else 0
+
+    def drop_cache(self):
+        """Evict every segment file from the page cache (fsync first so
+        dirty pages survive the drop).  The cold-cache benchmark mode
+        calls this between steps so reads measure flash, not RAM."""
+        for seg in range(self.num_segments):
+            fd = os.open(self.segment_path(seg), os.O_RDONLY)
+            try:
+                os.fsync(fd)
+                os.posix_fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
+            finally:
+                os.close(fd)
+
+    # ------------------------------------------------------------------
+    # copy=False view-lifetime guard ($REPRO_OFFLOAD_VIEW_GUARD=1)
+    # ------------------------------------------------------------------
+    def _track_views(self, seg: int, named: Dict[str, np.ndarray], mm):
+        """Register a finalizer on every returned array that aliases the
+        mmap, so writes to a segment with live zero-copy views can raise
+        instead of silently mutating (or orphaning, post-COW) the bytes
+        under the caller's feet."""
+        target = mm._mmap
+
+        def _dead(s=seg):
+            with self._io_lock:
+                n = self._live_views.get(s, 1) - 1
+                if n <= 0:
+                    self._live_views.pop(s, None)
+                else:
+                    self._live_views[s] = n
+
+        for arr in named.values():
+            base = arr if isinstance(arr, np.ndarray) else None
+            while base is not None and not isinstance(base, np.memmap):
+                base = getattr(base, "base", None)
+            if base is None or base._mmap is not target:
+                continue
+            with self._io_lock:
+                self._live_views[seg] = self._live_views.get(seg, 0) + 1
+            weakref.finalize(arr, _dead)
+
+    def _check_no_views(self, seg: int, op: str):
+        if not self._view_guard:
+            return
+        with self._io_lock:
+            n = self._live_views.get(seg, 0)
+        if n:
+            raise RuntimeError(
+                f"{op} on segment {seg} while {n} zero-copy view(s) from "
+                f"read_segment(copy=False) are still alive — drop them "
+                f"first (they would keep reading stale/replaced bytes)")
+
+    # ------------------------------------------------------------------
     # I/O
     # ------------------------------------------------------------------
+    def _decode_leaf(self, r: LeafRecord, buf: np.ndarray, encoded: bool,
+                     window: bool, dst: Optional[np.ndarray]):
+        """One leaf's storage bytes -> its requested representation.  The
+        single decode body every backend shares: mmap hands in page-cache
+        slices, the raw staged paths hand in pooled-buffer slices — same
+        codec calls either way, so backends are bit-identical by
+        construction."""
+        codec = get_codec(r.codec)
+        if encoded:
+            return codec.decode_encoded(buf, r.shape, r.dtype)
+        if dst is not None:
+            want = (codec.window_np_dtype(r.dtype) if window
+                    else np_dtype(r.dtype))
+            view = (codec.storage_view(buf, r.shape, r.dtype)
+                    if (isinstance(dst, np.ndarray)
+                        and dst.shape == tuple(r.shape)
+                        and dst.dtype == want) else None)
+            if view is not None:
+                np.copyto(dst, view)   # in-place; casts bf16->fp32
+                return dst
+        if window:
+            return codec.window(buf, r.shape, r.dtype)
+        return codec.decode(buf, r.shape, r.dtype, copy=True)
     def read_segment(self, seg: int, copy: bool = True,
                      encoded: bool = False,
                      window: bool = False,
@@ -306,42 +461,97 @@ class SegmentStore:
         of allocating a fresh one — the prefetcher recycles evicted window
         buffers through this path so steady-state streaming stops paying a
         segment-sized allocation per pull.  Mismatched (or None) entries
-        fall back to allocation; incompatible with ``copy=False``."""
+        fall back to allocation; incompatible with ``copy=False``.
+
+        The read transport is the store's configured backend
+        (``io_backend``); ``copy=False`` always uses the mmap path — a
+        raw read has no page-cache map to hand out views of."""
         leaves = self._seg_leaves[seg]
         if out is not None and (not copy or encoded
                                 or len(out) != len(leaves)):
             out = None
+        reader = self._ensure_reader() if copy else None
+        if reader is not None:
+            if reader.whole_segment:
+                return self._read_staged(reader, seg, leaves, encoded,
+                                         window, out)
+            return self._read_batched(reader, seg, leaves, encoded,
+                                      window, out)
         mm = np.memmap(self.segment_path(seg), dtype=np.uint8, mode="r")
         try:
             named = {}
             for i, r in enumerate(leaves):
                 buf = mm[r.offset:r.offset + r.nbytes]
-                codec = get_codec(r.codec)
-                if encoded:
-                    named[r.name] = codec.decode_encoded(buf, r.shape,
-                                                         r.dtype)
+                if not copy and not encoded and not window:
+                    named[r.name] = get_codec(r.codec).decode(
+                        buf, r.shape, r.dtype, copy=False)
                     continue
-                dst = out[i] if out is not None else None
-                if dst is not None:
-                    want = (codec.window_np_dtype(r.dtype) if window
-                            else np_dtype(r.dtype))
-                    view = (codec.storage_view(buf, r.shape, r.dtype)
-                            if (isinstance(dst, np.ndarray)
-                                and dst.shape == tuple(r.shape)
-                                and dst.dtype == want) else None)
-                    if view is not None:
-                        np.copyto(dst, view)   # in-place; casts bf16->fp32
-                        named[r.name] = dst
-                        continue
-                if window:
-                    named[r.name] = codec.window(buf, r.shape, r.dtype)
-                else:
-                    named[r.name] = codec.decode(buf, r.shape, r.dtype,
-                                                 copy=copy)
+                named[r.name] = self._decode_leaf(
+                    r, buf, encoded, window,
+                    out[i] if out is not None else None)
+            if not copy and self._view_guard:
+                self._track_views(seg, named, mm)
             return named
         finally:
             if copy or encoded or window:
                 mm._mmap.close()   # release the fd now, not at GC time
+
+    def _read_staged(self, reader, seg: int, leaves, encoded: bool,
+                     window: bool, out) -> Dict[str, np.ndarray]:
+        """Whole-segment raw read (O_DIRECT): one staged pull into an
+        aligned pooled buffer, then the shared per-leaf decode loop."""
+        buf, release = reader.read_segment_bytes(self.segment_path(seg),
+                                                 self.seg_nbytes[seg])
+        try:
+            return {r.name: self._decode_leaf(
+                        r, buf[r.offset:r.offset + r.nbytes], encoded,
+                        window, out[i] if out is not None else None)
+                    for i, r in enumerate(leaves)}
+        finally:
+            release()   # _decode_leaf never leaks views of a staged buffer
+
+    def _read_batched(self, reader, seg: int, leaves, encoded: bool,
+                      window: bool, out) -> Dict[str, np.ndarray]:
+        """Per-leaf raw read (pread/uring): flat-storage leaves are read
+        *straight into* their destination arrays (recycled ``out`` buffers
+        when compatible, fresh 4096-aligned ones otherwise — so buffers
+        recirculating through the prefetcher pool stay O_DIRECT-ready);
+        converting leaves (int8 packs, bf16->fp32 decodes) stage through a
+        small pooled chunk each.  The whole segment is one request batch —
+        under uring that is one SQE batch + one syscall."""
+        requests: List[Tuple[int, np.ndarray]] = []
+        results: List[Optional[np.ndarray]] = [None] * len(leaves)
+        staged: List[Tuple[LeafRecord, np.ndarray, int]] = []
+        try:
+            for i, r in enumerate(leaves):
+                codec = get_codec(r.codec)
+                want = (codec.window_np_dtype(r.dtype) if window
+                        else np_dtype(r.dtype))
+                if not encoded and codec.storage_np_dtype(r.dtype) == want:
+                    dst = out[i] if out is not None else None
+                    if (not isinstance(dst, np.ndarray)
+                            or dst.shape != tuple(r.shape)
+                            or dst.dtype != want
+                            or not dst.flags.c_contiguous):
+                        dst = aligned_empty(r.shape, want)
+                    requests.append(
+                        (r.offset,
+                         dst.reshape(-1) if dst.ndim == 0 else dst))
+                    results[i] = dst
+                else:
+                    chunk = reader.pool.get(r.nbytes)
+                    staged.append((r, chunk, i))
+                    requests.append((r.offset, chunk[:r.nbytes]))
+            reader.read_leaves(self.segment_path(seg), requests,
+                               staged=len(staged))
+            for r, chunk, i in staged:
+                results[i] = self._decode_leaf(
+                    r, chunk[:r.nbytes], encoded, window,
+                    out[i] if out is not None else None)
+        finally:
+            for _, chunk, _ in staged:
+                reader.pool.put(chunk)
+        return {r.name: results[i] for i, r in enumerate(leaves)}
 
     def write_segment(self, seg: int, named: Dict[str, np.ndarray],
                       sync: bool = True):
@@ -354,6 +564,7 @@ class SegmentStore:
         write-back path uses this so background writes are memcpy-cheap,
         then settles durability with one ``sync_segment`` per touched file
         at the flush/snapshot barrier."""
+        self._check_no_views(seg, "write_segment")
         self._break_cow(seg)
         mm = np.memmap(self.segment_path(seg), dtype=np.uint8, mode="r+")
         try:
@@ -384,9 +595,13 @@ class SegmentStore:
         the whole copy).  Identity-codec leaves encode as zero-copy views,
         making the background write almost pure syscall time.  Reads via
         mmap see these bytes immediately (one unified page cache)."""
+        self._check_no_views(seg, "pwrite_segment")
         self._break_cow(seg)
         fd = os.open(self.segment_path(seg), os.O_WRONLY)
         try:
+            # leaves are written in offset order — tell the kernel so it
+            # can batch the page-cache write-back sequentially
+            os.posix_fadvise(fd, 0, 0, os.POSIX_FADV_SEQUENTIAL)
             for r, enc in self._encoded_leaves(seg, named):
                 mv, off = memoryview(enc), r.offset
                 while len(mv):                 # pwrite may write short
@@ -399,21 +614,32 @@ class SegmentStore:
 
     def sync_segment(self, seg: int):
         """fsync one segment file — settles the durability a
-        ``write_segment(..., sync=False)``/``pwrite_segment`` deferred."""
+        ``write_segment(..., sync=False)``/``pwrite_segment`` deferred.
+
+        For write-once scratch stores (grad scratch, activation spill) the
+        now-durable pages are also dropped from the page cache: nothing
+        reads them again before they are overwritten, and leaving them
+        resident evicts the streamed base's segments instead."""
         fd = os.open(self.segment_path(seg), os.O_RDONLY)
         try:
             os.fsync(fd)
+            if self._scratch:
+                os.posix_fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
         finally:
             os.close(fd)
 
     def _break_cow(self, seg: int):
         if not self._cow[seg]:
             return
+        self._check_no_views(seg, "_break_cow")
+        t0 = time.perf_counter()
         path = self.segment_path(seg)
         tmp = path + ".cow"
-        shutil.copyfile(path, tmp)   # fresh inode; snapshot keeps the old one
+        _copy_file(path, tmp)   # fresh inode; snapshot keeps the old one
         os.replace(tmp, path)
         self._cow[seg] = False
+        self.cow_breaks += 1
+        self.cow_break_s += time.perf_counter() - t0
 
     def snapshot(self, dest_dir: str):
         """Zero-copy snapshot: hardlink every segment file + mapping table
@@ -427,6 +653,34 @@ class SegmentStore:
                         os.path.join(dest_dir, self.TABLE))
         self._cow = [True] * self.num_segments
         return dest_dir
+
+
+def _copy_file(src: str, dest: str):
+    """File copy via ``os.copy_file_range`` — the kernel moves the bytes
+    without round-tripping them through userspace, and reflink-capable
+    filesystems (btrfs/xfs) satisfy it with a metadata-only clone — with
+    a ``shutil.copyfile`` fallback where the syscall is unsupported
+    (pre-4.5 kernels, some network/overlay filesystems)."""
+    try:
+        src_fd = os.open(src, os.O_RDONLY)
+        try:
+            dst_fd = os.open(dest, os.O_WRONLY | os.O_CREAT | os.O_TRUNC,
+                             0o644)
+            try:
+                left = os.fstat(src_fd).st_size
+                off = 0
+                while left > 0:
+                    n = os.copy_file_range(src_fd, dst_fd, left, off, off)
+                    if n == 0:
+                        raise OSError("copy_file_range returned 0")
+                    off += n
+                    left -= n
+            finally:
+                os.close(dst_fd)
+        finally:
+            os.close(src_fd)
+    except (OSError, AttributeError):
+        shutil.copyfile(src, dest)
 
 
 def _link_or_copy(src: str, dest: str):

@@ -75,7 +75,7 @@ class OffloadedTrainState:
 
     def __init__(self, store: SegmentStore, *, treedef, names: List[str],
                  max_resident: int = 2, prefetch: bool = True,
-                 async_writeback: bool = True):
+                 async_writeback: bool = True, io_backend: str = ""):
         self.store = store
         # frozen layout (PEFT base): p-segments only, no m/v, and the window
         # is read-only — the base is never updated, so nothing is ever
@@ -90,7 +90,8 @@ class OffloadedTrainState:
                                     prefetch=prefetch,
                                     read_only=self.frozen,
                                     encoded=bool(self.base_quant),
-                                    async_writeback=async_writeback)
+                                    async_writeback=async_writeback,
+                                    io_backend=io_backend)
         self.treedef = treedef
         self.names = names
         self.count = int(store.meta.get("count", 0))
@@ -107,8 +108,8 @@ class OffloadedTrainState:
     @classmethod
     def create(cls, state: Dict[str, Any], directory: str, num_segments: int,
                *, max_resident: int = 2, prefetch: bool = True,
-               moment_dtype: str = "float32",
-               async_writeback: bool = True) -> "OffloadedTrainState":
+               moment_dtype: str = "float32", async_writeback: bool = True,
+               io_backend: str = "") -> "OffloadedTrainState":
         """Page an in-memory ``init_state`` tree {params, opt, step} out to
         ``directory``.  Each group is one tensor's (p, m, v) triple so the
         planner never splits a triple across segments."""
@@ -126,7 +127,7 @@ class OffloadedTrainState:
                 "step": int(state["step"]), "kind": "offload_state_v1",
                 "moment_dtype": moment_dtype}
         store = SegmentStore.create(directory, groups, num_segments,
-                                    meta=meta)
+                                    meta=meta, io_backend=io_backend)
         return cls(store, treedef=jax.tree.structure(params),
                    names=[n for n, _ in named_p],
                    max_resident=max_resident, prefetch=prefetch,
@@ -134,11 +135,11 @@ class OffloadedTrainState:
 
     @classmethod
     def open(cls, directory: str, like_params, *, max_resident: int = 2,
-             prefetch: bool = True,
-             async_writeback: bool = True) -> "OffloadedTrainState":
+             prefetch: bool = True, async_writeback: bool = True,
+             io_backend: str = "") -> "OffloadedTrainState":
         """Reattach to existing segment files; ``like_params`` supplies the
         pytree structure (values ignored)."""
-        store = SegmentStore.open(directory)
+        store = SegmentStore.open(directory, io_backend=io_backend)
         return cls(store, treedef=jax.tree.structure(like_params),
                    names=[n for n, _ in flatten_names(like_params)],
                    max_resident=max_resident, prefetch=prefetch,
@@ -147,11 +148,12 @@ class OffloadedTrainState:
     @classmethod
     def from_checkpoint(cls, ckpt_dir: str, work_dir: str, like_params, *,
                         max_resident: int = 2, prefetch: bool = True,
-                        async_writeback: bool = True
+                        async_writeback: bool = True, io_backend: str = ""
                         ) -> "OffloadedTrainState":
         """Zero-copy restore: hardlink the checkpoint's segment files into
         ``work_dir`` (copy-on-write), no byte of state staged through RAM."""
-        store = SegmentStore.link_clone(ckpt_dir, work_dir)
+        store = SegmentStore.link_clone(ckpt_dir, work_dir,
+                                        io_backend=io_backend)
         return cls(store, treedef=jax.tree.structure(like_params),
                    names=[n for n, _ in flatten_names(like_params)],
                    max_resident=max_resident, prefetch=prefetch,
@@ -303,12 +305,12 @@ class LayerStreamedState(OffloadedTrainState):
 
     def __init__(self, store: SegmentStore, *, like_params,
                  max_resident: int = 2, prefetch: bool = True,
-                 async_writeback: bool = True):
+                 async_writeback: bool = True, io_backend: str = ""):
         super().__init__(
             store, treedef=jax.tree.structure(like_params),
             names=[n for n, _ in flatten_names(like_params)],
             max_resident=max_resident, prefetch=prefetch,
-            async_writeback=async_writeback)
+            async_writeback=async_writeback, io_backend=io_backend)
         assert store.meta.get("layout") == LAYER_LAYOUT, store.meta
         self.n_layers = int(store.meta["n_layers"])
         blocks = like_params["blocks"]
@@ -351,8 +353,8 @@ class LayerStreamedState(OffloadedTrainState):
     @classmethod
     def create(cls, state: Dict[str, Any], directory: str, *,
                max_resident: int = 2, prefetch: bool = True,
-               moment_dtype: str = "float32",
-               async_writeback: bool = True) -> "LayerStreamedState":
+               moment_dtype: str = "float32", async_writeback: bool = True,
+               io_backend: str = "") -> "LayerStreamedState":
         """Page a stacked ``init_state`` tree out layer-aligned: the stacked
         block leaves are split on their leading ``layers`` dim into one group
         per block, plus a trailing head group."""
@@ -380,14 +382,16 @@ class LayerStreamedState(OffloadedTrainState):
                 "layout": LAYER_LAYOUT, "n_layers": n_layers,
                 "moment_dtype": moment_dtype}
         store = SegmentStore.create(directory, groups, len(groups),
-                                    meta=meta, group_labels=labels)
+                                    meta=meta, group_labels=labels,
+                                    io_backend=io_backend)
         return cls(store, like_params=params, max_resident=max_resident,
                    prefetch=prefetch, async_writeback=async_writeback)
 
     @classmethod
     def create_frozen(cls, params, directory: str, *, max_resident: int = 2,
                       prefetch: bool = True, base_tag: str = "",
-                      quant: str = "") -> "LayerStreamedState":
+                      quant: str = "",
+                      io_backend: str = "") -> "LayerStreamedState":
         """Page a frozen base out param-only (no m/v segments): one p-segment
         per block plus the head segment, read-only through fwd/bwd.  Resident
         bytes per segment drop to ~1/3 of the Full-FT layout.
@@ -419,14 +423,15 @@ class LayerStreamedState(OffloadedTrainState):
                 "n_layers": n_layers, "frozen": True, "base_tag": base_tag,
                 "base_quant": quant}
         store = SegmentStore.create(directory, groups, len(groups),
-                                    meta=meta, group_labels=labels)
+                                    meta=meta, group_labels=labels,
+                                    io_backend=io_backend)
         return cls(store, like_params=params, max_resident=max_resident,
                    prefetch=prefetch)
 
     @classmethod
     def open_frozen_if_matching(cls, directory: str, like_params, *,
                                 base_tag: str, max_resident: int = 2,
-                                prefetch: bool = True
+                                prefetch: bool = True, io_backend: str = ""
                                 ) -> Optional["LayerStreamedState"]:
         """Reattach to an existing frozen store iff it was created from the
         same base (``base_tag`` match) — the segments are read-only and
@@ -436,7 +441,8 @@ class LayerStreamedState(OffloadedTrainState):
             return None
         try:
             st = cls.open(directory, like_params,
-                          max_resident=max_resident, prefetch=prefetch)
+                          max_resident=max_resident, prefetch=prefetch,
+                          io_backend=io_backend)
         except Exception:       # corrupt/foreign table -> lay out fresh
             return None
         if (st.frozen and base_tag
@@ -447,18 +453,20 @@ class LayerStreamedState(OffloadedTrainState):
 
     @classmethod
     def open(cls, directory: str, like_params, *, max_resident: int = 2,
-             prefetch: bool = True,
-             async_writeback: bool = True) -> "LayerStreamedState":
-        return cls(SegmentStore.open(directory), like_params=like_params,
+             prefetch: bool = True, async_writeback: bool = True,
+             io_backend: str = "") -> "LayerStreamedState":
+        return cls(SegmentStore.open(directory, io_backend=io_backend),
+                   like_params=like_params,
                    max_resident=max_resident, prefetch=prefetch,
                    async_writeback=async_writeback)
 
     @classmethod
     def from_checkpoint(cls, ckpt_dir: str, work_dir: str, like_params, *,
                         max_resident: int = 2, prefetch: bool = True,
-                        async_writeback: bool = True
+                        async_writeback: bool = True, io_backend: str = ""
                         ) -> "LayerStreamedState":
-        store = SegmentStore.link_clone(ckpt_dir, work_dir)
+        store = SegmentStore.link_clone(ckpt_dir, work_dir,
+                                        io_backend=io_backend)
         return cls(store, like_params=like_params,
                    max_resident=max_resident, prefetch=prefetch,
                    async_writeback=async_writeback)

@@ -27,6 +27,13 @@ and the head device tree is staged **once per run** — the frozen base
 never changes, so re-converting embed/ln_f every step was pure
 host->device traffic.  ``staging=False`` keeps the fully synchronous walk
 (the bench's sync-vs-staged comparison row).
+
+The flash side of the walk rides the store's pluggable read backend
+(``io_backend`` on the ``LayerStreamedState`` constructors, or
+``$REPRO_OFFLOAD_IO``): with ``pread``/``uring`` each block pull reads
+straight into the window's recycled buffers instead of faulting through
+the page cache — ``stats()`` carries the backend name (``io_backend``)
+and the reader's ``io_*`` counters alongside the engine's.
 """
 from __future__ import annotations
 
@@ -165,6 +172,9 @@ class StreamedBase:
         # pressure in tests/test_paged_serving.py)
         s["head_reads"] = self.lstate.engine.seg_misses.get(
             self.lstate.head_segment, 0)
+        # the one non-numeric stat: which transport served the walk (the
+        # serving bench prints it next to the per-backend read rows)
+        s["io_backend"] = self.lstate.engine.store.io_backend
         return s
 
     def close(self):

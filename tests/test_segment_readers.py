@@ -1,0 +1,333 @@
+"""Pluggable raw segment-read backends (offload/readers.py).
+
+Covers: per-backend bit-identity against the mmap oracle across every
+codec and read mode (decoded / window / encoded / out=readinto), the
+aligned buffer pool and its O_DIRECT alignment contract, probe-gated
+fallback resolution (O_DIRECT-unsupported filesystem, absent io_uring),
+EOF zero-fill parity with sparse mmap holes, the ``REPRO_OFFLOAD_IO``
+env override, the ``copy=False`` view-lifetime debug guard, the
+``copy_file_range`` COW break + ``cow_break_s`` stat, and per-backend
+async-vs-sync loss equality on the streamed trainer.
+"""
+import gc
+import os
+
+import numpy as np
+import pytest
+
+from repro.offload import readers
+from repro.offload.readers import (ALIGN, AlignedBufferPool, aligned_empty,
+                                   backend_available, is_aligned,
+                                   resolve_io_backend)
+from repro.offload.segments import SegmentStore, _copy_file
+
+RAW_BACKENDS = ("pread", "direct", "uring")
+
+
+def _need(backend, directory):
+    if not backend_available(backend, str(directory)):
+        pytest.skip(f"{backend} unsupported on this kernel/filesystem")
+
+
+def _codec_groups(seed=0):
+    """One group exercising every codec, including a 0-d scalar leaf and a
+    bf16 leaf (flat window reads) — the mix that tells flat-into-dst reads
+    apart from staged decodes."""
+    rng = np.random.RandomState(seed)
+    return [[("p.w", rng.randn(6, 5).astype(np.float32)),
+             ("p.scalar", np.float32(rng.randn())),
+             ("m.w", rng.randn(6, 5).astype(np.float32), "bf16"),
+             ("q.w", rng.randn(8, 4).astype(np.float32), "int8"),
+             ("a.w", rng.randn(3, 7).astype(np.float32), "act_int8")],
+            [("p2.w", rng.randn(16, 3).astype(np.float32)),
+             ("m2.w", rng.randn(16, 3).astype(np.float32), "bf16")]]
+
+
+def _assert_named_equal(got, want, ctx=""):
+    assert set(got) == set(want), ctx
+    for name in want:
+        g, w = got[name], want[name]
+        if hasattr(w, "codes"):                     # QuantLeaf
+            np.testing.assert_array_equal(g.codes, w.codes, err_msg=ctx)
+            np.testing.assert_array_equal(g.scales, w.scales, err_msg=ctx)
+        else:
+            assert g.dtype == w.dtype, (ctx, name, g.dtype, w.dtype)
+            np.testing.assert_array_equal(g, w, err_msg=f"{ctx}:{name}")
+
+
+# ---------------------------------------------------------------------------
+# bit-identity vs the mmap oracle, all codecs x all read modes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", RAW_BACKENDS)
+def test_backend_bit_identical_to_mmap(backend, tmp_path):
+    _need(backend, tmp_path)
+    store = SegmentStore.create(str(tmp_path / "s"), _codec_groups(), 2)
+    oracle = [{mode: store.read_segment(seg, **kw)
+               for mode, kw in (("decoded", {}), ("window", {"window": True}),
+                                ("encoded", {"encoded": True}))}
+              for seg in range(2)]
+    assert store.io_backend == "mmap"
+    assert store.set_io_backend(backend) == backend
+    for seg in range(2):
+        for mode, kw in (("decoded", {}), ("window", {"window": True}),
+                         ("encoded", {"encoded": True})):
+            _assert_named_equal(store.read_segment(seg, **kw),
+                                oracle[seg][mode], f"{backend}/{mode}/{seg}")
+    s = store.io_stats()
+    assert s["io_bytes_read"] > 0
+    assert s["io_fallbacks"] == 0, f"{backend} silently degraded: {s}"
+    store.close_io()
+
+
+@pytest.mark.parametrize("backend", RAW_BACKENDS)
+def test_backend_reads_after_write(backend, tmp_path):
+    """Raw reads observe bytes written through the (mmap/pwrite) write
+    path — one unified view of the segment file."""
+    _need(backend, tmp_path)
+    store = SegmentStore.create(str(tmp_path / "s"), _codec_groups(), 2,
+                                io_backend=backend)
+    fresh = {"p.w": np.full((6, 5), 3.25, np.float32)}
+    store.write_segment(0, fresh)
+    assert np.array_equal(store.read_segment(0)["p.w"], fresh["p.w"])
+    store.pwrite_segment(0, {"p.w": np.full((6, 5), -1.5, np.float32)})
+    store.sync_segment(0)
+    assert (store.read_segment(0)["p.w"] == -1.5).all()
+    store.close_io()
+
+
+@pytest.mark.parametrize("backend", RAW_BACKENDS)
+def test_sparse_scratch_reads_zeros(backend, tmp_path):
+    """write=False stores are sparse; a raw read past the written extent
+    must zero-fill exactly like an mmap hole."""
+    _need(backend, tmp_path)
+    store = SegmentStore.create(str(tmp_path / "s"), _codec_groups(), 2,
+                                write=False, io_backend=backend)
+    for seg in range(2):
+        for arr in store.read_segment(seg).values():
+            assert not np.asarray(arr).any()
+    store.close_io()
+
+
+# ---------------------------------------------------------------------------
+# out= readinto path: reuse, alignment, mismatch fallback
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", RAW_BACKENDS)
+def test_out_buffers_filled_in_place(backend, tmp_path):
+    _need(backend, tmp_path)
+    store = SegmentStore.create(str(tmp_path / "s"), _codec_groups(), 2,
+                                io_backend=backend)
+    want = SegmentStore.open(str(tmp_path / "s")).read_segment(0,
+                                                               window=True)
+    leaves = [store.record(n) for n in store.segment_names(0)]
+    outs = [aligned_empty(r.shape, w.dtype)
+            for r, w in zip(leaves, (want[r.name] for r in leaves))]
+    got = store.read_segment(0, window=True, out=outs)
+    from repro.offload.codecs import get_codec
+    for i, r in enumerate(leaves):
+        if get_codec(r.codec).storage_np_dtype(r.dtype) is not None:
+            # flat-storage leaves (identity, bf16 windows) fill in place;
+            # packed int8 leaves allocate — same contract as the mmap path
+            assert got[r.name] is outs[i], f"leaf {r.name} was not read into"
+        np.testing.assert_array_equal(got[r.name], want[r.name])
+    store.close_io()
+
+
+def test_out_mismatch_falls_back_to_allocation(tmp_path):
+    store = SegmentStore.create(str(tmp_path / "s"), _codec_groups(), 2,
+                                io_backend="pread")
+    want = store.read_segment(0)
+    n = len(store.segment_names(0))
+    # non-contiguous (flat read path needs contiguity), wrong shape, wrong
+    # dtype, and None entries must all be ignored (allocation fallback),
+    # never corrupted or crashed into
+    bad = [np.empty((6, 10), np.float32)[:, ::2],    # p.w: non-contiguous
+           np.empty((2, 2), np.float32),             # p.scalar: wrong shape
+           np.empty((6, 5), np.float64)] + [None] * (n - 3)  # m.w: dtype
+    got = store.read_segment(0, out=bad)
+    _assert_named_equal(got, want, "mismatched out")
+    for b in bad[:3]:
+        assert all(got[name] is not b for name in got)
+    store.close_io()
+
+
+def test_aligned_pool_contract():
+    assert is_aligned(aligned_empty((3, 5), np.float32))
+    assert aligned_empty((), np.float32).shape == ()
+    pool = AlignedBufferPool(max_buffers=2)
+    a = pool.get(100)
+    assert a.nbytes == ALIGN and is_aligned(a)     # capacity class rounds up
+    assert pool.pool_bytes() == ALIGN              # lent counts
+    pool.put(a)
+    b = pool.get(50)
+    assert b is a and pool.reuses == 1             # size-classed reuse
+    pool.put(b)
+    for buf in [pool.get(ALIGN) for _ in range(4)]:
+        pool.put(buf)                              # bound: extras dropped
+    assert pool.pool_bytes() <= 2 * ALIGN
+
+
+# ---------------------------------------------------------------------------
+# resolution: explicit > env > mmap; probe-gated fallbacks
+# ---------------------------------------------------------------------------
+def test_env_var_override(tmp_path, monkeypatch):
+    store = SegmentStore.create(str(tmp_path / "s"), _codec_groups(), 2)
+    monkeypatch.setenv(readers.ENV_VAR, "pread")
+    re = SegmentStore.open(str(tmp_path / "s"))
+    assert (re.io_requested, re.io_backend) == ("pread", "pread")
+    # explicit argument wins over the env var
+    assert SegmentStore.open(str(tmp_path / "s"),
+                             io_backend="mmap").io_backend == "mmap"
+    re.close_io()
+
+
+def test_unknown_backend_rejected(tmp_path):
+    with pytest.raises(ValueError, match="unknown offload I/O backend"):
+        resolve_io_backend("sendfile", str(tmp_path))
+
+
+def test_direct_unsupported_falls_back_to_pread(tmp_path, monkeypatch):
+    monkeypatch.setattr(readers, "direct_supported", lambda d: False)
+    store = SegmentStore.create(str(tmp_path / "s"), _codec_groups(), 2,
+                                io_backend="direct")
+    assert (store.io_requested, store.io_backend) == ("direct", "pread")
+    _assert_named_equal(store.read_segment(0),
+                        SegmentStore.open(store.directory).read_segment(0))
+    store.close_io()
+
+
+def test_uring_probe_absent_falls_back_to_pread(tmp_path, monkeypatch):
+    monkeypatch.setattr(readers, "uring_supported", lambda: False)
+    store = SegmentStore.create(str(tmp_path / "s"), _codec_groups(), 2,
+                                io_backend="uring")
+    assert (store.io_requested, store.io_backend) == ("uring", "pread")
+    _assert_named_equal(store.read_segment(0),
+                        SegmentStore.open(store.directory).read_segment(0))
+    store.close_io()
+
+
+def test_auto_probes_to_some_raw_backend(tmp_path):
+    req, actual = resolve_io_backend("auto", str(tmp_path))
+    assert req == "auto" and actual in ("uring", "direct", "pread")
+
+
+def test_copy_false_always_uses_mmap(tmp_path):
+    """Zero-copy views only exist on the page-cache map; a raw backend
+    must not be consulted for copy=False."""
+    store = SegmentStore.create(str(tmp_path / "s"), _codec_groups(), 2,
+                                io_backend="pread")
+    views = store.read_segment(0, copy=False)
+    assert any(getattr(v, "base", None) is not None or
+               isinstance(v, np.memmap) for v in views.values())
+    assert store.io_stats().get("io_bytes_read", 0) == 0
+    del views
+    store.close_io()
+
+
+# ---------------------------------------------------------------------------
+# satellites: view guard, COW break, engine integration
+# ---------------------------------------------------------------------------
+def test_view_guard_blocks_write_over_live_views(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_OFFLOAD_VIEW_GUARD", "1")
+    store = SegmentStore.create(str(tmp_path / "s"), _codec_groups(), 2)
+    views = store.read_segment(0, copy=False)
+    fresh = {"p.w": np.zeros((6, 5), np.float32)}
+    with pytest.raises(RuntimeError, match="zero-copy view"):
+        store.write_segment(0, fresh)
+    store.write_segment(1, {"p2.w": np.zeros((16, 3), np.float32)})  # other seg ok
+    del views
+    gc.collect()
+    store.write_segment(0, fresh)              # guard cleared with the views
+
+
+def test_view_guard_blocks_cow_break(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_OFFLOAD_VIEW_GUARD", "1")
+    store = SegmentStore.create(str(tmp_path / "s"), _codec_groups(), 2)
+    store.snapshot(str(tmp_path / "snap"))
+    views = store.read_segment(0, copy=False)
+    with pytest.raises(RuntimeError, match="zero-copy view"):
+        store.write_segment(0, {"p.w": np.zeros((6, 5), np.float32)})
+    del views
+    gc.collect()
+
+
+def test_cow_break_stat_and_isolation(tmp_path):
+    store = SegmentStore.create(str(tmp_path / "s"), _codec_groups(), 2)
+    before = store.read_segment(0)["p.w"].copy()
+    store.snapshot(str(tmp_path / "snap"))
+    assert store.cow_breaks == 0
+    store.write_segment(0, {"p.w": np.full((6, 5), 9.0, np.float32)})
+    assert store.cow_breaks == 1 and store.cow_break_s > 0
+    assert store.io_stats()["cow_breaks"] == 1
+    snap = SegmentStore.open(str(tmp_path / "snap"))
+    np.testing.assert_array_equal(snap.read_segment(0)["p.w"], before)
+
+
+def test_copy_file_matches_source(tmp_path):
+    src, dst = str(tmp_path / "a"), str(tmp_path / "b")
+    payload = os.urandom(ALIGN * 3 + 17)       # not a block multiple
+    with open(src, "wb") as f:
+        f.write(payload)
+    _copy_file(src, dst)
+    with open(dst, "rb") as f:
+        assert f.read() == payload
+
+
+@pytest.mark.parametrize("backend", RAW_BACKENDS)
+def test_engine_accounts_reader_pool(backend, tmp_path):
+    _need(backend, tmp_path)
+    from repro.offload.engine import OffloadEngine
+    store = SegmentStore.create(str(tmp_path / "s"), _codec_groups(), 2,
+                                io_backend=backend)
+    eng = OffloadEngine(store, max_resident=1, prefetch=True)
+    eng.acquire(0)
+    eng.prefetch(1)
+    eng.acquire(1)
+    s = eng.stats()
+    eng.close()
+    assert s["io_bytes_read"] > 0              # reader counters surfaced
+    assert "io_pool_bytes" in s
+    assert s["cow_breaks"] == 0
+
+
+def test_drop_cache_runs(tmp_path):
+    store = SegmentStore.create(str(tmp_path / "s"), _codec_groups(), 2,
+                                io_backend="pread")
+    want = store.read_segment(0)
+    store.drop_cache()
+    _assert_named_equal(store.read_segment(0), want, "post-drop")
+    store.close_io()
+
+
+# ---------------------------------------------------------------------------
+# tentpole acceptance: async-vs-sync loss equality under every backend
+# ---------------------------------------------------------------------------
+def test_streamed_loss_identical_under_every_backend(tmp_path):
+    """The read transport must never touch numerics: streamed training
+    losses are bit-equal across mmap/pread/direct/uring (where probed) and
+    across the sync vs async pipeline."""
+    from repro import configs
+    from repro.config import TrainConfig
+    from repro.launch.train import train_loop
+
+    cfg = configs.get_smoke("gpt2_124m")
+    base = dict(global_batch=2, seq_len=16, learning_rate=1e-4,
+                schedule="constant", warmup_steps=1,
+                compute_dtype="float32", total_steps=3,
+                offload_stream_params=True)
+
+    def losses(**kw):
+        _, obs = train_loop(cfg, TrainConfig(**base, **kw),
+                            out_dir=None, print_fn=None)
+        return [r["loss"] for r in obs.rows]
+
+    oracle = losses(offload_io="mmap", offload_async_writeback=False,
+                    offload_staging=False)
+    np.testing.assert_array_equal(
+        oracle, losses(offload_io="pread", offload_async_writeback=False,
+                       offload_staging=False))
+    for backend in ("mmap",) + RAW_BACKENDS:
+        if not backend_available(backend, str(tmp_path)):
+            continue
+        np.testing.assert_array_equal(
+            oracle, losses(offload_io=backend),
+            err_msg=f"async pipeline under io={backend} diverged")

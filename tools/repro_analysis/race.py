@@ -419,8 +419,73 @@ def scenario_act_store_churn(seed: int, tmpdir: str) -> None:
     store.close()
 
 
+# ---------------------------------------------------------------------------
+# scenario: raw reader backends under the Prefetcher (shared SegmentReader)
+# ---------------------------------------------------------------------------
+
+def scenario_reader_backends(seed: int, tmpdir: str) -> None:
+    """Raw read transports (offload/readers.py) under concurrent pulls:
+    the engine's Prefetcher reader thread and the owner's sync loads — plus
+    a direct ``store.read_segment`` consumer — share one ``SegmentReader``
+    (lock-guarded aligned pool; lock-guarded uring ring).  Every pull must
+    be bit-identical to the creation bytes: a recycled staging chunk
+    leaking across leaves, a lost short-read tail, or a CQE matched to the
+    wrong request all show up as stale/zeroed leaves.  ``drop_cache``
+    interleaves so some reads really hit the block layer mid-schedule."""
+    from repro.offload.readers import backend_available
+
+    backends = [b for b in ("pread", "uring", "direct")
+                if backend_available(b, tmpdir)]
+    backend = backends[seed % len(backends)]
+    sched = Schedule(seed)
+    store = replays.make_store(os.path.join(tmpdir, "s"),
+                               n_segments=N_SEGMENTS, mixed=True, seed=seed)
+    assert store.set_io_backend(backend) == backend
+    window = {s: store.read_segment(s, copy=True, window=True)
+              for s in range(N_SEGMENTS)}
+    decoded = {s: store.read_segment(s, copy=True)
+               for s in range(N_SEGMENTS)}
+    with fuzzed_primitives(sched):
+        eng = OffloadEngine(store, max_resident=2, prefetch=True)
+    rng = random.Random(seed * 7919 + 11)
+    mono = MonotoneStats(MONOTONE_KEYS + ("io_bytes_read",
+                                          "io_batched_reads"))
+    for op_i in range(26):
+        seg = rng.randrange(N_SEGMENTS)
+        r = rng.random()
+        if r < 0.35:                           # window pull via the engine
+            data = eng.acquire(seg)
+            for name in data:
+                assert np.array_equal(data[name], window[seg][name]), (
+                    f"seed {seed} op {op_i}: io={backend} acquire({seg})"
+                    f"[{name}] returned non-identical bytes")
+        elif r < 0.55:                         # overlap: hint the reader
+            eng.prefetch((seg + 1) % N_SEGMENTS)
+        elif r < 0.7:                          # second consumer, same reader
+            got = store.read_segment(seg)
+            for name in got:
+                assert np.array_equal(got[name], decoded[seg][name]), (
+                    f"seed {seed} op {op_i}: io={backend} read_segment"
+                    f"({seg})[{name}] returned non-identical bytes")
+        elif r < 0.8:
+            eng.release(seg)
+        elif r < 0.9:                          # force real block-layer reads
+            store.drop_cache()
+        else:
+            _check_pool_accounting(eng, f"(seed {seed} op {op_i})")
+        mono.sample(eng.stats(), f"(seed {seed} op {op_i})")
+        sched.pause("reader.op")
+    stats = eng.stats()
+    eng.close()
+    _check_pool_accounting(eng, f"(seed {seed} final)")
+    assert stats["io_fallbacks"] == 0, (
+        f"seed {seed}: io={backend} silently degraded mid-run: {stats}")
+    assert store.io_backend == backend
+
+
 SCENARIOS: Dict[str, Callable[[int, str], None]] = {
     "engine_mixed": scenario_engine_mixed,
+    "reader_backends": scenario_reader_backends,
     "writer_churn": scenario_writer_churn,
     "serve_walk": scenario_serve_walk,
     "close_inflight_stage": scenario_close_inflight_stage,
